@@ -1,0 +1,21 @@
+"""Shared benchmark plumbing: CSV emission per the harness contract."""
+from __future__ import annotations
+
+import time
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0
+
+    @property
+    def us(self) -> float:
+        return self.dt * 1e6

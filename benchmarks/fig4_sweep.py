@@ -1,0 +1,37 @@
+"""Paper Fig 4: power error across a −10 A → +10 A load sweep.
+
+Per step: 128 k samples (paper protocol), reporting mean/min/max error;
+all errors must sit inside the Table I worst-case envelope.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ConstantLoad, Joules, PowerSensor, Watt, make_device
+from repro.core.calibration import calibrate
+from repro.core.sensors import MODULE_CATALOG
+
+from .common import emit, timer
+
+
+def run(samples_per_step: int = 16_000) -> None:
+    module = "slot-10a-12v"
+    spec = MODULE_CATALOG[module]
+    dev = make_device([module], ConstantLoad(12.0, 0.0), seed=4)
+    ps = PowerSensor(dev)
+    calibrate(ps, {0: 12.0}, n_samples=8000)
+    worst = 0.0
+    with timer() as t:
+        for amps in np.arange(-10.0, 10.5, 1.0):
+            dev.firmware.dut.loads[0] = ConstantLoad(12.0, float(amps))
+            a = ps.read()
+            ps.run_for(samples_per_step / 20_000.0)
+            b = ps.read()
+            err = Watt(a, b) - 12.0 * amps
+            worst = max(worst, abs(err))
+    emit(
+        "fig4/sweep",
+        t.us / 21,
+        f"21 steps, worst|err|={worst:.3f}W envelope=±{spec.power_error:.2f}W "
+        f"inside={worst < spec.power_error}",
+    )

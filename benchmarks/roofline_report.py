@@ -1,0 +1,76 @@
+"""§Roofline: per (arch × shape) terms from the dry-run cache.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and
+emits one CSV row per cell: the three terms, the bottleneck, MODEL_FLOPS/
+HLO_FLOPs and the roofline fraction.  Also regenerates the markdown table
+used by EXPERIMENTS.md (experiments/roofline_table.md).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+DRYRUN_DIR = "experiments/dryrun"
+
+
+def load_cells(tag: str | None = None, mesh: str | None = "pod16x16") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if mesh and d.get("mesh") != mesh:
+            continue
+        if tag and d.get("tag") != tag:
+            continue
+        cells.append(d)
+    return cells
+
+
+def markdown_table(cells: list[dict]) -> str:
+    lines = [
+        "| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | bottleneck | "
+        "MODEL/HLO flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for d in cells:
+        if d.get("status") != "ok" or "roofline" not in d:
+            lines.append(f"| {d.get('arch')} | {d.get('shape')} | — | — | — | "
+                         f"{d.get('status')} | — | — |")
+            continue
+        r = d["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:.2f} | "
+            f"{r['t_memory_s']*1e3:.2f} | {r['t_collective_s']*1e3:.2f} | "
+            f"**{r['bottleneck']}** | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+def run() -> None:
+    cells = load_cells(tag="baseline")
+    ok = 0
+    for d in cells:
+        if d.get("status") != "ok":
+            emit(f"roofline/{d.get('arch')}__{d.get('shape')}", 0.0,
+                 f"status={d.get('status')}")
+            continue
+        if "roofline" not in d:
+            continue
+        r = d["roofline"]
+        ok += 1
+        emit(
+            f"roofline/{r['arch']}__{r['shape']}",
+            d.get("compile_s", 0.0) * 1e6,
+            f"tc={r['t_compute_s']*1e3:.2f}ms tm={r['t_memory_s']*1e3:.2f}ms "
+            f"tn={r['t_collective_s']*1e3:.2f}ms bn={r['bottleneck']} "
+            f"useful={r['useful_flops_ratio']:.2f} frac={r['roofline_fraction']:.3f}",
+        )
+    if cells:
+        os.makedirs("experiments", exist_ok=True)
+        with open("experiments/roofline_table.md", "w") as f:
+            f.write(markdown_table(cells) + "\n")
+    emit("roofline/summary", 0.0, f"cells={len(cells)} with_roofline={ok}")

@@ -1,0 +1,54 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract).
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run table1 fig8
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from . import (
+    fig4_sweep,
+    fig5_step,
+    fig7_compare,
+    fig8_tuning,
+    fig12_storage,
+    roofline_report,
+    stability,
+    table1_accuracy,
+    table2_sampling,
+)
+
+BENCHES = {
+    "table1": table1_accuracy.run,
+    "table2": table2_sampling.run,
+    "fig4": fig4_sweep.run,
+    "fig5": fig5_step.run,
+    "fig7": fig7_compare.run,
+    "fig8": fig8_tuning.run,
+    "fig12": fig12_storage.run,
+    "stability": stability.run,
+    "roofline": roofline_report.run,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(BENCHES)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        try:
+            BENCHES[name]()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Paper Table I: theoretical worst-case accuracy per sensor module.
+
+Reproduces the ±mV/±A/±W numbers from the noise model and reports the
+relative deviation from the paper's published values.
+"""
+from __future__ import annotations
+
+from repro.core.sensors import MODULE_CATALOG, table1
+
+from .common import emit, timer
+
+PAPER = {
+    "slot-10a-12v": (28.6, 0.35, 4.2),
+    "slot-10a-3v3": (19.9, 0.35, 1.2),
+    "usb-c": (28.6, 0.35, 7.0),
+    "pcie8pin-20a": (28.6, 0.41, 5.0),
+}
+
+
+def run() -> None:
+    with timer() as t:
+        rows = table1()
+    for row in rows:
+        key = row["module"]
+        if key in PAPER:
+            eu, ei, ep = PAPER[key]
+            dev = max(
+                abs(row["voltage_mV"] - eu) / eu,
+                abs(row["current_A"] - ei) / ei,
+                abs(row["power_W"] - ep) / ep,
+            )
+            derived = (
+                f"Eu={row['voltage_mV']:.1f}mV Ei={row['current_A']:.2f}A "
+                f"Ep={row['power_W']:.2f}W paper=({eu}|{ei}|{ep}) maxdev={dev*100:.1f}%"
+            )
+        else:
+            derived = (
+                f"Eu={row['voltage_mV']:.1f}mV Ei={row['current_A']:.2f}A "
+                f"Ep={row['power_W']:.2f}W (extrapolated module)"
+            )
+        emit(f"table1/{key}", t.us / len(rows), derived)

@@ -1,0 +1,45 @@
+"""Continuous-mode monitoring of a phased TPU workload, PowerSensor3-style:
+20 kHz dump + markers around named step phases, vs the built-in counter.
+
+    PYTHONPATH=src python examples/power_monitor.py
+"""
+import io
+
+import numpy as np
+
+from repro.power import (
+    BuiltinCounterMeter,
+    PowerSensor3Meter,
+    StepCost,
+    V5E,
+    phases_for_step,
+    render_phases,
+)
+
+
+def main():
+    cost = StepCost(flops=3e12, hbm_bytes=8e11, ici_bytes=1.2e11)
+    phases = phases_for_step(cost, n_layers=8, overlap_collectives=False)
+    tr = render_phases(phases, V5E, idle_before_s=0.02, idle_after_s=0.05, repeat=3)
+    print(f"workload: 3 train steps, {tr.duration_s*1e3:.1f} ms, "
+          f"{tr.energy_j:.2f} J true energy")
+
+    ps3 = PowerSensor3Meter(seed=0).measure(tr.times_s, tr.watts)
+    bi = BuiltinCounterMeter(mode="instant").measure(tr.times_s, tr.watts)
+    print(f"powersensor3 : {ps3.energy_j:8.3f} J  ({ps3.energy_error_frac*100:+.2f}%)"
+          f"  {len(ps3.sample_times_s)} samples @ 20 kHz")
+    print(f"builtin 10Hz : {bi.energy_j:8.3f} J  ({bi.energy_error_frac*100:+.2f}%)"
+          f"  {len(bi.sample_times_s)} samples")
+
+    # phase-resolved energy via markers (only possible at 20 kHz)
+    marks = tr.phase_marks
+    print("per-phase power (PowerSensor3 samples between markers):")
+    for (name, t0), (_, t1) in zip(marks[:8], marks[1:9]):
+        sel = (ps3.sample_times_s >= t0) & (ps3.sample_times_s < t1)
+        if np.any(sel):
+            print(f"  {name:>8s}: {ps3.sample_watts[sel].mean():7.1f} W over "
+                  f"{(t1-t0)*1e3:6.2f} ms")
+
+
+if __name__ == "__main__":
+    main()

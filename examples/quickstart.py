@@ -1,0 +1,59 @@
+"""Quickstart: the PowerSensor3 stack + energy-aware training in ~60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs import RunConfig, smoke_config
+from repro.core import ConstantLoad, Joules, PowerSensor, Watt, make_device, seconds
+from repro.core.calibration import calibrate
+from repro.data import SyntheticTokens
+from repro.models import build_model
+from repro.optim import AdamWConfig
+from repro.power import EnergyTelemetry, StepCost
+from repro.train import LoopConfig, train
+
+
+def measure_a_rail():
+    """1) The faithful layer: measure a 12 V / 8 A load at 20 kHz."""
+    dev = make_device(["slot-10a-12v"], ConstantLoad(volts=12.0, amps=0.0), seed=1)
+    ps = PowerSensor(dev)
+    calibrate(ps, {0: 12.0}, n_samples=8000)  # one-time, §III-D
+    dev.firmware.dut.loads[0] = ConstantLoad(volts=12.0, amps=8.0)
+    first = ps.read()
+    ps.run_for(0.5)  # half a second of simulated streaming
+    second = ps.read()
+    print(f"[sensor] {Watt(first, second):.2f} W avg, "
+          f"{Joules(first, second):.2f} J over {seconds(first, second):.2f} s "
+          f"({second.n_samples - first.n_samples} samples @ 20 kHz)")
+
+
+def train_with_energy_telemetry():
+    """2) The adapted layer: train a small LM with J/token telemetry."""
+    cfg = smoke_config("qwen2.5-3b")
+    model = build_model(cfg, RunConfig(attn_impl="full", remat="none"))
+    data = SyntheticTokens(cfg, global_batch=8, seq_len=64, seed=0)
+    n = cfg.param_count_estimate()
+    tokens_per_step = 8 * 64
+    telemetry = EnergyTelemetry(
+        cost_per_step=StepCost(6.0 * n * tokens_per_step, 12.0 * n, 0.0),
+        n_layers=cfg.n_layers,
+        useful_flops_per_step=6.0 * n * tokens_per_step,
+    )
+    result = train(
+        model, data,
+        AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=40),
+        LoopConfig(steps=40, log_every=10, ckpt_every=0),
+        telemetry=telemetry,
+    )
+    s = telemetry.summary()
+    print(f"[train] loss {result.history[0]['loss']:.3f} -> {result.history[-1]['loss']:.3f}; "
+          f"modelled {s['j_per_token']*1e3:.3f} mJ/token on {telemetry.chip.name}")
+    check = telemetry.verify_with_sensor(n_steps=3)
+    print(f"[cross-check] sensor {check['sensor_joules']:.2f} J vs model "
+          f"{check['model_joules']:.2f} J ({check['rel_err']*100:+.2f}%)")
+
+
+if __name__ == "__main__":
+    measure_a_rail()
+    train_with_energy_telemetry()

@@ -1,0 +1,11 @@
+"""Serve a small model with batched requests (prefill + decode loop).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-3b --requests 8
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or ["--arch", "rwkv6-3b", "--requests", "8",
+                          "--prompt-len", "32", "--gen-len", "16"])

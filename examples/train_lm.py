@@ -1,0 +1,19 @@
+"""End-to-end driver: train a ~small LM for a few hundred steps with
+checkpoint/resume, fault injection and full energy telemetry.
+
+    PYTHONPATH=src python examples/train_lm.py --arch granite-20b --steps 200
+
+This is the example-app face of `repro.launch.train` (same engine).
+Crash/resume demo:
+
+    PYTHONPATH=src python examples/train_lm.py --steps 120 --crash-at 60 \
+        --ckpt-dir /tmp/lm_ck
+    PYTHONPATH=src python examples/train_lm.py --steps 120 --ckpt-dir /tmp/lm_ck
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or ["--arch", "qwen2.5-3b", "--steps", "200", "--batch", "8",
+                          "--seq", "128", "--log-every", "20"])

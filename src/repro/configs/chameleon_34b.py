@@ -1,0 +1,32 @@
+"""chameleon-34b [vlm]: early-fusion decoder, VQ image tokens.
+
+48L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=65536 [arXiv:2405.09818].
+VQ image tokens are ordinary ids in the 65536 vocab (early fusion); the
+VQ tokenizer frontend is a STUB per the assignment.
+"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="chameleon-34b",
+    family="dense",
+    n_layers=48,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22016,
+    vocab_size=65536,
+    frontend="vlm",
+    supports_long_context=False,
+)
+
+SMOKE = ArchConfig(
+    name="chameleon-34b-smoke",
+    family="dense",
+    n_layers=3,
+    d_model=128,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=256,
+    vocab_size=512,
+    frontend="vlm",
+)

@@ -1,0 +1,28 @@
+"""granite-20b [dense]: llama-arch code model, MQA (kv=1).
+
+52L d_model=6144 48H (kv=1) d_ff=24576 vocab=49152 [arXiv:2405.04324].
+"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-20b",
+    family="dense",
+    n_layers=52,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=1,
+    d_ff=24576,
+    vocab_size=49152,
+    supports_long_context=False,
+)
+
+SMOKE = ArchConfig(
+    name="granite-20b-smoke",
+    family="dense",
+    n_layers=3,
+    d_model=128,
+    n_heads=8,
+    n_kv_heads=1,
+    d_ff=256,
+    vocab_size=512,
+)

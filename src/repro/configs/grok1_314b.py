@@ -1,0 +1,32 @@
+"""grok-1-314b [moe]: 8 experts, top-2 — the largest assigned model.
+
+64L d_model=6144 48H (GQA kv=8) d_ff=32768 vocab=131072 [hf:xai-org/grok-1].
+"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="grok-1-314b",
+    family="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=32768,
+    vocab_size=131072,
+    n_experts=8,
+    experts_per_token=2,
+    supports_long_context=False,
+)
+
+SMOKE = ArchConfig(
+    name="grok-1-smoke",
+    family="moe",
+    n_layers=3,
+    d_model=128,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=256,
+    vocab_size=512,
+    n_experts=4,
+    experts_per_token=2,
+)

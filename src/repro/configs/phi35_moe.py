@@ -1,0 +1,33 @@
+"""phi3.5-moe-42b-a6.6b [moe]: 16 experts, top-2.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=6400 vocab=32064
+[hf:microsoft/Phi-3.5-MoE-instruct].
+"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=6400,
+    vocab_size=32064,
+    n_experts=16,
+    experts_per_token=2,
+    supports_long_context=False,
+)
+
+SMOKE = ArchConfig(
+    name="phi3.5-moe-smoke",
+    family="moe",
+    n_layers=3,
+    d_model=128,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=192,
+    vocab_size=512,
+    n_experts=4,
+    experts_per_token=2,
+)

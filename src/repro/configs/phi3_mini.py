@@ -1,0 +1,28 @@
+"""phi3-mini-3.8b [dense]: RoPE SwiGLU, MHA (kv=32).
+
+32L d_model=3072 32H (kv=32) d_ff=8192 vocab=32064 [arXiv:2404.14219].
+"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi3-mini-3.8b",
+    family="dense",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32064,
+    supports_long_context=False,
+)
+
+SMOKE = ArchConfig(
+    name="phi3-mini-smoke",
+    family="dense",
+    n_layers=3,
+    d_model=128,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=256,
+    vocab_size=512,
+)

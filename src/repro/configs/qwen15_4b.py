@@ -1,0 +1,30 @@
+"""qwen1.5-4b [dense]: QKV bias, kv=20.
+
+40L d_model=2560 20H (kv=20) d_ff=6912 vocab=151936 [hf:Qwen/Qwen1.5].
+"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen1.5-4b",
+    family="dense",
+    n_layers=40,
+    d_model=2560,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=6912,
+    vocab_size=151936,
+    qkv_bias=True,
+    supports_long_context=False,
+)
+
+SMOKE = ArchConfig(
+    name="qwen1.5-4b-smoke",
+    family="dense",
+    n_layers=3,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=256,
+    vocab_size=512,
+    qkv_bias=True,
+)

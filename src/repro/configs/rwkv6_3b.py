@@ -1,0 +1,31 @@
+"""rwkv6-3b [ssm]: Finch — attention-free, data-dependent decay.
+
+32L d_model=2560 d_ff=8960 vocab=65536 [arXiv:2404.05892].
+n_heads below is the RWKV head count (d_model / 64); no KV heads exist.
+Constant-size state: runs long_500k.
+"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    n_layers=32,
+    d_model=2560,
+    n_heads=40,  # d_model / 64
+    n_kv_heads=0,
+    d_ff=8960,
+    vocab_size=65536,
+    supports_long_context=True,
+)
+
+SMOKE = ArchConfig(
+    name="rwkv6-3b-smoke",
+    family="ssm",
+    n_layers=3,
+    d_model=128,
+    n_heads=2,
+    n_kv_heads=0,
+    d_ff=256,
+    vocab_size=512,
+    supports_long_context=True,
+)

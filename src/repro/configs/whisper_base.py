@@ -1,0 +1,40 @@
+"""whisper-base [audio]: enc-dec, conv frontend stubbed.
+
+6L d_model=512 8H (kv=8) d_ff=2048 vocab=51865 [arXiv:2212.04356].
+Assignment note: `[audio]` specifies the transformer BACKBONE only; the
+conv frontend is a STUB — `input_specs()` provides precomputed frame
+embeddings (B, T_enc, d).  Enc-dec split of an assigned seq_len S:
+T_enc = S/2 frames, T_dec = S/2 tokens (DESIGN.md §4).
+"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-base",
+    family="encdec",
+    n_layers=12,  # 6 encoder + 6 decoder
+    enc_layers=6,
+    dec_layers=6,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51865,
+    act="gelu",  # whisper uses plain GELU MLPs
+    frontend="audio",
+    supports_long_context=False,  # full attention -> long_500k skipped
+)
+
+SMOKE = ArchConfig(
+    name="whisper-base-smoke",
+    family="encdec",
+    n_layers=4,
+    enc_layers=2,
+    dec_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab_size=512,
+    act="gelu",
+    frontend="audio",
+)

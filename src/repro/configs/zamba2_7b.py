@@ -1,0 +1,36 @@
+"""zamba2-7b [hybrid]: Mamba-2 backbone + shared attention blocks.
+
+81L d_model=3584 32H (kv=32) d_ff=14336 vocab=32000, ssm_state=64
+[arXiv:2411.15242].  The shared transformer block (one set of weights)
+is applied after every `attn_every` Mamba-2 layers — zamba2's signature
+parameter-sharing trick.  Sub-quadratic: runs long_500k.
+"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=14336,
+    vocab_size=32000,
+    ssm_state=64,
+    attn_every=6,
+    supports_long_context=True,
+)
+
+SMOKE = ArchConfig(
+    name="zamba2-7b-smoke",
+    family="hybrid",
+    n_layers=7,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=256,
+    vocab_size=512,
+    ssm_state=16,
+    attn_every=3,
+    supports_long_context=True,
+)

@@ -1,0 +1,55 @@
+"""`repro.core` — faithful PowerSensor3 reproduction (paper §III).
+
+Layers: sensor-module physics (`sensors`), DUT models (`dut`), STM32
+firmware emulation + wire protocol (`protocol`, `firmware`), host library
+(`host`), one-time calibration (`calibration`) and CLI tools (`tools`).
+"""
+from .calibration import CalibrationReport, calibrate
+from .dut import (
+    CompositeLoad,
+    ConstantLoad,
+    GpuKernelLoad,
+    Load,
+    SquareWaveLoad,
+    SweepLoad,
+    TraceLoad,
+)
+from .firmware import (
+    FIRMWARE_VERSION,
+    FRAME_US,
+    SAMPLE_RATE_HZ,
+    Firmware,
+    VirtualDevice,
+    make_device,
+)
+from .host import Joules, PowerSensor, State, Watt, seconds
+from .protocol import SensorConfigBlock
+from .sensors import MODULE_CATALOG, ModuleSpec, SensorModule, table1
+
+__all__ = [
+    "CalibrationReport",
+    "calibrate",
+    "CompositeLoad",
+    "ConstantLoad",
+    "GpuKernelLoad",
+    "Load",
+    "SquareWaveLoad",
+    "SweepLoad",
+    "TraceLoad",
+    "FIRMWARE_VERSION",
+    "FRAME_US",
+    "SAMPLE_RATE_HZ",
+    "Firmware",
+    "VirtualDevice",
+    "make_device",
+    "Joules",
+    "PowerSensor",
+    "State",
+    "Watt",
+    "seconds",
+    "SensorConfigBlock",
+    "MODULE_CATALOG",
+    "ModuleSpec",
+    "SensorModule",
+    "table1",
+]

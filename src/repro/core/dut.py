@@ -1,0 +1,209 @@
+"""Device-under-test models — what the virtual sensor modules measure.
+
+The paper's evaluation rig (Fig. 3) is a lab supply (Keysight N6705B) plus an
+electronic load (Kniel E.Last).  Here the equivalent is a `Load`: a
+vectorised function from simulation time to per-module (volts, amps).
+
+Loads provided:
+
+* `ConstantLoad`      — Fig 4 / Table II operating points
+* `SweepLoad`         — stepped current sweep (Fig 4: −10 A → +10 A in 1 A steps)
+* `SquareWaveLoad`    — Fig 5 step response (3.3 A ↔ 8 A at 100 Hz, 50 % duty)
+* `TraceLoad`         — arbitrary (time, watts) playback: this is how the
+                        TPU-chip power model from `repro.power` becomes a DUT
+* `GpuKernelLoad`     — synthetic GPU-shaped profile (idle → ramp → phased
+                        kernel → decay), the Fig 7 workload shape
+* `CompositeLoad`     — different load per module (e.g. 3.3 V + 12 V rails)
+
+All ``sample`` methods take an array of times (seconds) and return
+``(volts, amps)`` arrays of the same shape.  An optional internal source
+resistance models the voltage sag under load that the paper insists must be
+measured per rail (V cannot be assumed stable).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+
+class Load:
+    """Base: one rail. Subclasses override `_va`."""
+
+    source_resistance: float = 0.0
+
+    def sample(self, t_s: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        v, i = self._va(np.asarray(t_s, dtype=np.float64))
+        if self.source_resistance:
+            v = v - self.source_resistance * i
+        return v, i
+
+    def _va(self, t: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        raise NotImplementedError
+
+
+@dataclass
+class ConstantLoad(Load):
+    volts: float = 12.0
+    amps: float = 0.0
+    source_resistance: float = 0.0
+
+    def _va(self, t):
+        return np.full_like(t, self.volts), np.full_like(t, self.amps)
+
+
+@dataclass
+class SweepLoad(Load):
+    """Stepped current sweep: hold each step for `dwell_s` (Fig 4)."""
+
+    volts: float = 12.0
+    steps: Sequence[float] = field(default_factory=lambda: np.arange(-10.0, 10.5, 1.0))
+    dwell_s: float = 128_000 / 20_000.0  # 128k samples per step at 20 kHz
+    source_resistance: float = 0.0
+
+    def step_index(self, t: np.ndarray) -> np.ndarray:
+        idx = np.floor(np.asarray(t) / self.dwell_s).astype(np.int64)
+        return np.clip(idx, 0, len(self.steps) - 1)
+
+    def _va(self, t):
+        amps = np.asarray(self.steps, dtype=np.float64)[self.step_index(t)]
+        return np.full_like(t, self.volts), amps
+
+
+@dataclass
+class SquareWaveLoad(Load):
+    """100 Hz modulated e-load used for the step-response test (Fig 5)."""
+
+    volts: float = 12.0
+    amps_lo: float = 3.3
+    amps_hi: float = 8.0
+    freq_hz: float = 100.0
+    duty: float = 0.5
+    #: e-load slew: first-order settling time constant (s); 0 = ideal step
+    slew_tau_s: float = 25e-6
+    source_resistance: float = 0.0
+
+    def _va(self, t):
+        phase = (t * self.freq_hz) % 1.0
+        hi = phase < self.duty
+        if self.slew_tau_s > 0.0:
+            # time since the most recent edge
+            t_edge_hi = phase / self.freq_hz
+            t_edge_lo = (phase - self.duty) / self.freq_hz
+            settle = np.where(hi, t_edge_hi, np.where(t_edge_lo > 0, t_edge_lo, 0.0))
+            frac = 1.0 - np.exp(-settle / self.slew_tau_s)
+            base = np.where(hi, self.amps_lo, self.amps_hi)
+            target = np.where(hi, self.amps_hi, self.amps_lo)
+            amps = base + (target - base) * frac
+        else:
+            amps = np.where(hi, self.amps_hi, self.amps_lo)
+        return np.full_like(t, self.volts), amps
+
+
+@dataclass
+class TraceLoad(Load):
+    """Piecewise-linear power trace playback: P(t) watts on a fixed rail.
+
+    This is the bridge from `repro.power` (TPU-chip phase traces derived
+    from compiled HLO) into the faithful sensor stack: amps = P(t)/V.
+    """
+
+    times_s: np.ndarray = field(default_factory=lambda: np.array([0.0, 1.0]))
+    watts: np.ndarray = field(default_factory=lambda: np.array([0.0, 0.0]))
+    volts: float = 12.0
+    source_resistance: float = 0.0
+    repeat: bool = False
+    #: playback starts at this simulation time (device clocks keep running
+    #: across DUT swaps, e.g. calibration happens before the workload)
+    t_offset_s: float = 0.0
+
+    def _va(self, t):
+        times = np.asarray(self.times_s, dtype=np.float64)
+        t = np.maximum(np.asarray(t, dtype=np.float64) - self.t_offset_s, 0.0)
+        if self.repeat and times[-1] > 0:
+            t = np.mod(t, times[-1])
+        p = np.interp(t, times, np.asarray(self.watts, dtype=np.float64))
+        v = np.full_like(t, self.volts)
+        return v, p / v
+
+
+@dataclass
+class GpuKernelLoad(Load):
+    """Synthetic accelerator profile reproducing the Fig 7 shape:
+
+    idle → clock ramp-up (power overshoot) → N sequential kernel phases with
+    short inter-phase dips → post-kernel decay back to idle.
+    """
+
+    volts: float = 12.0
+    idle_w: float = 18.0
+    peak_w: float = 120.0
+    overshoot_w: float = 150.0
+    t_start_s: float = 0.25
+    ramp_s: float = 0.15
+    n_phases: int = 6
+    phase_s: float = 0.30
+    dip_w: float = 70.0
+    dip_s: float = 0.004
+    decay_tau_s: float = 0.35
+    source_resistance: float = 0.0
+
+    def _va(self, t):
+        p = np.full_like(t, self.idle_w)
+        t0 = self.t_start_s
+        # ramp with brief overshoot
+        ramp_frac = np.clip((t - t0) / self.ramp_s, 0.0, 1.0)
+        over = self.overshoot_w * np.exp(-((t - t0) / (self.ramp_s * 0.4)) ** 2) * (
+            t >= t0
+        )
+        in_run = (t >= t0) & (t < t0 + self.ramp_s + self.n_phases * self.phase_s)
+        p = np.where(in_run, self.idle_w + (self.peak_w - self.idle_w) * ramp_frac, p)
+        p = np.where(t >= t0, np.maximum(p, np.minimum(over + self.idle_w, self.overshoot_w)), p)
+        # inter-phase dips
+        t_run = t - (t0 + self.ramp_s)
+        phase_pos = np.mod(t_run, self.phase_s)
+        dip = (
+            (t_run > 0)
+            & (t_run < self.n_phases * self.phase_s)
+            & (phase_pos < self.dip_s)
+            & (np.floor(t_run / self.phase_s) > 0)
+        )
+        p = np.where(dip, self.dip_w, p)
+        # decay after the workload
+        t_end = t0 + self.ramp_s + self.n_phases * self.phase_s
+        after = t >= t_end
+        p = np.where(
+            after,
+            self.idle_w + (self.peak_w - self.idle_w) * np.exp(-(t - t_end) / self.decay_tau_s),
+            p,
+        )
+        return np.full_like(t, self.volts), p / self.volts
+
+    @property
+    def t_total(self) -> float:
+        return self.t_start_s + self.ramp_s + self.n_phases * self.phase_s + 4 * self.decay_tau_s
+
+
+@dataclass
+class CompositeLoad:
+    """Assign an independent `Load` to each module slot (0..3).
+
+    Mirrors the paper's GPU setup: slot 3.3 V + slot 12 V + external 12 V,
+    each on its own sensor module.
+    """
+
+    loads: dict[int, Load] = field(default_factory=dict)
+
+    def sample_module(self, module_idx: int, t_s: np.ndarray):
+        load = self.loads.get(module_idx)
+        if load is None:
+            z = np.zeros_like(np.asarray(t_s, dtype=np.float64))
+            return z, z
+        return load.sample(t_s)
+
+
+def as_composite(load: Load | CompositeLoad, n_modules: int = 1) -> CompositeLoad:
+    if isinstance(load, CompositeLoad):
+        return load
+    return CompositeLoad({i: load for i in range(n_modules)})

@@ -1,0 +1,273 @@
+"""STM32F411 firmware emulation (paper §III-B).
+
+Timing model (exactly the paper's arithmetic):
+
+* ADC clock 24 MHz, 10-bit resolution, 15-cycle sampling time → 25 cycles
+  per conversion = **1.0417 µs**;
+* 8 channels (4 modules × current+voltage pair, consecutive channels to
+  minimise skew) × **6-sample CPU averaging** → 50 µs frame interval =
+  **20 kHz** output rate;
+* per frame the device emits one 10-bit µs timestamp packet (captured after
+  3 of the 6 averaged samples, i.e. mid-frame) followed by one 2-byte packet
+  per enabled channel;
+* USB 1.1 full-speed cap (12 Mbit/s) is honoured: 9 packets × 2 B / 50 µs =
+  2.88 Mbit/s, comfortably inside the budget — the emulator asserts this
+  invariant rather than modelling the bus.
+
+The firmware is agnostic to module type: conversion constants live in the
+virtual EEPROM (`SensorConfigBlock`) and are read by the host library.
+
+Everything is generated vectorised per `advance_us` call so that the
+simulation sustains millions of frames per second of wall time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from . import protocol
+from .dut import CompositeLoad, as_composite
+from .protocol import (
+    ADC_MAX,
+    CMD_MARKER,
+    CMD_READ_CONFIG,
+    CMD_REBOOT,
+    CMD_REBOOT_DFU,
+    CMD_START_STREAM,
+    CMD_STOP_STREAM,
+    CMD_VERSION,
+    CMD_WRITE_CONFIG,
+    CONFIG_BLOCK_SIZE,
+    SensorConfigBlock,
+)
+from .sensors import VREF, SensorModule, adc_quantize
+
+FIRMWARE_VERSION = "ps3-sim 1.2.0"
+
+ADC_CLOCK_HZ = 24e6
+ADC_CYCLES_PER_CONV = 25  # 15 sampling + 10 conversion
+N_CHANNELS = 8
+N_AVG = 6
+CONV_US = ADC_CYCLES_PER_CONV / (ADC_CLOCK_HZ / 1e6)  # 1.0417 µs
+FRAME_US = CONV_US * N_CHANNELS * N_AVG  # 50 µs
+SAMPLE_RATE_HZ = 1e6 / FRAME_US  # 20 kHz
+USB_FS_BITS_PER_S = 12e6
+
+_PACKETS_PER_FRAME = 1 + N_CHANNELS  # timestamp + 8 channels (when all enabled)
+assert _PACKETS_PER_FRAME * 2 * 8 * SAMPLE_RATE_HZ < USB_FS_BITS_PER_S
+
+
+@dataclass
+class Firmware:
+    """A virtual PowerSensor3: 4 module slots, streaming over byte FIFOs."""
+
+    modules: list[SensorModule | None]
+    dut: CompositeLoad
+    seed: int = 0
+
+    t_us: float = 0.0  # device clock
+    streaming: bool = False
+    pending_markers: int = 0
+    booted_to_dfu: bool = False
+    eeprom: list[SensorConfigBlock] = field(default_factory=list)
+    _out: bytearray = field(default_factory=bytearray)
+    _cmd_buf: bytearray = field(default_factory=bytearray)
+
+    def __post_init__(self) -> None:
+        while len(self.modules) < 4:
+            self.modules.append(None)
+        self.dut = as_composite(self.dut, n_modules=4)
+        self.rng = np.random.default_rng(self.seed)
+        if not self.eeprom:
+            self.eeprom = []
+            for k in range(4):
+                mod = self.modules[k]
+                if mod is None:
+                    self.eeprom.append(SensorConfigBlock(name=f"empty{2*k}"))
+                    self.eeprom.append(SensorConfigBlock(name=f"empty{2*k+1}"))
+                else:
+                    self.eeprom.append(
+                        SensorConfigBlock(
+                            name=f"{mod.spec.name[:9]}.i",
+                            type_code=0,
+                            enabled=True,
+                            vref=VREF,
+                            sensitivity=mod.spec.current_sensitivity,
+                        )
+                    )
+                    self.eeprom.append(
+                        SensorConfigBlock(
+                            name=f"{mod.spec.name[:9]}.u",
+                            type_code=1,
+                            enabled=True,
+                            vref=VREF,
+                            sensitivity=mod.spec.divider_gain,
+                        )
+                    )
+
+    # ------------------------------------------------------------------ host I/O
+    def host_write(self, data: bytes) -> None:
+        """Bytes arriving from the host (commands)."""
+        self._cmd_buf.extend(data)
+        self._drain_commands()
+
+    def host_read(self, max_bytes: int | None = None) -> bytes:
+        if max_bytes is None or max_bytes >= len(self._out):
+            out = bytes(self._out)
+            self._out.clear()
+            return out
+        out = bytes(self._out[:max_bytes])
+        del self._out[:max_bytes]
+        return out
+
+    def _drain_commands(self) -> None:
+        buf = self._cmd_buf
+        while buf:
+            cmd = bytes(buf[:1])
+            if cmd == CMD_START_STREAM:
+                self.streaming = True
+                del buf[:1]
+            elif cmd == CMD_STOP_STREAM:
+                self.streaming = False
+                del buf[:1]
+            elif cmd == CMD_VERSION:
+                self._out.extend(FIRMWARE_VERSION.encode() + b"\0")
+                del buf[:1]
+            elif cmd == CMD_MARKER:
+                if len(buf) < 2:
+                    return  # wait for the marker char
+                self.pending_markers += 1
+                del buf[:2]
+            elif cmd == CMD_READ_CONFIG:
+                if len(buf) < 2:
+                    return
+                sid = buf[1]
+                if sid < len(self.eeprom):
+                    self._out.extend(self.eeprom[sid].pack())
+                del buf[:2]
+            elif cmd == CMD_WRITE_CONFIG:
+                if len(buf) < 2 + CONFIG_BLOCK_SIZE:
+                    return
+                sid = buf[1]
+                block = SensorConfigBlock.unpack(bytes(buf[2 : 2 + CONFIG_BLOCK_SIZE]))
+                if sid < len(self.eeprom):
+                    self.eeprom[sid] = block
+                del buf[: 2 + CONFIG_BLOCK_SIZE]
+            elif cmd == CMD_REBOOT:
+                self.streaming = False
+                self.t_us = 0.0
+                del buf[:1]
+            elif cmd == CMD_REBOOT_DFU:
+                self.streaming = False
+                self.booted_to_dfu = True
+                del buf[:1]
+            else:  # unknown byte: discard (robustness)
+                del buf[:1]
+
+    # ------------------------------------------------------------------ sampling
+    def advance_us(self, dt_us: float) -> None:
+        """Advance the device clock, emitting frames if streaming."""
+        t_end = self.t_us + dt_us
+        if not self.streaming:
+            self.t_us = t_end
+            return
+        # frames land on the 50 µs grid, strictly after the current clock
+        first = int(np.floor(self.t_us / FRAME_US + 1e-9)) + 1
+        last = int(np.floor(t_end / FRAME_US + 1e-9))
+        if last < first:
+            self.t_us = t_end
+            return
+        starts = np.arange(first, last + 1, dtype=np.float64) * FRAME_US
+        self._emit_frames(starts)
+        self.t_us = t_end
+
+    def advance(self, dt_s: float) -> None:
+        self.advance_us(dt_s * 1e6)
+
+    def _emit_frames(self, starts_us: np.ndarray) -> None:
+        n = len(starts_us)
+        # mid-frame timestamps: captured after 3 of 6 averaged samples
+        ts_vals = np.floor(starts_us + FRAME_US / 2.0).astype(np.int64) & 0x3FF
+
+        # per-channel codes: (n, 8)
+        codes = np.zeros((n, N_CHANNELS), dtype=np.int64)
+        # sub-sample times per averaging slot: channels interleave; the skew
+        # within a pair (~1 µs) is negligible vs signal bandwidth, so sample
+        # the DUT once per averaging slot per module.
+        sub = starts_us[:, None] / 1e6 + (np.arange(N_AVG)[None, :] * N_CHANNELS * CONV_US) / 1e6
+        for k, mod in enumerate(self.modules):
+            if mod is None:
+                continue
+            volts, amps = self.dut.sample_module(k, sub)  # (n, N_AVG)
+            ci = adc_quantize(mod.current_pin_volts(amps, self.rng))
+            cu = adc_quantize(mod.voltage_pin_volts(volts, self.rng))
+            codes[:, 2 * k] = np.round(ci.mean(axis=1)).astype(np.int64)
+            codes[:, 2 * k + 1] = np.round(cu.mean(axis=1)).astype(np.int64)
+
+        enabled = np.array([blk.enabled for blk in self.eeprom[:N_CHANNELS]])
+        ch_ids = np.flatnonzero(enabled)
+        n_ch = len(ch_ids)
+
+        # assemble packets: per frame [timestamp, ch0, ch1, ...]
+        per_frame = 1 + n_ch
+        ids = np.empty((n, per_frame), dtype=np.int64)
+        vals = np.empty((n, per_frame), dtype=np.int64)
+        marks = np.zeros((n, per_frame), dtype=np.int64)
+        ids[:, 0] = protocol.TIMESTAMP_SENSOR_ID
+        vals[:, 0] = ts_vals
+        marks[:, 0] = 1  # timestamp flag: marker bit + id 7
+        ids[:, 1:] = ch_ids[None, :]
+        vals[:, 1:] = codes[:, ch_ids]
+        # host-requested markers ride on sensor-0 data packets (paper §III-B)
+        if self.pending_markers and 0 in ch_ids:
+            col = 1 + int(np.flatnonzero(ch_ids == 0)[0])
+            k = min(self.pending_markers, n)
+            marks[:k, col] = 1
+            self.pending_markers -= k
+        self._out.extend(
+            protocol.encode_packets(ids.ravel(), vals.ravel(), marks.ravel())
+        )
+
+
+@dataclass
+class VirtualDevice:
+    """Transport wrapper pairing a Firmware with host-side read/write.
+
+    The host library talks to this object exactly as it would to
+    ``/dev/ttyACM0``: `write` commands, `read` stream bytes, and — because
+    this is a simulation — `advance` simulated time.
+    """
+
+    firmware: Firmware
+
+    def write(self, data: bytes) -> None:
+        self.firmware.host_write(data)
+
+    def read(self, max_bytes: int | None = None) -> bytes:
+        return self.firmware.host_read(max_bytes)
+
+    def advance(self, dt_s: float) -> None:
+        self.firmware.advance(dt_s)
+
+    @property
+    def t_s(self) -> float:
+        return self.firmware.t_us / 1e6
+
+
+def make_device(
+    module_names: list[str | None],
+    load,
+    seed: int = 0,
+) -> VirtualDevice:
+    """Convenience: build a VirtualDevice from catalog module names."""
+    from .sensors import MODULE_CATALOG
+
+    modules: list[SensorModule | None] = []
+    for i, name in enumerate(module_names):
+        if name is None:
+            modules.append(None)
+        else:
+            modules.append(SensorModule(MODULE_CATALOG[name], seed=seed * 101 + i))
+    fw = Firmware(modules=modules, dut=as_composite(load, len(module_names)), seed=seed)
+    return VirtualDevice(fw)

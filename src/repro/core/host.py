@@ -1,0 +1,300 @@
+"""PowerSensor3 host library (paper §III-C), Python edition.
+
+Mirrors the C++ `PowerSensor` class API:
+
+* on connect: reads the firmware version and the per-sensor EEPROM config,
+  then starts streaming;
+* a receiver (here: `poll()`, or a background thread via `start_thread()`)
+  parses the 20 kHz stream and integrates **cumulative energy** per sensor
+  pair;
+* **interval mode**: `read()` returns a `State`; `Joules(a, b)`,
+  `Watt(a, b)`, `seconds(a, b)` compute energy/average power between two
+  states (this is what `psrun` uses);
+* **continuous mode**: `set_dump_file()` streams every 20 kHz record to a
+  file, including time-synced marker lines (`M <char> <t>`), active
+  simultaneously with interval mode;
+* config access: `get_config(i)` / `set_config(i, block)` (used by
+  `psconfig` and the calibration procedure).
+"""
+from __future__ import annotations
+
+import io
+import threading
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from . import protocol
+from .firmware import FRAME_US, N_CHANNELS, VirtualDevice
+from .protocol import CMD_MARKER, CMD_READ_CONFIG, CMD_START_STREAM, CMD_STOP_STREAM, CMD_VERSION, CMD_WRITE_CONFIG, CONFIG_BLOCK_SIZE, SensorConfigBlock
+
+MAX_PAIRS = N_CHANNELS // 2
+
+
+@dataclass(frozen=True)
+class State:
+    """Snapshot of cumulative measurement state (interval-mode endpoint)."""
+
+    time_s: float
+    consumed_joules: tuple[float, ...]  # per module pair
+    instant_watts: tuple[float, ...]
+    instant_volts: tuple[float, ...]
+    instant_amps: tuple[float, ...]
+    n_samples: int
+
+    @property
+    def total_joules(self) -> float:
+        return float(sum(self.consumed_joules))
+
+    @property
+    def total_watts(self) -> float:
+        return float(sum(self.instant_watts))
+
+
+def Joules(first: State, second: State, pair: int = -1) -> float:
+    """Energy consumed between two states (all pairs if pair < 0)."""
+    if pair < 0:
+        return second.total_joules - first.total_joules
+    return second.consumed_joules[pair] - first.consumed_joules[pair]
+
+
+def seconds(first: State, second: State) -> float:
+    return second.time_s - first.time_s
+
+
+def Watt(first: State, second: State, pair: int = -1) -> float:
+    dt = seconds(first, second)
+    return Joules(first, second, pair) / dt if dt > 0 else 0.0
+
+
+class PowerSensor:
+    """Host-side driver for a (virtual) PowerSensor3 device."""
+
+    def __init__(self, device: VirtualDevice, start: bool = True):
+        self.device = device
+        self._lock = threading.Lock()
+        self._residual = b""
+        self._pending_marker_chars: list[str] = []
+        self._marker_events: list[tuple[str, float]] = []
+        self._dump: io.TextIOBase | None = None
+        self._dump_every = 1
+        self._frame_count = 0
+        self._device_time_us: float = 0.0
+        self._last_ts10: int | None = None
+        self._energy = np.zeros(MAX_PAIRS)
+        self._inst_v = np.zeros(MAX_PAIRS)
+        self._inst_i = np.zeros(MAX_PAIRS)
+        self._n_samples = 0
+        self._thread: threading.Thread | None = None
+        self._thread_stop = threading.Event()
+
+        # ---- connect handshake: version + config download ----
+        self.device.write(CMD_VERSION)
+        self.version = self._read_cstring()
+        self.configs: list[SensorConfigBlock] = []
+        for sid in range(N_CHANNELS):
+            self.device.write(CMD_READ_CONFIG + bytes([sid]))
+            raw = self.device.read(CONFIG_BLOCK_SIZE)
+            self.configs.append(SensorConfigBlock.unpack(raw))
+        if start:
+            self.start_streaming()
+
+    # ------------------------------------------------------------ config access
+    def _read_cstring(self) -> str:
+        out = bytearray()
+        while True:
+            b = self.device.read(1)
+            if not b or b == b"\0":
+                return out.decode()
+            out.extend(b)
+
+    def get_config(self, sid: int) -> SensorConfigBlock:
+        return self.configs[sid]
+
+    def set_config(self, sid: int, block: SensorConfigBlock) -> None:
+        self.device.write(CMD_WRITE_CONFIG + bytes([sid]) + block.pack())
+        self.configs[sid] = block
+
+    # ------------------------------------------------------------ streaming
+    def start_streaming(self) -> None:
+        self.device.write(CMD_START_STREAM)
+
+    def stop_streaming(self) -> None:
+        self.device.write(CMD_STOP_STREAM)
+        self.poll()
+
+    def mark(self, char: str = "M") -> None:
+        """Inject a time-synced marker into the continuous stream."""
+        with self._lock:
+            self._pending_marker_chars.append(char[0])
+        self.device.write(CMD_MARKER + char[:1].encode())
+
+    # ------------------------------------------------------------ dump file
+    def set_dump_file(self, path_or_file, every: int = 1) -> None:
+        """Continuous mode: write records as ``t pair V A W`` lines.
+
+        `every` subsamples the dump (1 = full 20 kHz resolution).
+        """
+        if path_or_file is None:
+            if self._dump:
+                self._dump.flush()
+            self._dump = None
+            return
+        self._dump = (
+            open(path_or_file, "w") if isinstance(path_or_file, (str, bytes)) else path_or_file
+        )
+        self._dump_every = max(1, int(every))
+        self._dump.write("# t_s pair volts amps watts\n")
+
+    # ------------------------------------------------------------ the receiver
+    def poll(self) -> int:
+        """Parse everything the device has produced. Returns #frames seen."""
+        with self._lock:
+            buf = self._residual + self.device.read()
+            ids, vals, marks, consumed = protocol.decode_packets(buf)
+            self._residual = buf[consumed:]
+            if ids.size == 0:
+                return 0
+            return self._process(ids, vals, marks)
+
+    def _process(self, ids, vals, marks) -> int:
+        is_ts = protocol.is_timestamp(ids, marks)
+        ts_idx = np.flatnonzero(is_ts)
+        if ts_idx.size == 0:
+            return 0
+        # device time reconstruction from 10-bit wrapping µs counter
+        ts_vals = vals[ts_idx]
+        if self._last_ts10 is None:
+            base = float(ts_vals[0])
+            self._device_time_us = base
+            deltas = np.diff(ts_vals) % 1024
+            times = base + np.concatenate([[0], np.cumsum(deltas)])
+        else:
+            d0 = (ts_vals[0] - self._last_ts10) % 1024
+            deltas = np.concatenate([[d0], np.diff(ts_vals) % 1024])
+            times = self._device_time_us + np.cumsum(deltas)
+        self._last_ts10 = int(ts_vals[-1])
+        self._device_time_us = float(times[-1])
+
+        # frame boundaries: packets between consecutive timestamps
+        n_frames = ts_idx.size
+        dt_s = FRAME_US / 1e6
+
+        # physical conversion for every data packet
+        data_mask = ~is_ts
+        d_ids = ids[data_mask]
+        d_vals = vals[data_mask]
+        d_marks = marks[data_mask]
+        # frame index of each data packet
+        frame_of = np.searchsorted(ts_idx, np.flatnonzero(data_mask)) - 1
+        ok = frame_of >= 0
+        d_ids, d_vals, d_marks, frame_of = (
+            d_ids[ok], d_vals[ok], d_marks[ok], frame_of[ok],
+        )
+
+        volts = np.zeros((n_frames, MAX_PAIRS))
+        amps = np.zeros((n_frames, MAX_PAIRS))
+        for sid in range(N_CHANNELS):
+            blk = self.configs[sid]
+            if not blk.enabled:
+                continue
+            sel = d_ids == sid
+            if not np.any(sel):
+                continue
+            phys = blk.raw_to_physical(d_vals[sel])
+            tgt = amps if blk.type_code == 0 else volts
+            tgt[frame_of[sel], sid // 2] = phys
+
+        watts = volts * amps
+        self._energy += watts.sum(axis=0) * dt_s
+        self._inst_v = volts[-1]
+        self._inst_i = amps[-1]
+        self._n_samples += n_frames
+
+        # markers: marker bit on sensor-0 data packets
+        mk = (d_ids == 0) & (d_marks == 1)
+        for fidx in frame_of[mk]:
+            char = self._pending_marker_chars.pop(0) if self._pending_marker_chars else "?"
+            t_mark = times[min(fidx, n_frames - 1)] / 1e6
+            self._marker_events.append((char, t_mark))
+            if self._dump:
+                self._dump.write(f"M {char} {t_mark:.6f}\n")
+
+        if self._dump:
+            step = self._dump_every
+            sel = np.arange(0, n_frames, step)
+            lines = []
+            for f in sel:
+                t = times[f] / 1e6
+                for p in range(MAX_PAIRS):
+                    if self.configs[2 * p].enabled:
+                        lines.append(
+                            f"{t:.6f} {p} {volts[f, p]:.4f} {amps[f, p]:.4f} {watts[f, p]:.4f}\n"
+                        )
+            self._dump.write("".join(lines))
+        self._frame_count += n_frames
+        return n_frames
+
+    # ------------------------------------------------------------ interval mode
+    def read(self) -> State:
+        self.poll()
+        with self._lock:
+            watts = self._inst_v * self._inst_i
+            return State(
+                time_s=self._device_time_us / 1e6,
+                consumed_joules=tuple(self._energy),
+                instant_watts=tuple(watts),
+                instant_volts=tuple(self._inst_v),
+                instant_amps=tuple(self._inst_i),
+                n_samples=self._n_samples,
+            )
+
+    @property
+    def markers(self) -> list[tuple[str, float]]:
+        return list(self._marker_events)
+
+    # ------------------------------------------------------------ sim helpers
+    def run_for(self, seconds_: float, chunk_s: float = 0.5) -> None:
+        """Advance simulated time, polling periodically (keeps buffers small)."""
+        remaining = seconds_
+        while remaining > 1e-12:
+            step = min(chunk_s, remaining)
+            self.device.advance(step)
+            self.poll()
+            remaining -= step
+
+    # ------------------------------------------------------------ thread mode
+    def start_thread(self, real_time_factor: float = 0.0, tick_s: float = 0.01) -> None:
+        """Background receiver thread (the C++ library's lightweight thread).
+
+        With ``real_time_factor > 0`` each wall-clock tick advances simulated
+        time by ``tick * factor`` — useful for live `psinfo`-style displays.
+        """
+        if self._thread is not None:
+            return
+        self._thread_stop.clear()
+
+        def _run() -> None:
+            import time as _time
+
+            while not self._thread_stop.is_set():
+                if real_time_factor > 0:
+                    self.device.advance(tick_s * real_time_factor)
+                self.poll()
+                _time.sleep(tick_s if real_time_factor > 0 else 0.001)
+
+        self._thread = threading.Thread(target=_run, daemon=True)
+        self._thread.start()
+
+    def stop_thread(self) -> None:
+        if self._thread is None:
+            return
+        self._thread_stop.set()
+        self._thread.join()
+        self._thread = None
+
+    def close(self) -> None:
+        self.stop_thread()
+        self.stop_streaming()
+        if self._dump:
+            self._dump.flush()

@@ -1,0 +1,193 @@
+"""PowerSensor3 wire protocol (byte-exact reproduction of the paper's framing).
+
+The paper (§III-B) specifies:
+
+* 2 bytes per sensor reading; 10-bit sensor value + 6 bits of metadata:
+  a 3-bit sensor index, a 1-bit marker, and one flag bit per byte that
+  differentiates the first byte from the second.
+* A 10-bit device timestamp (microseconds) generated after 3 of the 6
+  averaged ADC samples, transmitted as a packet with sensor index 7
+  (binary 111) and the marker bit set — "a marker bit set to one with a
+  nonzero sensor index is unused and can be repurposed".
+* A real marker (host-requested, correlating samples with code regions)
+  can only be carried by sensor-0 data packets.
+
+Concrete bit layout used here (documented contract for this repo)::
+
+    byte0:  1  m  i2 i1 i0 v9 v8 v7      (bit7 = first-byte flag = 1)
+    byte1:  0  v6 v5 v4 v3 v2 v1 v0      (bit7 = second-byte flag = 0)
+
+where ``i`` is the 3-bit sensor index, ``m`` the marker bit and ``v`` the
+10-bit ADC value.  A timestamp packet is ``i == 7 and m == 1`` with ``v``
+the low 10 bits of the device microsecond counter.
+
+Host → device commands are single ASCII bytes (optionally with payload):
+
+    b'S'          start streaming sensor data
+    b'X'          stop streaming
+    b'M' + <char> set the marker bit on the next sensor-0 packet
+    b'V'          reply with firmware version string (NUL-terminated)
+    b'R' + <id>   reply with the 26-byte EEPROM config block of sensor <id>
+    b'W' + <id> + block   write the EEPROM config block of sensor <id>
+    b'B'          reboot
+    b'D'          reboot to DFU (firmware upload) mode
+
+Everything here is pure-numpy and vectorised: encoding/decoding operate on
+arrays of packets, which is what lets the simulation sustain "20 kHz" for
+millions of frames (Fig. 4 needs 21 x 128k samples).
+"""
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# commands
+# ---------------------------------------------------------------------------
+CMD_START_STREAM = b"S"
+CMD_STOP_STREAM = b"X"
+CMD_MARKER = b"M"
+CMD_VERSION = b"V"
+CMD_READ_CONFIG = b"R"
+CMD_WRITE_CONFIG = b"W"
+CMD_REBOOT = b"B"
+CMD_REBOOT_DFU = b"D"
+
+TIMESTAMP_SENSOR_ID = 7
+ADC_BITS = 10
+ADC_MAX = (1 << ADC_BITS) - 1  # 1023
+
+# EEPROM config block: name(12s) type(B) enabled(B) vref(f) sensitivity(f)
+# offset_cal(f) gain_cal(f)  -> 12 + 1 + 1 + 16 = 30 bytes
+CONFIG_STRUCT = struct.Struct("<12sBBffff")
+CONFIG_BLOCK_SIZE = CONFIG_STRUCT.size
+
+
+@dataclass
+class SensorConfigBlock:
+    """Virtual-EEPROM contents for one ADC channel (paper §III-B1)."""
+
+    name: str = ""
+    type_code: int = 0  # 0 = current channel, 1 = voltage channel
+    enabled: bool = False
+    vref: float = 3.3
+    #: V/A for current channels; divider gain (V_adc / V_rail) for voltage.
+    sensitivity: float = 1.0
+    #: additive correction (A for current, V for voltage), set by calibration
+    offset_cal: float = 0.0
+    #: multiplicative correction, set by calibration
+    gain_cal: float = 1.0
+
+    def pack(self) -> bytes:
+        return CONFIG_STRUCT.pack(
+            self.name.encode()[:12].ljust(12, b"\0"),
+            self.type_code,
+            int(self.enabled),
+            self.vref,
+            self.sensitivity,
+            self.offset_cal,
+            self.gain_cal,
+        )
+
+    @classmethod
+    def unpack(cls, raw: bytes) -> "SensorConfigBlock":
+        name, type_code, enabled, vref, sens, off, gain = CONFIG_STRUCT.unpack(raw)
+        return cls(
+            name=name.rstrip(b"\0").decode(),
+            type_code=type_code,
+            enabled=bool(enabled),
+            vref=vref,
+            sensitivity=sens,
+            offset_cal=off,
+            gain_cal=gain,
+        )
+
+    # -- host-side conversions ------------------------------------------------
+    def raw_to_physical(self, code: np.ndarray | float) -> np.ndarray | float:
+        """Convert 10-bit ADC code(s) to amps (current ch) or rail volts."""
+        v_adc = (np.asarray(code, dtype=np.float64) / ADC_MAX) * self.vref
+        if self.type_code == 0:  # current: mid-rail biased Hall output
+            amps = (v_adc - self.vref / 2.0) / self.sensitivity
+            return (amps - self.offset_cal) * self.gain_cal
+        volts = v_adc / self.sensitivity  # sensitivity = divider gain here
+        return (volts - self.offset_cal) * self.gain_cal
+
+
+# ---------------------------------------------------------------------------
+# packet encode / decode (vectorised)
+# ---------------------------------------------------------------------------
+def encode_packets(
+    sensor_ids: np.ndarray, values: np.ndarray, markers: np.ndarray
+) -> bytes:
+    """Encode N packets -> 2N bytes.  All args are int arrays of equal length."""
+    sensor_ids = np.asarray(sensor_ids, dtype=np.uint16)
+    values = np.asarray(values, dtype=np.uint16)
+    markers = np.asarray(markers, dtype=np.uint16)
+    if np.any(values > ADC_MAX):
+        raise ValueError("10-bit value out of range")
+    if np.any(sensor_ids > 7):
+        raise ValueError("3-bit sensor id out of range")
+    b0 = 0x80 | (markers << 6) | (sensor_ids << 3) | (values >> 7)
+    b1 = values & 0x7F
+    out = np.empty((len(values), 2), dtype=np.uint8)
+    out[:, 0] = b0.astype(np.uint8)
+    out[:, 1] = b1.astype(np.uint8)
+    return out.tobytes()
+
+
+# NB bit layout realised above: byte0 = [1 | m | i2 i1 i0 | v9 v8 v7] with the
+# marker at bit6 and the id at bits5..3.  The docstring layout is normative at
+# the *field* level (1 flag, 1 marker, 3 id, 3 value bits); tests pin this
+# exact packing so host and firmware can never drift apart.
+
+
+def decode_packets(buf: bytes) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Decode a byte buffer into (sensor_ids, values, markers, n_consumed).
+
+    Resynchronises on the first-byte flag: any second-byte without a first
+    byte is dropped (robustness against partial reads).  A trailing first
+    byte (incomplete packet) is left unconsumed.
+    """
+    arr = np.frombuffer(buf, dtype=np.uint8)
+    if arr.size == 0:
+        return (np.empty(0, np.int64),) * 3 + (0,)  # type: ignore[return-value]
+    # fast path: perfectly aligned stream of (first, second) pairs
+    n_pairs = arr.size // 2
+    a0 = arr[: 2 * n_pairs : 2]
+    a1 = arr[1 : 2 * n_pairs : 2]
+    if n_pairs and np.all(a0 & 0x80) and not np.any(a1 & 0x80):
+        consumed = 2 * n_pairs
+    else:  # resync scan
+        firsts = np.flatnonzero(arr & 0x80)
+        valid = firsts[firsts + 1 < arr.size]
+        valid = valid[(arr[valid + 1] & 0x80) == 0]
+        a0, a1 = arr[valid], arr[valid + 1]
+        consumed = int(valid[-1] + 2) if valid.size else (
+            int(firsts[-1]) if firsts.size else arr.size
+        )
+    ids = ((a0 >> 3) & 0x7).astype(np.int64)
+    markers = ((a0 >> 6) & 0x1).astype(np.int64)
+    values = (((a0 & 0x7).astype(np.int64)) << 7) | (a1 & 0x7F)
+    return ids, values, markers, consumed
+
+
+def is_timestamp(ids: np.ndarray, markers: np.ndarray) -> np.ndarray:
+    return (ids == TIMESTAMP_SENSOR_ID) & (markers == 1)
+
+
+def unwrap_timestamps(ts_values: np.ndarray, start_us: int = 0) -> np.ndarray:
+    """Reconstruct a monotonically increasing µs counter from 10-bit wraps.
+
+    The device timestamp is 10 bits (wraps every 1024 µs; frames are 50 µs
+    apart so wraps are unambiguous).
+    """
+    ts_values = np.asarray(ts_values, dtype=np.int64)
+    if ts_values.size == 0:
+        return ts_values
+    deltas = np.diff(ts_values) % 1024
+    out = np.empty_like(ts_values)
+    out[0] = start_us + ts_values[0] % 1024
+    out[1:] = out[0] + np.cumsum(deltas)
+    return out

@@ -1,0 +1,162 @@
+"""Sensor-module physics models (paper §III-A, Table I).
+
+Each PowerSensor3 sensor module carries a *pair* of channels:
+
+* a differential Hall current sensor (Melexis MLX91221-class): output is
+  mid-rail biased, ``V = vref/2 + sensitivity * I``, with datasheet rms
+  noise (115 mA_rms for the 10 A variant) and a per-device offset that the
+  one-time calibration removes;
+* an optically isolated voltage sensor (Broadcom ACPL-C87B-class) behind a
+  resistive divider, ``V_adc = divider_gain * V_rail``, with amplifier
+  noise referred to the rail and a per-device gain error that calibration
+  removes.
+
+The worst-case accuracy model reproduces Table I of the paper:
+
+    E_i = 3 sigma_hall + q_i / 2          (A)
+    E_u = 3 sigma_v    + q_u / 2          (V)
+    E_p = sqrt((U*E_i)^2 + (I*E_u)^2 + (E_i*E_u)^2)   (W)
+
+with q the ADC LSB referred to the measured quantity.  Constants below are
+chosen from the datasheet values quoted in the paper; the Table I benchmark
+(`benchmarks/table1_accuracy.py`) asserts the model lands on the paper's
+numbers (±4.2 W for the 12 V/10 A module, etc.).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .protocol import ADC_MAX
+
+VREF = 3.3
+
+
+@dataclass(frozen=True)
+class ModuleSpec:
+    """Static description of one sensor-module product."""
+
+    name: str
+    rail_volts: float  # nominal rail voltage (used for Table I worst case)
+    max_amps: float  # bidirectional full scale (±)
+    #: ADC full-scale rail voltage of the divider (V_rail at code 1023)
+    volt_full_scale: float
+    #: Hall sensor inherent noise, A rms, per raw ADC sample
+    hall_noise_arms: float
+    #: voltage-channel electrical noise referred to the rail, V rms
+    volt_noise_vrms: float
+    connector: str = "terminal"
+
+    # -- derived ---------------------------------------------------------
+    @property
+    def current_sensitivity(self) -> float:
+        """V per A at the ADC pin (mid-rail biased, ±max_amps spans vref)."""
+        return (VREF / 2.0) / self.max_amps
+
+    @property
+    def divider_gain(self) -> float:
+        """V_adc / V_rail for the voltage channel."""
+        return VREF / self.volt_full_scale
+
+    @property
+    def current_lsb(self) -> float:
+        return VREF / ADC_MAX / self.current_sensitivity
+
+    @property
+    def voltage_lsb(self) -> float:
+        return VREF / ADC_MAX / self.divider_gain
+
+    # -- Table I ---------------------------------------------------------
+    @property
+    def current_error(self) -> float:  # E_i, amps
+        return 3.0 * self.hall_noise_arms + self.current_lsb / 2.0
+
+    @property
+    def voltage_error(self) -> float:  # E_u, volts
+        return 3.0 * self.volt_noise_vrms + self.voltage_lsb / 2.0
+
+    @property
+    def power_error(self) -> float:  # E_p, watts (worst case: U_nom, I_max)
+        ei, eu = self.current_error, self.voltage_error
+        return math.sqrt(
+            (self.rail_volts * ei) ** 2
+            + (self.max_amps * eu) ** 2
+            + (ei * eu) ** 2
+        )
+
+
+#: the five module designs shipped with PowerSensor3 (paper §III-A), plus
+#: the 3.3 V slot variant of the 10 A module used in Table I.
+MODULE_CATALOG: dict[str, ModuleSpec] = {
+    "pcie8pin-20a": ModuleSpec(
+        "pcie8pin-20a", 12.0, 20.0, 16.5, 0.130, 6.85e-3, connector="pcie-8pin"
+    ),
+    "slot-10a-12v": ModuleSpec(
+        "slot-10a-12v", 12.0, 10.0, 16.5, 0.115, 6.85e-3, connector="riser"
+    ),
+    "slot-10a-3v3": ModuleSpec(
+        "slot-10a-3v3", 3.3, 10.0, 4.125, 0.115, 5.97e-3, connector="riser"
+    ),
+    "usb-c": ModuleSpec("usb-c", 20.0, 10.0, 26.4, 0.115, 5.23e-3, connector="usb-c"),
+    "gp-20a": ModuleSpec("gp-20a", 12.0, 20.0, 16.5, 0.130, 6.85e-3),
+    "hc-50a": ModuleSpec("hc-50a", 12.0, 50.0, 16.5, 0.300, 6.85e-3),
+}
+
+
+@dataclass
+class SensorModule:
+    """One physical module instance: spec + per-device manufacturing errors.
+
+    ``hall_offset_amps`` and ``divider_gain_error`` model the unit-to-unit
+    spread that the paper's one-time calibration procedure (§III-D) removes.
+    They are drawn once per instance from the given seed, so calibration
+    tests are deterministic.
+    """
+
+    spec: ModuleSpec
+    seed: int = 0
+    hall_offset_amps: float = field(init=False)
+    divider_gain_error: float = field(init=False)
+
+    def __post_init__(self) -> None:
+        rng = np.random.default_rng(self.seed + 0x5EED)
+        # MLX91221-class offset spread: up to ~2% FS; ACPL-C87B gain: ~±1%
+        self.hall_offset_amps = float(rng.uniform(-0.02, 0.02) * self.spec.max_amps)
+        self.divider_gain_error = float(rng.uniform(-0.01, 0.01))
+
+    # -- vectorised ADC-pin voltages --------------------------------------
+    def current_pin_volts(self, amps: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+        noise = rng.normal(0.0, self.spec.hall_noise_arms, size=np.shape(amps))
+        i_seen = np.asarray(amps) + self.hall_offset_amps + noise
+        return VREF / 2.0 + self.spec.current_sensitivity * i_seen
+
+    def voltage_pin_volts(self, volts: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+        noise = rng.normal(0.0, self.spec.volt_noise_vrms, size=np.shape(volts))
+        gain = self.spec.divider_gain * (1.0 + self.divider_gain_error)
+        return gain * (np.asarray(volts) + noise)
+
+
+def adc_quantize(pin_volts: np.ndarray) -> np.ndarray:
+    """10-bit ADC transfer function (per-sample; firmware averages after)."""
+    code = np.round(np.asarray(pin_volts) / VREF * ADC_MAX)
+    return np.clip(code, 0, ADC_MAX)
+
+
+def table1() -> list[dict[str, float | str]]:
+    """Reproduce Table I (theoretical worst-case accuracy per module)."""
+    rows = []
+    order = ["slot-10a-12v", "slot-10a-3v3", "usb-c", "pcie8pin-20a", "hc-50a"]
+    for key in order:
+        spec = MODULE_CATALOG[key]
+        rows.append(
+            {
+                "module": key,
+                "rail": f"{spec.rail_volts:g} V / {spec.max_amps:g} A",
+                "voltage_mV": spec.voltage_error * 1e3,
+                "current_A": spec.current_error,
+                "power_W": spec.power_error,
+            }
+        )
+    return rows

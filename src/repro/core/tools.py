@@ -1,0 +1,182 @@
+"""Command-line utilities shipped with PowerSensor3 (paper §III-C).
+
+* ``psrun``    — run a workload and report total energy + average power
+* ``psconfig`` — read/write sensor configuration values
+* ``psinfo``   — show config, latest measurements and total power
+* ``pstest``   — measure power/energy at increasing intervals
+
+Because the device is simulated, workloads are named entries from a small
+registry (constant load, GPU-kernel profile, a TPU training-step trace from
+`repro.power`, ...) instead of arbitrary subprocesses; `psrun` advances
+simulated time while the workload "executes".
+
+Usage (all through one entry point)::
+
+    python -m repro.core.tools psrun   --workload gpu-kernel --modules slot-10a-12v
+    python -m repro.core.tools psinfo  --modules slot-10a-12v,slot-10a-3v3
+    python -m repro.core.tools psconfig --sensor 0 [--offset X] [--gain Y]
+    python -m repro.core.tools pstest  --modules slot-10a-12v
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from . import dut
+from .firmware import SAMPLE_RATE_HZ, make_device
+from .host import Joules, PowerSensor, Watt, seconds
+
+
+# --------------------------------------------------------------------------- workloads
+def _workload(name: str):
+    if name == "constant":
+        return dut.ConstantLoad(volts=12.0, amps=8.0), 2.0
+    if name == "gpu-kernel":
+        g = dut.GpuKernelLoad()
+        return g, g.t_total
+    if name == "square":
+        return dut.SquareWaveLoad(), 0.2
+    if name == "tpu-train-step":
+        from repro.power.demo import demo_train_trace
+
+        times, watts = demo_train_trace()
+        return dut.TraceLoad(times_s=times, watts=watts, repeat=True), float(times[-1] * 10)
+    raise SystemExit(f"unknown workload '{name}'")
+
+
+def _make_ps(args) -> PowerSensor:
+    modules = args.modules.split(",") if args.modules else ["slot-10a-12v"]
+    load, _ = _workload(args.workload)
+    dev = make_device(modules, load, seed=args.seed)
+    return PowerSensor(dev)
+
+
+# --------------------------------------------------------------------------- psrun
+def psrun(args) -> None:
+    ps = _make_ps(args)
+    load, duration = _workload(args.workload)
+    if args.duration:
+        duration = args.duration
+    first = ps.read()
+    ps.run_for(duration)
+    second = ps.read()
+    j, s, w = Joules(first, second), seconds(first, second), Watt(first, second)
+    print(f"workload   : {args.workload}")
+    print(f"runtime    : {s:.3f} s")
+    print(f"energy     : {j:.3f} J")
+    print(f"avg power  : {w:.3f} W")
+    for p, jp in enumerate(second.consumed_joules):
+        if ps.configs[2 * p].enabled:
+            print(f"  pair {p} ({ps.configs[2*p].name:>12s}): {jp - first.consumed_joules[p]:.3f} J")
+
+
+# --------------------------------------------------------------------------- psinfo
+def psinfo(args) -> None:
+    ps = _make_ps(args)
+    ps.run_for(0.05)
+    st = ps.read()
+    print(f"firmware   : {ps.version}")
+    print(f"sample rate: {SAMPLE_RATE_HZ:.0f} Hz")
+    for sid, blk in enumerate(ps.configs):
+        if not blk.enabled:
+            continue
+        kind = "I" if blk.type_code == 0 else "U"
+        print(
+            f"sensor {sid} [{kind}] {blk.name:>12s}: vref={blk.vref:.2f} "
+            f"sens={blk.sensitivity:.4f} off={blk.offset_cal:+.4f} gain={blk.gain_cal:.4f}"
+        )
+    for p in range(len(st.instant_watts)):
+        if ps.configs[2 * p].enabled:
+            print(
+                f"pair {p}: {st.instant_volts[p]:7.3f} V  {st.instant_amps[p]:7.3f} A  "
+                f"{st.instant_watts[p]:8.3f} W"
+            )
+    print(f"total      : {st.total_watts:.3f} W")
+
+
+# --------------------------------------------------------------------------- psconfig
+def psconfig(args) -> None:
+    ps = _make_ps(args)
+    sid = args.sensor
+    blk = ps.get_config(sid)
+    changed = False
+    if args.offset is not None:
+        blk.offset_cal = args.offset
+        changed = True
+    if args.gain is not None:
+        blk.gain_cal = args.gain
+        changed = True
+    if args.name is not None:
+        blk.name = args.name
+        changed = True
+    if changed:
+        ps.set_config(sid, blk)
+        print(f"sensor {sid} updated")
+    print(blk)
+    if args.calibrate:
+        from .calibration import calibrate
+
+        pairs = {p: 12.0 for p in range(4) if ps.configs[2 * p].enabled}
+        for rep in calibrate(ps, pairs, n_samples=args.cal_samples):
+            print(
+                f"pair {rep.pair}: offset {rep.current_offset_amps:+.4f} A, "
+                f"gain {rep.voltage_gain:.5f}"
+            )
+
+
+# --------------------------------------------------------------------------- pstest
+def pstest(args) -> None:
+    """Measure at increasing intervals (the paper's accuracy-rig tool)."""
+    ps = _make_ps(args)
+    print("interval_s  samples  joules  avg_watt  min_w  max_w  std_w")
+    for interval in (0.01, 0.02, 0.05, 0.1, 0.2, 0.5, 1.0, 2.0):
+        # collect per-frame watts through a dump tap
+        rows: list[float] = []
+
+        class _Tap:
+            def write(self, chunk: str) -> None:
+                for line in chunk.splitlines():
+                    parts = line.split()
+                    if len(parts) == 5 and parts[0][0].isdigit():
+                        rows.append(float(parts[4]))
+
+            def flush(self) -> None: ...
+
+        ps.set_dump_file(_Tap())
+        a = ps.read()
+        ps.run_for(interval)
+        b = ps.read()
+        ps.set_dump_file(None)
+        w = np.asarray(rows) if rows else np.zeros(1)
+        print(
+            f"{interval:9.3f} {b.n_samples - a.n_samples:8d} {Joules(a, b):7.4f} "
+            f"{Watt(a, b):8.4f} {w.min():6.2f} {w.max():6.2f} {w.std():6.3f}"
+        )
+
+
+def main(argv=None) -> None:
+    parser = argparse.ArgumentParser(prog="repro.core.tools")
+    sub = parser.add_subparsers(dest="tool", required=True)
+    for name, fn in [("psrun", psrun), ("psinfo", psinfo), ("psconfig", psconfig), ("pstest", pstest)]:
+        p = sub.add_parser(name)
+        p.set_defaults(fn=fn)
+        p.add_argument("--modules", default="slot-10a-12v")
+        p.add_argument("--workload", default="constant")
+        p.add_argument("--seed", type=int, default=0)
+        if name == "psrun":
+            p.add_argument("--duration", type=float, default=None)
+        if name == "psconfig":
+            p.add_argument("--sensor", type=int, default=0)
+            p.add_argument("--offset", type=float, default=None)
+            p.add_argument("--gain", type=float, default=None)
+            p.add_argument("--name", default=None)
+            p.add_argument("--calibrate", action="store_true")
+            p.add_argument("--cal-samples", type=int, default=16_000)
+    args = parser.parse_args(argv)
+    args.fn(args)
+
+
+if __name__ == "__main__":
+    main()

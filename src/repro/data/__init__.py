@@ -1,0 +1,3 @@
+from .pipeline import PipelineStats, SyntheticTokens
+
+__all__ = ["PipelineStats", "SyntheticTokens"]

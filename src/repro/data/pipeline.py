@@ -1,0 +1,98 @@
+"""Deterministic synthetic token pipeline.
+
+Design goals (the properties fault-tolerance and tests rely on):
+
+* **O(1) random access**: batch `i` is a pure function of (seed, i) via a
+  counter-based Philox generator — resuming from a checkpoint reproduces
+  the exact uninterrupted stream (test_fault pins this bitwise).
+* **host sharding**: each host generates only its slice of the global
+  batch (`host_id`/`n_hosts`), the multi-host layout of a real cluster.
+* **document structure**: Zipf-distributed tokens packed into documents
+  separated by EOS — gives the loss some structure to learn (quickstart
+  shows a falling loss) while staying dependency-free.
+* serialisable state: `state_dict()` is just the next step index.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.configs import ArchConfig
+
+
+@dataclass
+class SyntheticTokens:
+    cfg: ArchConfig
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+    host_id: int = 0
+    n_hosts: int = 1
+    zipf_a: float = 1.3
+    mean_doc_len: int = 128
+    step: int = 0
+
+    def __post_init__(self) -> None:
+        assert self.global_batch % self.n_hosts == 0
+        self.host_batch = self.global_batch // self.n_hosts
+        # learnable structure: a fixed random bigram successor table;
+        # next-token = successor(cur) with prob 0.5 else zipf sample
+        rng = np.random.default_rng(np.random.Philox(key=self.seed))
+        self._succ = rng.integers(0, self.cfg.vocab_size, size=self.cfg.vocab_size)
+
+    # ------------------------------------------------------------------
+    def _rng_for(self, step: int) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.Philox(key=self.seed + 1, counter=[0, 0, self.host_id, step])
+        )
+
+    def batch_at(self, step: int) -> dict:
+        rng = self._rng_for(step)
+        b, s = self.host_batch, self.seq_len + 1
+        # zipf truncated to vocab
+        raw = rng.zipf(self.zipf_a, size=(b, s)).astype(np.int64)
+        base = raw % max(1, self.cfg.vocab_size - 2) + 2
+        use_succ = rng.random((b, s)) < 0.5
+        toks = base.copy()
+        toks[:, 1:] = np.where(
+            use_succ[:, 1:], self._succ[toks[:, :-1]] , base[:, 1:]
+        )
+        # EOS document boundaries
+        eos_mask = rng.random((b, s)) < 1.0 / self.mean_doc_len
+        toks = np.where(eos_mask, 1, toks)  # token 1 = EOS
+        batch = {"tokens": toks.astype(np.int32)}
+        if self.cfg.is_encdec:
+            batch["frames"] = rng.standard_normal(
+                (b, self.seq_len, self.cfg.d_model)
+            ).astype(np.float32)
+        return batch
+
+    # ------------------------------------------------------------------
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> dict:
+        batch = self.batch_at(self.step)
+        self.step += 1
+        return batch
+
+    def state_dict(self) -> dict:
+        return {"step": self.step, "seed": self.seed, "host_id": self.host_id}
+
+    def load_state_dict(self, state: dict) -> None:
+        assert state["seed"] == self.seed, "resuming with a different data seed"
+        self.step = int(state["step"])
+
+
+@dataclass
+class PipelineStats:
+    """Bandwidth/occupancy counters — the SSD-case-study analogue hooks
+    (`benchmarks/fig12_storage.py`) read these."""
+
+    bytes_produced: int = 0
+    batches: int = 0
+
+    def observe(self, batch: dict) -> None:
+        self.bytes_produced += sum(a.nbytes for a in batch.values())
+        self.batches += 1

@@ -1,0 +1,33 @@
+"""`repro.kernels` — Pallas TPU kernels for the compute hot spots.
+
+Each kernel ships three files: `<name>.py` (pl.pallas_call + BlockSpec),
+`ops.py` (jit'd public wrapper; interpret-mode on CPU), `ref.py` (pure-jnp
+oracle).  Tests sweep shapes/dtypes and assert_allclose vs the oracle.
+
+The beamformer is the paper's own case-study kernel (§V-A2) re-thought
+for the MXU; the others are the model zoo's hot spots (flash attention,
+flash-decode, Mamba-2 SSD scan, RWKV-6 WKV, fused RMSNorm).
+"""
+from .beamformer import beamform, beamform_ref, tuner_kernel_model
+from .decode_attention import decode_attention, decode_attention_ref
+from .flash_attention import attention_ref, flash_attention, flash_attention_custom
+from .rmsnorm import rmsnorm, rmsnorm_ref
+from .rwkv6 import wkv6, wkv6_ref
+from .ssm_scan import ssd_scan, ssd_scan_ref
+
+__all__ = [
+    "beamform",
+    "beamform_ref",
+    "tuner_kernel_model",
+    "decode_attention",
+    "decode_attention_ref",
+    "attention_ref",
+    "flash_attention",
+    "flash_attention_custom",
+    "rmsnorm",
+    "rmsnorm_ref",
+    "wkv6",
+    "wkv6_ref",
+    "ssd_scan",
+    "ssd_scan_ref",
+]

@@ -1,0 +1,4 @@
+from .ops import SEARCH_SPACE, beamform, tuner_kernel_model, variant_time_cost
+from .ref import beamform_ref
+
+__all__ = ["SEARCH_SPACE", "beamform", "beamform_ref", "tuner_kernel_model", "variant_time_cost"]

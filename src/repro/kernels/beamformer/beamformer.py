@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: complex GEMM (Tensor-Core Beamformer, MXU edition).
+
+Hardware adaptation (DESIGN.md §2.3): the CUDA original tiles WMMA
+fragments per warp; on TPU the unit is the 128×128 MXU pass, so the
+tunables become VMEM block shapes (bm, bn, bk) and the complex-arithmetic
+schedule:
+
+* ``karatsuba=False`` — 4 real matmuls (arbr, aibi, arbi, aibr)
+* ``karatsuba=True``  — 3-multiplication Gauss/Karatsuba form:
+      t1 = ar·br, t2 = ai·bi, t3 = (ar+ai)·(br+bi)
+      c_re = t1 − t2, c_im = t3 − t1 − t2
+  (−25 % MXU work for three extra VPU adds — a real tuning axis.)
+
+Grid = (M/bm, N/bn, K/bk), K innermost; f32 VMEM scratch accumulators
+persist across the sequential K steps and are flushed at the last one.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_re, a_im, b_re, b_im, c_re, c_im, acc_re, acc_im, *, karatsuba, n_k):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_re[...] = jnp.zeros_like(acc_re)
+        acc_im[...] = jnp.zeros_like(acc_im)
+
+    ar = a_re[...]
+    ai = a_im[...]
+    br = b_re[...]
+    bi = b_im[...]
+    f32 = jnp.float32
+    if karatsuba:
+        t1 = jnp.dot(ar, br, preferred_element_type=f32)
+        t2 = jnp.dot(ai, bi, preferred_element_type=f32)
+        t3 = jnp.dot((ar + ai), (br + bi), preferred_element_type=f32)
+        acc_re[...] += t1 - t2
+        acc_im[...] += t3 - t1 - t2
+    else:
+        acc_re[...] += jnp.dot(ar, br, preferred_element_type=f32) - jnp.dot(
+            ai, bi, preferred_element_type=f32
+        )
+        acc_im[...] += jnp.dot(ar, bi, preferred_element_type=f32) + jnp.dot(
+            ai, br, preferred_element_type=f32
+        )
+
+    @pl.when(ki == n_k - 1)
+    def _flush():
+        c_re[...] = acc_re[...].astype(c_re.dtype)
+        c_im[...] = acc_im[...].astype(c_im.dtype)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "karatsuba", "out_dtype", "interpret"),
+)
+def beamform_pallas(
+    a_re,
+    a_im,
+    b_re,
+    b_im,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+    karatsuba: bool = False,
+    out_dtype=jnp.float32,
+    interpret: bool = True,
+):
+    m, k = a_re.shape
+    k2, n = b_re.shape
+    assert k == k2
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    a_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+    b_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+    c_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+    out_shape = [
+        jax.ShapeDtypeStruct((m, n), out_dtype),
+        jax.ShapeDtypeStruct((m, n), out_dtype),
+    ]
+    return pl.pallas_call(
+        partial(_kernel, karatsuba=karatsuba, n_k=n_k),
+        grid=grid,
+        in_specs=[a_spec, a_spec, b_spec, b_spec],
+        out_specs=[c_spec, c_spec],
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),  # acc_re
+            pltpu.VMEM((bm, bn), jnp.float32),  # acc_im
+        ],
+        interpret=interpret,
+    )(a_re, a_im, b_re, b_im)

@@ -1,0 +1,87 @@
+"""jit'd public wrapper + TPU performance/energy model for the beamformer.
+
+`beamform()` dispatches Pallas (interpret on CPU) or the jnp reference.
+`variant_model()` is the (config → time, StepCost) hook consumed by
+`repro.power.tuner` — the Fig 8 reproduction tunes exactly these knobs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import interpret_default
+from repro.power.tpu_model import DvfsState, StepCost, TpuChipSpec
+
+from .beamformer import beamform_pallas
+from .ref import beamform_ref
+
+SEARCH_SPACE = {
+    "bm": (128, 256, 512),
+    "bn": (128, 256, 512),
+    "bk": (128, 256, 512),
+    "karatsuba": (False, True),
+    "double_buffer": (False, True),
+}
+
+
+def beamform(a_re, a_im, b_re, b_im, use_pallas: bool = True, **cfg):
+    if not use_pallas:
+        return beamform_ref(a_re, a_im, b_re, b_im)
+    cfg.setdefault("interpret", interpret_default())
+    cfg.pop("double_buffer", None)  # scheduling knob, no numeric effect
+    return beamform_pallas(a_re, a_im, b_re, b_im, **cfg)
+
+
+# --------------------------------------------------------------------------
+# modelled TPU cost (the autotuner's measurement target on this container)
+# --------------------------------------------------------------------------
+def variant_time_cost(cfg: dict, chip: TpuChipSpec, dvfs: DvfsState,
+                      m: int = 4096, n: int = 4096, k: int = 4096,
+                      dtype_bytes: int = 2):
+    """(time_s, StepCost) for one kernel launch under `cfg`.
+
+    Napkin model (documented, used by §Perf):
+    * useful FLOPs = 8·M·N·K (4 real matmuls) or 6·M·N·K (karatsuba);
+    * MXU efficiency = alignment(bm,bn,bk vs 128) × pipeline factor
+      (double buffering hides HBM latency: 0.92 vs 0.70);
+    * HBM traffic = A·(N/bn) + B·(M/bm) + C  (classic blocked-GEMM reuse);
+    * VMEM constraint: working set (a + b + 2×acc (+karatsuba temps))
+      must fit; violations fall off a cliff (0.25× efficiency).
+    """
+    bm, bn, bk = cfg["bm"], cfg["bn"], cfg["bk"]
+    kar = cfg.get("karatsuba", False)
+    dbuf = cfg.get("double_buffer", False)
+
+    matmul_flops = (6 if kar else 8) * m * n * k
+    useful_flops = 8 * m * n * k  # reported TFLOP/s uses the mathematical op count
+
+    align = 1.0
+    for b in (bm, bn, bk):
+        align *= 1.0 if b % chip.mxu_dim == 0 else 0.5
+    pipe = 0.92 if dbuf else 0.70
+
+    buffers = 2 if dbuf else 1
+    vmem = dtype_bytes * buffers * 2 * (bm * bk + bk * bn) + 4 * 2 * bm * bn
+    if kar:
+        vmem += dtype_bytes * (bm * bk + bk * bn)  # (ar+ai), (br+bi) temps
+    fits = vmem <= chip.vmem_bytes
+    eff = align * pipe * (1.0 if fits else 0.25)
+
+    hbm = dtype_bytes * 2 * (m * k * (n // bn) + k * n * (m // bm)) + 4 * 2 * m * n
+
+    t_compute = matmul_flops / (chip.peak_flops_bf16 * eff * dvfs.scale)
+    t_memory = hbm / chip.hbm_bw
+    time_s = max(t_compute, t_memory) if dbuf else t_compute + 0.6 * t_memory
+    return time_s, StepCost(flops=matmul_flops, hbm_bytes=hbm, ici_bytes=0.0)
+
+
+def tuner_kernel_model(m: int = 4096, n: int = 4096, k: int = 4096):
+    from functools import partial
+
+    from repro.power.tuner import KernelVariantModel
+
+    return KernelVariantModel(
+        name="tensor-core-beamformer",
+        useful_flops=8.0 * m * n * k,
+        model=partial(variant_time_cost, m=m, n=n, k=k),
+        search_space=SEARCH_SPACE,
+    )

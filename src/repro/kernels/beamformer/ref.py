@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the Tensor-Core Beamformer kernel.
+
+The paper's Kernel-Tuner case study (§V-A2): beamforming = complex matrix
+multiply C[M,N] = A[M,K] · B[K,N] with 16-bit IO, M=N=K=4096 — "complex
+matrix multiplications ... not supported by vendor libraries".
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def beamform_ref(a_re, a_im, b_re, b_im, out_dtype=jnp.float32):
+    """Complex GEMM on split re/im planes (bf16 in, f32 accumulate)."""
+    ar = a_re.astype(jnp.float32)
+    ai = a_im.astype(jnp.float32)
+    br = b_re.astype(jnp.float32)
+    bi = b_im.astype(jnp.float32)
+    c_re = ar @ br - ai @ bi
+    c_im = ar @ bi + ai @ br
+    return c_re.astype(out_dtype), c_im.astype(out_dtype)

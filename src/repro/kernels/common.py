@@ -1,0 +1,24 @@
+"""Shared kernel plumbing.
+
+All kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+VALIDATED in interpret mode on CPU (the container has no TPU).  The
+`interpret_default()` switch keeps `ops.py` wrappers runnable everywhere:
+real lowering on TPU, interpreter elsewhere.  `REPRO_PALLAS_INTERPRET=0/1`
+overrides.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def interpret_default() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b

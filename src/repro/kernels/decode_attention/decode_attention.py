@@ -1,0 +1,88 @@
+"""Pallas TPU flash-decode: one query token vs a long KV cache.
+
+The decode shape is memory-bound (the whole cache streams through HBM for
+8–128 queries), so the kernel's job is bandwidth efficiency: grid =
+(B, Hkv, S/bk) streams the cache in (bk, D) VMEM tiles; all `group`
+q-heads sharing one KV head are processed together as a (group, D) tile
+(one cache read feeds `group` MXU passes — the GQA bandwidth win).
+
+Out-of-range cache positions (>= kv_len) are masked via a (B,) lengths
+array carried in SMEM-like fashion (a (1,1) block per batch row).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc, m_ref, l_ref, *, scale, bk, n_k):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    kv_len = len_ref[0]
+
+    @pl.when(ki * bk < kv_len)
+    def _step():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)  # (group, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bk, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (group, bk)
+        pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < kv_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc[...] = acc[...] * corr[:, None] + jnp.dot(p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _flush():
+        o_ref[0, :, 0, :] = (acc[...] / l_ref[...][:, None]).astype(o_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention_pallas(q, k_cache, v_cache, kv_len, bk: int = 256, interpret: bool = True):
+    """q: (B,Hq,D); caches (B,S,Hkv,D); kv_len (B,) int32 -> (B,Hq,D)."""
+    b, hq, d = q.shape
+    _, s, hkv, _ = k_cache.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    bk = min(bk, s)
+    assert s % bk == 0
+    n_k = s // bk
+    grid = (b, hkv, n_k)
+
+    # view q as (B, Hkv, group, D) blocks
+    q4 = q.reshape(b, hkv, group, d).transpose(0, 2, 1, 3)  # (B, group, Hkv, D)
+    len_spec = pl.BlockSpec((1,), lambda bb, h, ki: (bb,))
+    q_spec = pl.BlockSpec((1, group, 1, d), lambda bb, h, ki: (bb, 0, h, 0))
+    kv_spec = pl.BlockSpec((1, bk, 1, d), lambda bb, h, ki: (bb, ki, h, 0))
+    o_spec = pl.BlockSpec((1, group, 1, d), lambda bb, h, ki: (bb, 0, h, 0))
+
+    out = pl.pallas_call(
+        partial(_kernel, scale=1.0 / (d**0.5), bk=bk, n_k=n_k),
+        grid=grid,
+        in_specs=[len_spec, q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((b, group, hkv, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, d), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), q4, k_cache, v_cache)
+    return out.transpose(0, 2, 1, 3).reshape(b, hq, d)

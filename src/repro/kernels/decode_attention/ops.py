@@ -1,0 +1,15 @@
+"""Public decode-attention op."""
+from __future__ import annotations
+
+from repro.kernels.common import interpret_default
+
+from .decode_attention import decode_attention_pallas
+from .ref import decode_attention_ref
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, bk: int = 256, use_pallas: bool = True):
+    if not use_pallas:
+        return decode_attention_ref(q, k_cache, v_cache, kv_len)
+    return decode_attention_pallas(
+        q, k_cache, v_cache, kv_len, bk=bk, interpret=interpret_default()
+    )

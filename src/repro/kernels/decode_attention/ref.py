@@ -1,0 +1,17 @@
+"""Oracle for flash-decode: single-token attention against a KV cache."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import full_attention
+
+
+def decode_attention_ref(q, k_cache, v_cache, kv_len):
+    """q: (B,Hq,D); caches: (B,S,Hkv,D); kv_len: (B,) valid prefix.
+
+    Returns (B,Hq,D).
+    """
+    o = full_attention(
+        q[:, None], k_cache, v_cache, causal=False, kv_len=kv_len
+    )
+    return o[:, 0]

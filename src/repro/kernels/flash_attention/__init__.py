@@ -1,0 +1,4 @@
+from .ops import flash_attention, flash_attention_custom
+from .ref import attention_ref
+
+__all__ = ["flash_attention", "flash_attention_custom", "attention_ref"]

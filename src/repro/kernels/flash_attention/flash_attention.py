@@ -1,0 +1,101 @@
+"""Pallas TPU flash attention (forward), causal + GQA.
+
+Grid = (B, Hq, Sq/bq, Sk/bk) with the KV dimension innermost: TPU grids
+execute sequentially, so f32 VMEM scratch (acc, running max m, running
+sum l) persists across KV steps — the classic online-softmax recurrence
+with one VMEM-resident (bq, D) accumulator per q tile.
+
+Block shapes are MXU-aligned by default (bq=bk=128, D up to 256 in one
+tile).  Fully-masked causal blocks are skipped via `pl.when` (the grid
+still visits them, but no MXU work is issued).
+
+Training integration: `ops.flash_attention_custom` wires this forward
+into `jax.custom_vjp` with a rematerialising XLA backward (flash-fwd +
+recompute-bwd — the memory-saving pattern; a fused Pallas backward is
+left as future work and documented in DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m_ref, l_ref, *, scale, causal, n_k, bq, bk):
+    ki = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    def _step():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)  # (bq, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bk, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc[...] = acc[...] * corr[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    if causal:
+        # skip kv blocks entirely above the causal diagonal for this q tile
+        pl.when((ki * bk) <= (qi * bq + bq - 1))(_step)
+    else:
+        _step()
+
+    @pl.when(ki == n_k - 1)
+    def _flush():
+        o_ref[0, :, 0, :] = (acc[...] / l_ref[...][:, None]).astype(o_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention_fwd(
+    q, k, v, causal: bool = True, bq: int = 128, bk: int = 128, interpret: bool = True
+):
+    """q: (B,Sq,Hq,D); k,v: (B,Sk,Hkv,D). Returns (B,Sq,Hq,D)."""
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0
+    n_k = sk // bk
+    grid = (b, hq, sq // bq, n_k)
+    scale = 1.0 / (d**0.5)
+
+    q_spec = pl.BlockSpec((1, bq, 1, d), lambda bb, h, qi, ki: (bb, qi, h, 0))
+    k_spec = pl.BlockSpec((1, bk, 1, d), lambda bb, h, qi, ki: (bb, ki, h // group, 0))
+    o_spec = pl.BlockSpec((1, bq, 1, d), lambda bb, h, qi, ki: (bb, qi, h, 0))
+
+    return pl.pallas_call(
+        partial(_kernel, scale=scale, causal=causal, n_k=n_k, bq=bq, bk=bk),
+        grid=grid,
+        in_specs=[q_spec, k_spec, k_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

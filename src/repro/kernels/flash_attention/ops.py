@@ -1,0 +1,45 @@
+"""Public flash-attention op: Pallas fwd + rematerialising custom-vjp bwd."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import interpret_default
+
+from .flash_attention import flash_attention_fwd
+from .ref import attention_ref
+
+
+def flash_attention(q, k, v, causal: bool = True, bq: int = 128, bk: int = 128,
+                    use_pallas: bool = True):
+    if not use_pallas:
+        return attention_ref(q, k, v, causal=causal)
+    return flash_attention_fwd(
+        q, k, v, causal=causal, bq=bq, bk=bk, interpret=interpret_default()
+    )
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def flash_attention_custom(q, k, v, causal: bool = True):
+    """Differentiable wrapper: Pallas forward, recompute-reference backward.
+
+    The backward recomputes attention with the jnp reference and
+    differentiates it — O(S²) compute in bwd but no stored probs, the
+    standard memory/compute trade (DESIGN.md §7).
+    """
+    return flash_attention(q, k, v, causal=causal)
+
+
+def _fwd(q, k, v, causal):
+    return flash_attention(q, k, v, causal=causal), (q, k, v)
+
+
+def _bwd(causal, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal), q, k, v)
+    return vjp(g)
+
+
+flash_attention_custom.defvjp(_fwd, _bwd)

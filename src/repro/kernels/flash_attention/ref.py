@@ -1,0 +1,11 @@
+"""Oracle for the flash-attention kernel: plain softmax attention (GQA)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import full_attention
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q: (B,Sq,Hq,D); k,v: (B,Sk,Hkv,D)."""
+    return full_attention(q, k, v, causal=causal)

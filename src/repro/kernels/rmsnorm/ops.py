@@ -1,0 +1,13 @@
+"""Public fused-RMSNorm op."""
+from __future__ import annotations
+
+from repro.kernels.common import interpret_default
+
+from .ref import rmsnorm_ref
+from .rmsnorm import rmsnorm_pallas
+
+
+def rmsnorm(x, w, eps: float = 1e-5, use_pallas: bool = True):
+    if not use_pallas:
+        return rmsnorm_ref(x, w, eps)
+    return rmsnorm_pallas(x, w, eps=eps, interpret=interpret_default())

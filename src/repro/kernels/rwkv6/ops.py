@@ -1,0 +1,13 @@
+"""Public RWKV-6 WKV op."""
+from __future__ import annotations
+
+from repro.kernels.common import interpret_default
+
+from .ref import wkv6_ref
+from .rwkv6 import wkv6_pallas
+
+
+def wkv6(r, k, v, log_decay, bonus, chunk: int = 32, use_pallas: bool = True):
+    if not use_pallas:
+        return wkv6_ref(r, k, v, log_decay, bonus)
+    return wkv6_pallas(r, k, v, log_decay, bonus, chunk=chunk, interpret=interpret_default())

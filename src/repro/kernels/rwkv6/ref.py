@@ -1,0 +1,14 @@
+"""Oracle for the RWKV-6 WKV kernel: the jnp chunked engine in channel-decay
+mode with the current-token bonus."""
+from __future__ import annotations
+
+from repro.models.linear_scan import chunked_linear_recurrence
+
+
+def wkv6_ref(r, k, v, log_decay, bonus, initial_state=None):
+    """r,k: (B,T,H,K); v: (B,T,H,K); log_decay: (B,T,H,K) (bounded, see
+    linear_scan.MAX_CHANNEL_DECAY); bonus u: (H,K)."""
+    return chunked_linear_recurrence(
+        r, k, v, log_decay, chunk=min(32, r.shape[1]), include_current=False,
+        bonus=bonus, initial_state=initial_state,
+    )

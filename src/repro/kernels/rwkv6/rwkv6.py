@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: RWKV-6 WKV recurrence (per-channel decay + bonus).
+
+Same VMEM-carried-state pattern as `ssm_scan`, but the decay is a
+(C, K) per-channel matrix, so the intra-chunk term uses the factored
+form (r·exp(L)) @ (k·exp(−L))ᵀ with the strict causal mask — exact under
+the caller's decay bound (linear_scan.MAX_CHANNEL_DECAY with C=32 keeps
+exp(−L) ≤ e^29, safely inside f32).  The bonus term u⊙(r·k)v is the
+diagonal the strict mask excludes.
+
+Grid = (B, H, T/C); state (K, K) f32 in VMEM scratch.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, fin_ref, st_ref, *, chunk, n_chunks):
+    # parameter order: inputs, then BOTH outputs (o, fin), then scratch (st)
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        st_ref[...] = jnp.zeros_like(st_ref)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)  # (C, K)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    w = w_ref[0, :, 0, :].astype(jnp.float32)  # (C, K) log decay ≤ 0
+    u = u_ref[0, :].astype(jnp.float32)  # (K,)
+
+    L = jnp.cumsum(w, axis=0)  # (C, K)
+    total = L[-1]  # (K,)
+    r_eff = r * jnp.exp(L - w)  # o_t reads S_{t-1}
+    k_eff = k * jnp.exp(-L)
+    scores = jnp.dot(r_eff, k_eff.T, preferred_element_type=jnp.float32)  # (C, C)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    scores = jnp.where(ii > jj, scores, 0.0)  # strict: diagonal via bonus
+    o = jnp.dot(scores, v, preferred_element_type=jnp.float32)
+    # bonus (current token)
+    o = o + jnp.sum(r * u[None, :] * k, axis=1, keepdims=True) * v
+    # inter-chunk
+    o = o + jnp.dot(r_eff, st_ref[...], preferred_element_type=jnp.float32)
+    o_ref[0, :, 0, :] = o.astype(o_ref.dtype)
+    # state update
+    k_carry = k * jnp.exp(total[None, :] - L)
+    st_ref[...] = st_ref[...] * jnp.exp(total)[:, None] + jnp.dot(
+        k_carry.T, v, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ci == n_chunks - 1)
+    def _flush():
+        fin_ref[0, 0, :, :] = st_ref[...]
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_pallas(r, k, v, log_decay, bonus, chunk: int = 32, interpret: bool = True):
+    """r,k,v,log_decay: (B,T,H,K); bonus: (H,K).
+
+    Returns (out (B,T,H,K), final_state (B,H,K,K))."""
+    b, t, h, kd = r.shape
+    chunk = min(chunk, t)
+    assert t % chunk == 0
+    n_chunks = t // chunk
+    grid = (b, h, n_chunks)
+
+    x_spec = pl.BlockSpec((1, chunk, 1, kd), lambda bb, hh, ci: (bb, ci, hh, 0))
+    u_spec = pl.BlockSpec((1, kd), lambda bb, hh, ci: (hh, 0))
+    fin_spec = pl.BlockSpec((1, 1, kd, kd), lambda bb, hh, ci: (bb, hh, 0, 0))
+
+    out, fin = pl.pallas_call(
+        partial(_kernel, chunk=chunk, n_chunks=n_chunks),
+        grid=grid,
+        in_specs=[x_spec, x_spec, x_spec, x_spec, u_spec],
+        out_specs=[x_spec, fin_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(r.shape, r.dtype),
+            jax.ShapeDtypeStruct((b, h, kd, kd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((kd, kd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, log_decay, bonus)
+    return out, fin

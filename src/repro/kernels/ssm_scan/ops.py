@@ -1,0 +1,13 @@
+"""Public SSD chunk-scan op."""
+from __future__ import annotations
+
+from repro.kernels.common import interpret_default
+
+from .ref import ssd_scan_ref
+from .ssm_scan import ssd_scan_pallas
+
+
+def ssd_scan(q, k, v, log_decay, chunk: int = 64, use_pallas: bool = True):
+    if not use_pallas:
+        return ssd_scan_ref(q, k, v, log_decay)
+    return ssd_scan_pallas(q, k, v, log_decay, chunk=chunk, interpret=interpret_default())

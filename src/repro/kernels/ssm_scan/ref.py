@@ -1,0 +1,14 @@
+"""Oracle for the SSD chunk-scan kernel: the jnp chunked engine (which is
+itself tested against a naive sequential recurrence)."""
+from __future__ import annotations
+
+from repro.models.linear_scan import chunked_linear_recurrence
+
+
+def ssd_scan_ref(q, k, v, log_decay, initial_state=None):
+    """Scalar-decay (Mamba-2) recurrence. q,k: (B,T,H,N); v: (B,T,H,P);
+    log_decay: (B,T,H). Returns (out, final_state)."""
+    return chunked_linear_recurrence(
+        q, k, v, log_decay, chunk=min(64, q.shape[1]), include_current=True,
+        initial_state=initial_state,
+    )

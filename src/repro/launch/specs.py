@@ -1,0 +1,147 @@
+"""Per-cell input specs: ShapeDtypeStruct stand-ins for every model input.
+
+`build_cell(arch, shape, mesh)` returns everything the dry-run needs to
+``jax.jit(fn, ...).lower(*args)`` one (architecture × input-shape × mesh)
+cell: the step callable, sharded ShapeDtypeStructs for params / optimizer
+state / batch / caches, and the out-shardings.  Nothing is allocated.
+
+Enc-dec split (whisper, DESIGN.md §4): an assigned seq_len S becomes
+T_enc = S/2 stub frame embeddings + T_dec = S/2 decoder tokens.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, RunConfig, SHAPES, ShapeSpec, get_config
+from repro.models import build_model
+from repro.optim import AdamWConfig, init_opt_state
+from repro.train.step import TrainStepConfig, make_train_step
+
+from . import mesh as mesh_lib
+
+
+def _sds(tree, shardings):
+    """Attach shardings to a matching eval_shape tree."""
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s), tree, shardings
+    )
+
+
+def batch_shapes(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    # train batches carry the shifted target (+1); prefill consumes s tokens
+    extra = 1 if shape.kind == "train" else 0
+    if cfg.is_encdec:
+        enc, dec = s // 2, s // 2
+        return {
+            "frames": jax.ShapeDtypeStruct((b, enc, cfg.d_model), jnp.float32),
+            "tokens": jax.ShapeDtypeStruct((b, dec + extra), jnp.int32),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((b, s + extra), jnp.int32)}
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    kind: str
+    fn: Callable
+    args: tuple
+    out_shardings: Any
+    model: Any
+    donate: tuple = ()
+    meta: dict | None = None
+
+
+def default_run_config(kind: str) -> RunConfig:
+    if kind == "train":
+        return RunConfig(remat="layer")
+    return RunConfig(remat="none")
+
+
+def input_specs(arch: str, shape_name: str, mesh, run: RunConfig | None = None) -> Cell:
+    """The dry-run entry point (the name the assignment asks for)."""
+    return build_cell(arch, shape_name, mesh, run)
+
+
+def build_cell(arch: str, shape_name: str, mesh, run: RunConfig | None = None) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        raise ValueError(f"{arch} is pure full-attention: long_500k is skipped (DESIGN.md §4)")
+    run = run or default_run_config(shape.kind)
+    if run.constrain_activations:
+        from repro.models import sharding_ctx
+
+        sharding_ctx.set_mesh(mesh)
+    model = build_model(cfg, run)
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if run.bf16_params:
+        params_shape = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(
+                l.shape, jnp.bfloat16 if jnp.issubdtype(l.dtype, jnp.floating) else l.dtype
+            ),
+            params_shape,
+        )
+    p_sh = mesh_lib.params_shardings(mesh, params_shape)
+    params_sds = _sds(params_shape, p_sh)
+
+    if shape.kind == "train":
+        opt_shape = jax.eval_shape(
+            lambda p: init_opt_state(p, master_weights=run.bf16_params), params_shape
+        )
+        o_sh = mesh_lib.opt_state_shardings(mesh, opt_shape)
+        opt_sds = _sds(opt_shape, o_sh)
+        bshape = batch_shapes(cfg, shape)
+        b_sh = mesh_lib.batch_shardings(mesh, bshape)
+        batch_sds = _sds(bshape, b_sh)
+        fn = make_train_step(model, AdamWConfig(), TrainStepConfig(run.accum_steps))
+        return Cell(
+            arch, shape, "train", fn, (params_sds, opt_sds, batch_sds),
+            out_shardings=(p_sh, o_sh, None), model=model, donate=(0, 1),
+        )
+
+    if shape.kind == "prefill":
+        bshape = batch_shapes(cfg, shape)
+        b_sh = mesh_lib.batch_shardings(mesh, bshape)
+        batch_sds = _sds(bshape, b_sh)
+
+        if cfg.is_encdec:
+            def fn(params, batch):
+                return model.prefill(params, batch)
+        else:
+            def fn(params, batch):
+                return model.prefill(params, batch["tokens"])
+
+        return Cell(
+            arch, shape, "prefill", fn, (params_sds, batch_sds),
+            out_shardings=None, model=model,
+        )
+
+    # decode: one new token against a seq_len cache
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.is_encdec:
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(b, max_len=s // 2, enc_len=s // 2)
+        )
+    else:
+        cache_shape = jax.eval_shape(lambda: model.init_cache(b, max_len=s))
+    c_sh = mesh_lib.cache_shardings(mesh, cache_shape, seq_shard=run.decode_seq_shard)
+    cache_sds = _sds(cache_shape, c_sh)
+    tok_sh = mesh_lib.batch_shardings(
+        mesh, {"t": jax.ShapeDtypeStruct((b,), jnp.int32)}
+    )["t"]
+    tok_sds = jax.ShapeDtypeStruct((b,), jnp.int32, sharding=tok_sh)
+
+    def fn(params, cache, token):
+        return model.decode_step(params, cache, token)
+
+    return Cell(
+        arch, shape, "decode", fn, (params_sds, cache_sds, tok_sds),
+        out_shardings=(None, c_sh), model=model, donate=(1,),
+    )

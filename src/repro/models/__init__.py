@@ -1,0 +1,6 @@
+"""`repro.models` — the unified model zoo (DESIGN.md §3)."""
+from .encdec import EncDecLM
+from .registry import build_model
+from .transformer import DecoderLM
+
+__all__ = ["EncDecLM", "DecoderLM", "build_model"]

@@ -1,0 +1,229 @@
+"""Core transformer layers: norms, RoPE, GQA attention (chunked), MLP.
+
+Attention ships two XLA implementations (the Pallas kernels in
+`repro.kernels` are TPU-target; the XLA paths are what the dry-run
+compiles — see DESIGN.md §3):
+
+* ``full``    — naive O(S²) materialised scores; fine for short seq.
+* ``chunked`` — q-chunked with online (streamed) softmax over kv blocks:
+  peak scores memory O(B·H·q_chunk·kv_chunk); the compile-safe default for
+  32k-sequence cells.
+
+Both are causal-aware and GQA-native (n_q heads grouped over n_kv heads).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+NEG_INF = -1e30
+
+
+def _gqa_scores(q, k):
+    """q: (B,Sq,Hq,D), k: (B,Sk,Hkv,D) -> scores (B,Hq,Sq,Sk)."""
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, sq, hkv, group, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32))
+    return s.reshape(b, hkv * group, sq, k.shape[1])
+
+
+def _gqa_combine(probs, v):
+    """probs: (B,Hq,Sq,Sk), v: (B,Sk,Hkv,D) -> (B,Sq,Hq,D)."""
+    b, hq, sq, sk = probs.shape
+    hkv = v.shape[2]
+    group = hq // hkv
+    pg = probs.reshape(b, hkv, group, sq, sk)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", pg, v.astype(jnp.float32))
+    return o.reshape(b, sq, hq, v.shape[3])
+
+
+def full_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    q_offset: int | jax.Array = 0,
+    kv_len: jax.Array | None = None,
+) -> jax.Array:
+    """Naive attention. q: (B,Sq,Hq,D); k,v: (B,Sk,Hkv,D).
+
+    ``q_offset``: absolute position of q[0] (decode: cache length).
+    ``kv_len``: valid kv prefix length (masks cache tail), scalar or (B,).
+    """
+    d = q.shape[-1]
+    scores = _gqa_scores(q, k) / jnp.sqrt(d).astype(jnp.float32)
+    sq, sk = scores.shape[-2], scores.shape[-1]
+    q_pos = jnp.arange(sq) + q_offset
+    k_pos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    mask = jnp.broadcast_to(mask, scores.shape[:2] + (sq, sk))
+    if kv_len is not None:
+        valid = k_pos[None, :] < jnp.reshape(kv_len, (-1, 1))  # (B, Sk)
+        mask &= valid[:, None, None, :]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _gqa_combine(probs, v).astype(q.dtype)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    unroll: int = 1,
+    skip_masked_blocks: bool = False,
+) -> jax.Array:
+    """q-chunked attention with streamed (online) softmax over kv blocks.
+
+    Peak live scores tensor: (B, Hq, q_chunk, kv_chunk) — independent of
+    sequence length.  ``skip_masked_blocks`` additionally halves causal
+    compute by not visiting fully-masked kv blocks (hillclimb lever; the
+    skip uses a `fori_loop` bound per q chunk, keeping HLO compact).
+    """
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    assert s % q_chunk == 0, (s, q_chunk)
+    assert s % kv_chunk == 0, (s, kv_chunk)
+    n_q = s // q_chunk
+    n_kv = s // kv_chunk
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+
+    qc = q.reshape(b, n_q, q_chunk, hq, d).transpose(1, 0, 2, 3, 4)  # (nq,B,qc,Hq,D)
+    kc = k.reshape(b, n_kv, kv_chunk, hkv, d)
+    vc = v.reshape(b, n_kv, kv_chunk, hkv, d)
+
+    def q_block(qi, q_blk):
+        # online softmax accumulation over kv blocks
+        def kv_step(carry, kj):
+            acc, m, l = carry
+            k_blk = jax.lax.dynamic_index_in_dim(kc, kj, axis=1, keepdims=False)
+            v_blk = jax.lax.dynamic_index_in_dim(vc, kj, axis=1, keepdims=False)
+            s_blk = _gqa_scores(q_blk, k_blk) * scale  # (B,Hq,qc,kc)
+            if causal:
+                q_pos = qi * q_chunk + jnp.arange(q_chunk)
+                k_pos = kj * kv_chunk + jnp.arange(kv_chunk)
+                mask = k_pos[None, :] <= q_pos[:, None]
+                s_blk = jnp.where(mask[None, None], s_blk, NEG_INF)
+            m_new = jnp.maximum(m, s_blk.max(axis=-1))
+            p = jnp.exp(s_blk - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = _gqa_combine(p, v_blk)  # (B,qc,Hq,D)
+            acc_new = acc * corr[..., None] + pv.transpose(0, 2, 1, 3)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, hq, q_chunk, d), jnp.float32)
+        m0 = jnp.full((b, hq, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hq, q_chunk), jnp.float32)
+        n_vis = n_kv
+        if skip_masked_blocks and causal and isinstance(qi, int):
+            # static triangular schedule: only kv blocks overlapping the
+            # causal triangle of this q chunk (differentiable: static length)
+            n_vis = min(n_kv, ((qi + 1) * q_chunk + kv_chunk - 1) // kv_chunk)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0), jnp.arange(n_vis), unroll=unroll
+        )
+        out = acc / l[..., None]
+        return out.transpose(0, 2, 1, 3)  # (B,qc,Hq,D)
+
+    if skip_masked_blocks and causal:
+        # python loop: qi static per block -> per-block static kv lengths
+        outs = jnp.stack([q_block(i, qc[i]) for i in range(n_q)])
+    else:
+        def scan_body(_, args):
+            qi, q_blk = args
+            return None, q_block(qi, q_blk)
+
+        _, outs = jax.lax.scan(
+            scan_body, None, (jnp.arange(n_q), qc), unroll=unroll
+        )  # (nq,B,qc,Hq,D)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, hq, d).astype(q.dtype)
+
+
+def attention(q, k, v, impl: str = "chunked", **kw):
+    if impl == "full":
+        kw.pop("q_chunk", None)
+        kw.pop("kv_chunk", None)
+        kw.pop("unroll", None)
+        kw.pop("skip_masked_blocks", None)
+        return full_attention(q, k, v, **kw)
+    if impl == "chunked":
+        kw.pop("q_offset", None)
+        kw.pop("kv_len", None)
+        return chunked_attention(q, k, v, **kw)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def mlp_swiglu(x, wi, wg, wo, constrain: bool = False):
+    h = jnp.einsum("bsd,df->bsf", x, wi.astype(x.dtype))
+    g = jnp.einsum("bsd,df->bsf", x, wg.astype(x.dtype))
+    hg = jax.nn.silu(g) * h
+    if constrain:
+        from . import sharding_ctx as sc
+
+        hg = sc.constrain(hg, sc.dp_axes(), None, "model")
+    return jnp.einsum("bsf,fd->bsd", hg, wo.astype(x.dtype))
+
+
+def mlp_gelu(x, wi, wo, b1=None, b2=None):
+    h = jnp.einsum("bsd,df->bsf", x, wi.astype(x.dtype))
+    if b1 is not None:
+        h = h + b1.astype(x.dtype)
+    h = jax.nn.gelu(h)
+    out = jnp.einsum("bsf,fd->bsd", h, wo.astype(x.dtype))
+    if b2 is not None:
+        out = out + b2.astype(x.dtype)
+    return out

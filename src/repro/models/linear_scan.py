@@ -1,0 +1,177 @@
+"""Generic chunked linear-recurrence engine (the TPU-native adaptation of
+SSM/RWKV recurrences — DESIGN.md hardware-adaptation notes).
+
+Both Mamba-2 (SSD) and RWKV-6 are instances of the gated linear
+recurrence
+
+    S_t = diag(d_t) · S_{t-1} + k_tᵀ v_t          S ∈ R^{K×V} per head
+    o_t = q_t · S_{t-1 or t}  (+ u ⊙ (q_t·k_t) v_t   bonus, RWKV)
+
+with data-dependent decay d_t.  A naive `lax.scan` over time is a long
+chain of tiny ops — hostile to the MXU.  The **chunked** form processes C
+tokens at a time with dense matmuls (intra-chunk attention-like term +
+inter-chunk state carry): exactly the restructuring TPUs want.  The Pallas
+kernels in `repro.kernels` implement the same algorithm with explicit VMEM
+tiling; this module is their jnp oracle-of-record.
+
+Two decay modes, selected by `log_decay` rank:
+
+* **scalar** (B,T,H) — Mamba-2's per-head decay.  Intra-chunk scores use
+  the pairwise difference matrix ``exp(L_i − L_j)`` (Mamba-2's "segsum"),
+  which is ≤ 1 on the causal triangle → numerically exact for any decay.
+* **channel** (B,T,H,K) — RWKV-6's per-channel decay.  The difference
+  enters *inside* the K contraction, so the factored form
+  ``(q·exp(L)) @ (k·exp(−L))ᵀ`` is used; ``exp(−L)`` grows with cumulative
+  decay, so callers must bound per-step log-decay ≥ −MAX_CHANNEL_DECAY
+  (the RWKV block clamps; with chunk=32 the intermediate stays ≤ e^29).
+
+Shapes: q,k: (B,T,H,K); v: (B,T,H,V). Output (B,T,H,V).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: channel-mode per-step log-decay bound (see module docstring)
+MAX_CHANNEL_DECAY = 0.9
+DEFAULT_CHUNK = 32
+
+
+def chunked_linear_recurrence(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    log_decay: jax.Array,
+    chunk: int = DEFAULT_CHUNK,
+    include_current: bool = True,
+    bonus: jax.Array | None = None,
+    initial_state: jax.Array | None = None,
+    unroll: int = 1,
+):
+    """Returns (out (B,T,H,V), final_state (B,H,K,V)).
+
+    ``include_current``: o_t reads S_t (Mamba) vs S_{t-1} (RWKV).
+    ``bonus``: u (H, K) — RWKV's current-token term
+    ``o_t += (q_t ⊙ u · k_t) v_t``.
+    """
+    b, t, h, kdim = q.shape
+    vdim = v.shape[-1]
+    scalar_decay = log_decay.ndim == 3
+    t_orig = t
+    if t % chunk:
+        # pad to a chunk multiple: k=v=0 adds nothing to the state,
+        # log_decay=0 leaves it untouched; padded outputs are sliced off
+        pad = chunk - t % chunk
+        padt = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v, log_decay = padt(q), padt(k), padt(v), padt(log_decay)
+        t = t + pad
+    n = t // chunk
+
+    f32 = jnp.float32
+    qc = q.reshape(b, n, chunk, h, kdim).astype(f32)
+    kc = k.reshape(b, n, chunk, h, kdim).astype(f32)
+    vc = v.reshape(b, n, chunk, h, vdim).astype(f32)
+
+    ii = jnp.arange(chunk)
+    mask = (ii[:, None] >= ii[None, :]) if include_current else (ii[:, None] > ii[None, :])
+
+    if scalar_decay:
+        wc = log_decay.reshape(b, n, chunk, h).astype(f32)
+        L = jnp.cumsum(wc, axis=2)  # (b,n,C,h)
+        total = L[:, :, -1]  # (b,n,h)
+        Li = L if include_current else L - wc
+        # pairwise differences, ≤ 0 on the masked triangle → exp ≤ 1
+        diff = Li[:, :, :, None, :] - L[:, :, None, :, :]  # (b,n,Ci,Cj,h)
+        decay_ij = jnp.exp(jnp.where(mask[None, None, :, :, None], diff, -jnp.inf))
+        qk = jnp.einsum("bnihk,bnjhk->bnijh", qc, kc)
+        out_intra = jnp.einsum("bnijh,bnijh,bnjhv->bnihv", qk, decay_ij, vc)
+        q_eff = qc * jnp.exp(Li)[..., None]
+        k_carry = kc * jnp.exp(total[:, :, None] - L)[..., None]
+        decay_state = total[..., None]  # broadcast over K
+    else:
+        wc = log_decay.reshape(b, n, chunk, h, kdim).astype(f32)
+        L = jnp.cumsum(wc, axis=2)  # (b,n,C,h,K)
+        total = L[:, :, -1]  # (b,n,h,K)
+        Li = L if include_current else L - wc
+        q_eff = qc * jnp.exp(Li)
+        k_eff = kc * jnp.exp(-L)  # caller bounds decay: ≤ e^(C·MAX_CHANNEL_DECAY)
+        scores = jnp.einsum("bnihk,bnjhk->bnhij", q_eff, k_eff)
+        scores = jnp.where(mask[None, None, None], scores, 0.0)
+        out_intra = jnp.einsum("bnhij,bnjhv->bnihv", scores, vc)
+        k_carry = kc * jnp.exp(total[:, :, None] - L)
+        decay_state = total  # (b,n,h,K)
+
+    if bonus is not None:
+        ub = bonus.astype(f32)  # (h, K)
+        qkb = jnp.einsum("bnihk,hk,bnihk->bnih", qc, ub, kc)
+        out_intra = out_intra + qkb[..., None] * vc
+
+    chunk_state = jnp.einsum("bnjhk,bnjhv->bnhkv", k_carry, vc)
+
+    s0 = (
+        initial_state.astype(f32)
+        if initial_state is not None
+        else jnp.zeros((b, h, kdim, vdim), f32)
+    )
+
+    def body(state, xs):
+        q_eff_n, decay_n, cs_n = xs  # (b,C,h,K), (b,h,K), (b,h,K,V)
+        o_inter = jnp.einsum("bihk,bhkv->bihv", q_eff_n, state)
+        state_new = state * jnp.exp(decay_n)[..., None] + cs_n
+        return state_new, o_inter
+
+    xs = (
+        q_eff.transpose(1, 0, 2, 3, 4),
+        jnp.broadcast_to(decay_state, (b, n, h, kdim)).transpose(1, 0, 2, 3),
+        chunk_state.transpose(1, 0, 2, 3, 4),
+    )
+    final_state, o_inter = jax.lax.scan(body, s0, xs, unroll=unroll)
+    o_inter = o_inter.transpose(1, 0, 2, 3, 4)  # (b,n,C,h,V)
+
+    out = (out_intra + o_inter).reshape(b, t, h, vdim)[:, :t_orig]
+    return out.astype(q.dtype), final_state
+
+
+def recurrence_step(
+    q: jax.Array,  # (B, H, K)
+    k: jax.Array,
+    v: jax.Array,  # (B, H, V)
+    log_decay: jax.Array,  # (B, H) or (B, H, K)
+    state: jax.Array,  # (B, H, K, V)
+    include_current: bool = True,
+    bonus: jax.Array | None = None,
+):
+    """Single-token decode step. Returns (out (B,H,V), new_state)."""
+    f32 = jnp.float32
+    qf, kf, vf = (x.astype(f32) for x in (q, k, v))
+    wf = log_decay.astype(f32)
+    if wf.ndim == 2:
+        wf = wf[..., None]  # broadcast scalar decay over K
+    kv = kf[..., :, None] * vf[..., None, :]  # (B,H,K,V)
+    new_state = state.astype(f32) * jnp.exp(wf)[..., None] + kv
+    read = new_state if include_current else state.astype(f32)
+    out = jnp.einsum("bhk,bhkv->bhv", qf, read)
+    if bonus is not None:
+        qk = jnp.einsum("bhk,hk,bhk->bh", qf, bonus.astype(f32), kf)
+        out = out + qk[..., None] * vf
+    return out.astype(q.dtype), new_state
+
+
+def naive_linear_recurrence(q, k, v, log_decay, include_current=True, bonus=None,
+                            initial_state=None):
+    """O(T) sequential oracle (tests compare the chunked form against this)."""
+    b, t, h, kdim = q.shape
+    vdim = v.shape[-1]
+    s = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((b, h, kdim, vdim), jnp.float32)
+    )
+    outs = []
+    for i in range(t):
+        o, s = recurrence_step(
+            q[:, i], k[:, i], v[:, i], log_decay[:, i], s,
+            include_current=include_current, bonus=bonus,
+        )
+        outs.append(o)
+    return jnp.stack(outs, axis=1).astype(q.dtype), s

@@ -1,0 +1,68 @@
+"""Parameter initialisation + pytree utilities (no flax — plain pytrees).
+
+Params are nested dicts of jnp arrays.  Layer stacks carry a leading
+``n_layers`` dim so the forward pass can `lax.scan` over them (O(1) HLO
+size — essential for compiling 64-layer models in the dry-run).
+
+All init functions are shaped so they can run under `jax.eval_shape`
+(the dry-run never allocates real parameters).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict pytree
+
+
+def truncated_normal(key, shape, std: float, dtype=jnp.float32):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    """Fan-in scaled init (the default for all projection matrices)."""
+    return truncated_normal(key, (d_in, d_out), std=1.0 / math.sqrt(d_in), dtype=dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    # 1/sqrt(d): keeps tied-head logits O(1) at init
+    return truncated_normal(key, (vocab, d), std=1.0 / math.sqrt(d), dtype=dtype)
+
+
+def stack_layers(init_one: Callable[[jax.Array], Params], key, n: int) -> Params:
+    """Init n layers and stack each leaf along a new leading axis.
+
+    Uses vmap so it stays cheap under eval_shape.
+    """
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_one)(keys)
+
+
+def param_count(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def param_bytes(params: Params) -> int:
+    return sum(int(x.size * x.dtype.itemsize) for x in jax.tree.leaves(params))
+
+
+def cast_tree(params: Params, dtype) -> Params:
+    """Cast floating-point leaves (cast-at-use mixed precision)."""
+    def _cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(_cast, params)
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def tree_zeros_like(tree: Params) -> Params:
+    return jax.tree.map(jnp.zeros_like, tree)

@@ -1,0 +1,14 @@
+"""Model registry: build the right model class from an ArchConfig."""
+from __future__ import annotations
+
+from repro.configs import ArchConfig, RunConfig
+
+from .encdec import EncDecLM
+from .transformer import DecoderLM
+
+
+def build_model(cfg: ArchConfig, run: RunConfig | None = None):
+    run = run or RunConfig()
+    if cfg.is_encdec:
+        return EncDecLM(cfg, run)
+    return DecoderLM(cfg, run)

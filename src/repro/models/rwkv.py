@@ -1,0 +1,175 @@
+"""RWKV-6 ("Finch") block — data-dependent decay, attention-free.
+
+Per layer: a time-mix block (the WKV recurrence) and a channel-mix block.
+
+Time-mix (faithful structure, simplified token-shift interpolation):
+
+    xs        = token_shift(x)                  (previous token)
+    x_i       = lerp(x, xs, µ_i)   i ∈ {r,k,v,g,w}   (static µ per channel)
+    w         = −exp(w0 + tanh(x_w A) B)        (data-dependent log decay,
+                 clamped to [−MAX_CHANNEL_DECAY, −1e−4] — see linear_scan)
+    r,k,v,g   = projections; heads of 64
+    wkv       = linear recurrence, o_t = r_t·S_{t−1} + u ⊙ (r_t·k_t) v_t
+    out       = (per-head RMSNorm(wkv) ⊙ SiLU(g)) W_o
+
+Channel-mix: k = ReLU(x_k W_k)²; out = σ(x_r W_r) ⊙ (k W_v).
+
+Deviation from reference RWKV-6: the µ interpolators are static per
+channel (reference uses an additional data-dependent LoRA on all five);
+the decay LoRA — the architecturally load-bearing novelty of v6 — is kept.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rmsnorm
+from .linear_scan import MAX_CHANNEL_DECAY, chunked_linear_recurrence, recurrence_step
+from .params import dense_init
+
+HEAD_K = 64
+DECAY_LORA = 64
+
+
+def init_time_mix(key, d: int):
+    h = d // HEAD_K
+    ks = jax.random.split(key, 10)
+    return {
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),  # r,k,v,g,w interpolators
+        "w0": -2.0 * jnp.ones((d,), jnp.float32),
+        "wA": dense_init(ks[0], d, DECAY_LORA),
+        "wB": 0.1 * dense_init(ks[1], DECAY_LORA, d),
+        "wr": dense_init(ks[2], d, d),
+        "wk": dense_init(ks[3], d, d),
+        "wv": dense_init(ks[4], d, d),
+        "wg": dense_init(ks[5], d, d),
+        "wo": dense_init(ks[6], d, d),
+        "u": 0.1 * jax.random.normal(ks[7], (h, HEAD_K), jnp.float32),
+        "ln_x": jnp.ones((d,), jnp.float32),
+    }
+
+
+def init_channel_mix(key, d: int, ff: int):
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": 0.5 * jnp.ones((2, d), jnp.float32),  # r,k
+        "wr": dense_init(ks[0], d, d),
+        "wk": dense_init(ks[1], d, ff),
+        "wv": dense_init(ks[2], ff, d),
+    }
+
+
+def _lerp(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def _log_decay(xw, p):
+    """Data-dependent per-channel log decay, bounded for the chunked engine."""
+    lora = jnp.einsum(
+        "btk,kd->btd",
+        jnp.tanh(jnp.einsum("btd,dk->btk", xw, p["wA"].astype(xw.dtype))),
+        p["wB"].astype(xw.dtype),
+    )
+    w = -jnp.exp(p["w0"].astype(jnp.float32) + lora.astype(jnp.float32))
+    return jnp.clip(w, -MAX_CHANNEL_DECAY, -1e-4)
+
+
+def time_mix(x, xs, p, chunk: int = 32, initial_state=None, unroll: int = 1):
+    """x: (B,T,d); xs: token-shifted x. Returns (out, final_wkv_state)."""
+    b, t, d = x.shape
+    h = d // HEAD_K
+    dtype = x.dtype
+    xr, xk, xv, xg, xw = (_lerp(x, xs, p["mu"][i]) for i in range(5))
+    r = jnp.einsum("btd,de->bte", xr, p["wr"].astype(dtype)).reshape(b, t, h, HEAD_K)
+    k = jnp.einsum("btd,de->bte", xk, p["wk"].astype(dtype)).reshape(b, t, h, HEAD_K)
+    v = jnp.einsum("btd,de->bte", xv, p["wv"].astype(dtype)).reshape(b, t, h, HEAD_K)
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, p["wg"].astype(dtype)))
+    w = _log_decay(xw, p).reshape(b, t, h, HEAD_K)
+    o, s_final = chunked_linear_recurrence(
+        r, k, v, w, chunk=chunk, include_current=False, bonus=p["u"],
+        initial_state=initial_state, unroll=unroll,
+    )
+    o = o.reshape(b, t, d)
+    # per-head group norm (RWKV uses GroupNorm(h)); rms per head + scale
+    o = rmsnorm(o.reshape(b, t, h, HEAD_K), jnp.ones((HEAD_K,), jnp.float32)).reshape(b, t, d)
+    o = o * p["ln_x"].astype(dtype) * g
+    return jnp.einsum("btd,de->bte", o, p["wo"].astype(dtype)), s_final
+
+
+def time_mix_step(x, x_prev, p, state):
+    """Decode step. x: (B,d); state (B,H,K,K)."""
+    b, d = x.shape
+    h = d // HEAD_K
+    dtype = x.dtype
+    xr, xk, xv, xg, xw = (_lerp(x, x_prev, p["mu"][i]) for i in range(5))
+    r = (xr @ p["wr"].astype(dtype)).reshape(b, h, HEAD_K)
+    k = (xk @ p["wk"].astype(dtype)).reshape(b, h, HEAD_K)
+    v = (xv @ p["wv"].astype(dtype)).reshape(b, h, HEAD_K)
+    g = jax.nn.silu(xg @ p["wg"].astype(dtype))
+    w = _log_decay(xw[:, None], p)[:, 0].reshape(b, h, HEAD_K)
+    o, s_new = recurrence_step(r, k, v, w, state, include_current=False, bonus=p["u"])
+    o = o.reshape(b, d)
+    o = rmsnorm(o.reshape(b, h, HEAD_K), jnp.ones((HEAD_K,), jnp.float32)).reshape(b, d)
+    o = o * p["ln_x"].astype(dtype) * g
+    return o @ p["wo"].astype(dtype), s_new
+
+
+def channel_mix(x, xs, p):
+    dtype = x.dtype
+    xr = _lerp(x, xs, p["mu"][0])
+    xk = _lerp(x, xs, p["mu"][1])
+    k = jnp.square(jax.nn.relu(jnp.einsum("...d,df->...f", xk, p["wk"].astype(dtype))))
+    r = jax.nn.sigmoid(jnp.einsum("...d,de->...e", xr, p["wr"].astype(dtype)))
+    return r * jnp.einsum("...f,fd->...d", k, p["wv"].astype(dtype))
+
+
+def token_shift(x):
+    """(B,T,d): position t sees x_{t-1}; position 0 sees zeros."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def init_rwkv_layer(key, d: int, ff: int):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.ones((d,), jnp.float32),
+        "tm": init_time_mix(k1, d),
+        "ln2": jnp.ones((d,), jnp.float32),
+        "cm": init_channel_mix(k2, d, ff),
+    }
+
+
+def rwkv_layer(x, p, chunk: int = 32, eps: float = 1e-5, unroll: int = 1):
+    """Full train/prefill layer. Returns (y, cache)."""
+    h1 = rmsnorm(x, p["ln1"], eps)
+    tm_out, s_final = time_mix(h1, token_shift(h1), p["tm"], chunk=chunk, unroll=unroll)
+    x = x + tm_out
+    h2 = rmsnorm(x, p["ln2"], eps)
+    x = x + channel_mix(h2, token_shift(h2), p["cm"])
+    cache = {
+        "shift_tm": h1[:, -1],  # (B,d) last normed input of time-mix
+        "shift_cm": h2[:, -1],
+        "wkv": s_final,
+    }
+    return x, cache
+
+
+def rwkv_layer_decode(x, p, cache, eps: float = 1e-5):
+    """x: (B,d)."""
+    dt = x.dtype  # keep the scan carry dtype stable across mixed-dtype caches
+    h1 = rmsnorm(x, p["ln1"], eps)
+    tm_out, s_new = time_mix_step(h1, cache["shift_tm"].astype(dt), p["tm"], cache["wkv"])
+    x = (x + tm_out).astype(dt)
+    h2 = rmsnorm(x, p["ln2"], eps)
+    x = (x + channel_mix(h2[:, None], cache["shift_cm"].astype(dt)[:, None], p["cm"])[:, 0]).astype(dt)
+    return x, {"shift_tm": h1.astype(cache["shift_tm"].dtype),
+               "shift_cm": h2.astype(cache["shift_cm"].dtype),
+               "wkv": s_new}
+
+
+def init_rwkv_cache(batch: int, d: int, dtype=jnp.float32):
+    h = d // HEAD_K
+    return {
+        "shift_tm": jnp.zeros((batch, d), dtype),
+        "shift_cm": jnp.zeros((batch, d), dtype),
+        "wkv": jnp.zeros((batch, h, HEAD_K, HEAD_K), jnp.float32),
+    }

@@ -1,0 +1,70 @@
+"""Optional activation-sharding constraints (Megatron-style), context-set.
+
+The baseline leaves intermediate shardings to XLA's propagation; §Perf
+shows that at 16-way TP this lets the partitioner pick pathological
+layouts (all-to-all resharding in the remat backward).  With
+`RunConfig.constrain_activations=True` the model pins the canonical
+layouts:
+
+    residual stream x  : P(dp, None, None)
+    mlp hidden h, g    : P(dp, None, model)      (ff sharded)
+    attention heads    : P(dp, None, model, None) (fallback: head_dim)
+
+`set_mesh` is called by the lowering entry points (specs/components);
+without a mesh every `constrain` is a no-op, so tests/examples on one
+device are unaffected.  Specs are divisibility-checked like the param
+rules — a non-dividing dim falls back to unsharded.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH = None
+
+
+def set_mesh(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+@contextmanager
+def constraint_mesh(mesh):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        yield
+    finally:
+        _MESH = prev
+
+
+def _axis_size(mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        return int(np.prod([_axis_size(mesh, n) for n in name]))
+    return int(mesh.shape[name]) if name in mesh.shape else 0
+
+
+def dp_axes():
+    if _MESH is None:
+        return ("data",)
+    return ("pod", "data") if "pod" in _MESH.shape else ("data",)
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint with divisibility fallbacks; no-op w/o mesh."""
+    if _MESH is None:
+        return x
+    fitted = []
+    for dim, ax in zip(x.shape, spec):
+        if ax is None:
+            fitted.append(None)
+            continue
+        size = _axis_size(_MESH, ax)
+        fitted.append(ax if size > 1 and dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, P(*fitted)))

@@ -1,0 +1,132 @@
+"""Mamba-2 (SSD) block — the SSM layer used by zamba2-7b.
+
+Structure (simplified from the official SSD block, documented deviations):
+
+    x ─ wx ─ causal depthwise conv(4) ─ SiLU ─┬─ heads (H, P=64)
+    x ─ wz ───────────────────────────────────│────────────┐
+    xc ─ wB/wC/wdt ─ B̃,C̃ (shared over heads), dt (per head)│
+    SSD recurrence: S ← exp(−dt·e^{A_log})·S + dt·(B̃ ⊗ x_h) │
+                    y_h = C̃·S + D_h·x_h                     │
+    y = RMSNorm(y) ⊙ SiLU(z) ─ out ───────────────────────▶ +residual
+
+Deviation from the reference CUDA block: B̃/C̃/dt are projected from the
+*post-conv* activations (the official block convolves [x,B,C] jointly);
+this keeps one conv and does not change cost structure.  The recurrence
+runs through `linear_scan.chunked_linear_recurrence` (scalar-decay mode,
+numerically exact — see that module).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rmsnorm
+from .linear_scan import chunked_linear_recurrence, recurrence_step
+from .params import dense_init
+
+CONV_K = 4
+HEAD_P = 64
+
+
+def ssm_dims(d_model: int, ssm_state: int):
+    d_inner = 2 * d_model
+    n_heads = d_inner // HEAD_P
+    return d_inner, n_heads, ssm_state
+
+
+def init_ssm_block(key, d_model: int, ssm_state: int):
+    d_in, h, n = ssm_dims(d_model, ssm_state)
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": dense_init(ks[0], d_model, d_in),
+        "wx": dense_init(ks[1], d_model, d_in),
+        "conv": 0.1 * jax.random.normal(ks[2], (CONV_K, d_in), jnp.float32),
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        "wB": dense_init(ks[3], d_model, n),
+        "wC": dense_init(ks[4], d_model, n),
+        "wdt": dense_init(ks[5], d_model, h),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "A_log": jnp.zeros((h,), jnp.float32),  # A = -exp(A_log) ≈ -1
+        "D": jnp.ones((h,), jnp.float32),
+        "norm_y": jnp.ones((d_in,), jnp.float32),
+        "out": dense_init(ks[6], d_in, d_model),
+    }
+
+
+def _conv_causal(xin: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time. xin: (B,T,C); w: (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xin, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xin)
+    for i in range(k):  # K=4 static taps — unrolled adds, no conv primitive
+        out = out + pad[:, i : i + xin.shape[1]] * w[i].astype(xin.dtype)
+    return out + b.astype(xin.dtype)
+
+
+def _ssd_inputs(xc, x, p, dtype):
+    """Project post-conv activations to (q=C̃, k=B̃·dt, v=x_h, log_decay)."""
+    b, t, d_in = xc.shape
+    h = d_in // HEAD_P
+    n = p["wB"].shape[1]
+    B_t = jnp.einsum("btd,dn->btn", x, p["wB"].astype(dtype))
+    C_t = jnp.einsum("btd,dn->btn", x, p["wC"].astype(dtype))
+    dt = jax.nn.softplus(
+        jnp.einsum("btd,dh->bth", x, p["wdt"].astype(dtype)).astype(jnp.float32)
+        + p["dt_bias"]
+    )  # (B,T,H) ≥ 0
+    log_decay = -dt * jnp.exp(p["A_log"])  # (B,T,H), ≤ 0
+    xh = xc.reshape(b, t, h, HEAD_P)
+    q = jnp.broadcast_to(C_t[:, :, None, :], (b, t, h, n))
+    k = jnp.broadcast_to(B_t[:, :, None, :], (b, t, h, n)) * dt[..., None].astype(dtype)
+    return q, k, xh, log_decay, xh
+
+
+def ssm_block(x, p, ssm_state: int, chunk: int = 32, unroll: int = 1):
+    """Train/prefill forward. x: (B,T,d). Returns (y, final_cache)."""
+    dtype = x.dtype
+    z = jnp.einsum("btd,de->bte", x, p["wz"].astype(dtype))
+    xin = jnp.einsum("btd,de->bte", x, p["wx"].astype(dtype))
+    xc = jax.nn.silu(_conv_causal(xin, p["conv"], p["conv_b"]))
+    q, k, v, log_decay, xh = _ssd_inputs(xc, x, p, dtype)
+    o, s_final = chunked_linear_recurrence(
+        q, k, v, log_decay, chunk=chunk, include_current=True, unroll=unroll
+    )
+    o = o + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = o.reshape(x.shape[0], x.shape[1], -1).astype(dtype)
+    y = rmsnorm(y, p["norm_y"]) * jax.nn.silu(z)
+    y = jnp.einsum("bte,ed->btd", y, p["out"].astype(dtype))
+    cache = {
+        "conv": xin[:, -(CONV_K - 1) :, :],  # last K-1 pre-activation inputs
+        "ssm": s_final,
+    }
+    return y, cache
+
+
+def ssm_block_decode(x, p, cache, ssm_state: int):
+    """Single-token step. x: (B,d); cache {'conv': (B,K-1,d_in), 'ssm': (B,H,N,P)}."""
+    dtype = x.dtype
+    b, d = x.shape
+    z = x @ p["wz"].astype(dtype)
+    xin = x @ p["wx"].astype(dtype)  # (B,d_in)
+    conv_in = jnp.concatenate([cache["conv"], xin[:, None, :]], axis=1)  # (B,K,d_in)
+    xc = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", conv_in, p["conv"].astype(dtype)) + p["conv_b"].astype(dtype)
+    )
+    q, k, v, log_decay, xh = _ssd_inputs(xc[:, None], x[:, None], p, dtype)
+    o, s_new = recurrence_step(
+        q[:, 0], k[:, 0], v[:, 0], log_decay[:, 0], cache["ssm"], include_current=True
+    )
+    o = o + p["D"].astype(jnp.float32)[None, :, None] * xh[:, 0].astype(jnp.float32)
+    y = o.reshape(b, -1).astype(dtype)
+    y = rmsnorm(y, p["norm_y"]) * jax.nn.silu(z)
+    y = y @ p["out"].astype(dtype)
+    new_cache = {"conv": conv_in[:, 1:], "ssm": s_new}
+    return y, new_cache
+
+
+def init_ssm_cache(batch: int, d_model: int, ssm_state: int, dtype=jnp.float32):
+    d_in, h, n = ssm_dims(d_model, ssm_state)
+    return {
+        "conv": jnp.zeros((batch, CONV_K - 1, d_in), dtype),
+        "ssm": jnp.zeros((batch, h, n, HEAD_P), jnp.float32),
+    }

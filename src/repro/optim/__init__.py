@@ -1,0 +1,12 @@
+from .adamw import AdamWConfig, apply_updates, init_opt_state, schedule_lr
+from .compression import ErrorFeedbackCompressor, dequantize_int8, quantize_int8
+
+__all__ = [
+    "AdamWConfig",
+    "apply_updates",
+    "init_opt_state",
+    "schedule_lr",
+    "ErrorFeedbackCompressor",
+    "dequantize_int8",
+    "quantize_int8",
+]

@@ -1,0 +1,98 @@
+"""AdamW with warmup+cosine schedule and global-norm clipping (pytrees).
+
+f32 master weights live in `params`; m/v mirror the param tree.  The
+`apply` function is pure and jit/pjit-friendly (m/v inherit the params'
+shardings through propagation).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import global_norm
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"  # cosine | linear | constant
+    min_lr_frac: float = 0.1
+
+
+def schedule_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    frac = jnp.clip(
+        (step - cfg.warmup_steps) / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0
+    )
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - (1 - cfg.min_lr_frac) * frac
+    else:
+        decay = jnp.float32(1.0)
+    return cfg.lr * warm * decay
+
+
+def init_opt_state(params, master_weights: bool = False) -> dict:
+    """m/v mirror params.  With ``master_weights`` the f32 master copy
+    lives here and `params` can be bf16 — halving the FSDP all-gather wire
+    (the §Perf grok lever: gathers move 2-byte weights, the 4-byte master
+    only sees local elementwise updates)."""
+    zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    state = {
+        "m": zeros,
+        "v": jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params),
+        "step": jnp.int32(0),
+    }
+    if master_weights:
+        state["master"] = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+    return state
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig):
+    """Returns (new_params, new_state, stats)."""
+    step = state["step"]
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9)) if cfg.clip_norm else 1.0
+    lr = schedule_lr(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    masters = state.get("master")
+
+    def upd(p, g, m, v, master):
+        ref = master if master is not None else p
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        m_hat = m_new / (1 - b1 ** (step.astype(jnp.float32) + 1))
+        v_hat = v_new / (1 - b2 ** (step.astype(jnp.float32) + 1))
+        delta = m_hat / (jnp.sqrt(v_hat) + cfg.eps) + cfg.weight_decay * ref
+        new_ref = ref - lr * delta
+        return new_ref.astype(p.dtype), m_new, v_new, new_ref
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_master = treedef.flatten_up_to(masters) if masters is not None else [None] * len(flat_p)
+    out = [upd(p, g, m, v, mw)
+           for p, g, m, v, mw in zip(flat_p, flat_g, flat_m, flat_v, flat_master)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_state = {
+        "m": treedef.unflatten([o[1] for o in out]),
+        "v": treedef.unflatten([o[2] for o in out]),
+        "step": step + 1,
+    }
+    if masters is not None:
+        new_state["master"] = treedef.unflatten([o[3] for o in out])
+    stats = {"lr": lr, "grad_norm": gnorm}
+    return new_p, new_state, stats

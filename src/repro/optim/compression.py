@@ -1,0 +1,61 @@
+"""Gradient compression with error feedback (distributed-optimization tool).
+
+int8 per-tensor-scaled quantisation + an error-feedback residual: the
+classic trick for slow interconnects (1-bit Adam / EF-SGD family).  At
+the pjit level gradient reduction is implicit, so the compressor is
+exposed as an explicit transform around the gradient tree — production
+use slots it into a `shard_map` manual-collective step; here it ships
+with exact error-feedback semantics and tests, and the roofline reports
+how much collective traffic it would remove (×4 vs f32, ×2 vs bf16).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+@dataclass
+class ErrorFeedbackCompressor:
+    """Stateful EF compressor over a grad pytree (residual carried)."""
+
+    residual: dict | None = None
+
+    def init(self, grads):
+        self.residual = jax.tree.map(jnp.zeros_like, grads)
+        return self
+
+    def compress_decompress(self, grads):
+        """Simulate the wire round trip; returns (decompressed, wire_bytes)."""
+        if self.residual is None:
+            self.init(grads)
+
+        wire_bytes = 0
+        outs = []
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_r = treedef.flatten_up_to(self.residual)
+        new_r = []
+        for g, r in zip(flat_g, flat_r):
+            target = g.astype(jnp.float32) + r
+            q, s = quantize_int8(target)
+            deq = dequantize_int8(q, s)
+            new_r.append(target - deq)  # error feedback
+            outs.append(deq.astype(g.dtype))
+            wire_bytes += q.size + 4  # int8 payload + scale
+        self.residual = treedef.unflatten(new_r)
+        return treedef.unflatten(outs), wire_bytes
+
+    @staticmethod
+    def uncompressed_bytes(grads) -> int:
+        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(grads))

@@ -1,0 +1,68 @@
+"""`repro.power` — TPU-native adaptation of the paper's methodology.
+
+The chip model (`tpu_model`), trace rendering (`trace`), the PMT-analogue
+multi-backend meter interface (`pmt`), the energy-aware autotuner
+(`tuner`) and training-loop telemetry (`energy`).  See DESIGN.md §2.2.
+"""
+from .energy import EnergyTelemetry, StepEnergyRecord
+from .pmt import (
+    BuiltinCounterMeter,
+    GroundTruthMeter,
+    Measurement,
+    PowerMeter,
+    PowerSensor3Meter,
+    RaplLikeMeter,
+    compare_meters,
+)
+from .trace import RenderedTrace, render_phases, trace_as_load
+from .tpu_model import (
+    V5E,
+    DvfsState,
+    Phase,
+    StepCost,
+    TpuChipSpec,
+    phases_for_step,
+    step_duration,
+    step_energy,
+)
+from .tuner import (
+    EnergyTuner,
+    KernelVariantModel,
+    MeasurementStrategy,
+    TuneRecord,
+    TuneResultSet,
+    builtin_counter_strategy,
+    fast_sensor_strategy,
+    tuning_speedup,
+)
+
+__all__ = [
+    "EnergyTelemetry",
+    "StepEnergyRecord",
+    "BuiltinCounterMeter",
+    "GroundTruthMeter",
+    "Measurement",
+    "PowerMeter",
+    "PowerSensor3Meter",
+    "RaplLikeMeter",
+    "compare_meters",
+    "RenderedTrace",
+    "render_phases",
+    "trace_as_load",
+    "V5E",
+    "DvfsState",
+    "Phase",
+    "StepCost",
+    "TpuChipSpec",
+    "phases_for_step",
+    "step_duration",
+    "step_energy",
+    "EnergyTuner",
+    "KernelVariantModel",
+    "MeasurementStrategy",
+    "TuneRecord",
+    "TuneResultSet",
+    "builtin_counter_strategy",
+    "fast_sensor_strategy",
+    "tuning_speedup",
+]

@@ -1,0 +1,15 @@
+"""Small demo traces used by `repro.core.tools` workloads and docs."""
+from __future__ import annotations
+
+import numpy as np
+
+from .tpu_model import StepCost, V5E, phases_for_step
+from .trace import render_phases
+
+
+def demo_train_trace() -> tuple[np.ndarray, np.ndarray]:
+    """One synthetic ~100M-model train step on the v5e model (per chip)."""
+    cost = StepCost(flops=2.5e12, hbm_bytes=6.0e11, ici_bytes=2.0e10)
+    phases = phases_for_step(cost, n_layers=12, chip=V5E)
+    tr = render_phases(phases, V5E, idle_before_s=0.01, idle_after_s=0.01)
+    return tr.times_s, tr.watts

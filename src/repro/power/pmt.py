@@ -1,0 +1,189 @@
+"""Power Measurement Toolkit analogue (paper §V-A1): one interface, many
+sensor backends, so applications can swap the PowerSensor3 for the
+"built-in counter" and see exactly why the paper built external hardware.
+
+Backends
+--------
+* `PowerSensor3Meter`   — the faithful `repro.core` stack sampling the true
+  trace at 20 kHz through the virtual sensor (Table-I noise included).
+* `BuiltinCounterMeter` — NVML-class on-board counter: updates at ~10 Hz.
+  Two flavours, mirroring NVML's API evolution (paper §II-A / Fig 7a):
+  ``mode="average"`` returns a trailing-window average (the pre-530-driver
+  'legacy' reading), ``mode="instant"`` returns point samples at the update
+  times.
+* `RaplLikeMeter`       — 1 kHz cumulative energy counter (CPU-style RAPL):
+  accurate energy, limited transient visibility.
+* `GroundTruthMeter`    — the trace itself (for test oracles).
+
+All meters consume a ground-truth power trace (times, watts) — in this
+repo that is a `RenderedTrace` from the TPU model or any `repro.core.dut`
+load — and report what *they* would have measured.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class Measurement:
+    """What a meter reports for one workload window."""
+
+    meter: str
+    sample_times_s: np.ndarray
+    sample_watts: np.ndarray
+    energy_j: float
+    true_energy_j: float
+    update_rate_hz: float
+
+    @property
+    def energy_error_frac(self) -> float:
+        if self.true_energy_j == 0:
+            return 0.0
+        return (self.energy_j - self.true_energy_j) / self.true_energy_j
+
+    def captures_transient(self, t0: float, t1: float, min_samples: int = 2) -> bool:
+        """Does this meter place >= min_samples inside [t0, t1)?"""
+        n = np.sum((self.sample_times_s >= t0) & (self.sample_times_s < t1))
+        return bool(n >= min_samples)
+
+
+def _true_energy(times: np.ndarray, watts: np.ndarray) -> float:
+    return float(np.trapezoid(watts, times))
+
+
+class PowerMeter:
+    name = "abstract"
+    update_rate_hz = 0.0
+
+    def measure(self, times: np.ndarray, watts: np.ndarray) -> Measurement:
+        raise NotImplementedError
+
+
+class GroundTruthMeter(PowerMeter):
+    name = "ground-truth"
+    update_rate_hz = float("inf")
+
+    def measure(self, times, watts):
+        e = _true_energy(times, watts)
+        return Measurement(self.name, times, watts, e, e, self.update_rate_hz)
+
+
+@dataclass
+class PowerSensor3Meter(PowerMeter):
+    """Runs the full virtual-hardware chain: TraceLoad → firmware → host."""
+
+    module: str = "pcie8pin-20a"
+    volts: float = 12.0
+    seed: int = 0
+    calibrated: bool = True
+    name: str = "powersensor3"
+    update_rate_hz: float = 20_000.0
+
+    def measure(self, times, watts):
+        import io
+
+        from repro.core import ConstantLoad, PowerSensor, TraceLoad, make_device
+        from repro.core.calibration import calibrate
+
+        dev = make_device([self.module], ConstantLoad(self.volts, 0.0), seed=self.seed)
+        ps = PowerSensor(dev)
+        if self.calibrated:
+            calibrate(ps, {0: self.volts}, n_samples=8000)
+        dev.firmware.dut.loads[0] = TraceLoad(
+            times_s=np.asarray(times),
+            watts=np.asarray(watts),
+            volts=self.volts,
+            t_offset_s=dev.t_s,  # playback starts now, not at device boot
+        )
+        # restart the stream so t=0 aligns with the trace
+        buf = io.StringIO()
+        ps.set_dump_file(buf)
+        t_end = float(times[-1])
+        a = ps.read()
+        ps.run_for(t_end)
+        b = ps.read()
+        ps.set_dump_file(None)
+        rows = [l.split() for l in buf.getvalue().splitlines() if l and l[0].isdigit()]
+        ts = np.array([float(r[0]) for r in rows])
+        ws = np.array([float(r[4]) for r in rows])
+        # device clock started before the trace (calibration); re-zero
+        if len(ts):
+            ts = ts - ts[0]
+        from repro.core.host import Joules
+
+        return Measurement(
+            self.name, ts, ws, Joules(a, b), _true_energy(times, watts), self.update_rate_hz
+        )
+
+
+@dataclass
+class BuiltinCounterMeter(PowerMeter):
+    """NVML-style on-board sensor: ~10 Hz updates (paper §II-A, Fig 7a)."""
+
+    update_rate_hz: float = 10.0
+    mode: str = "average"  # "average" (legacy) | "instant" (driver >= 530)
+    window_s: float = 1.0  # averaging window of the legacy reading
+    phase_jitter: float = 0.0
+
+    @property
+    def name(self) -> str:
+        return f"builtin-{self.mode}"
+
+    def measure(self, times, watts):
+        times = np.asarray(times)
+        watts = np.asarray(watts)
+        t_end = float(times[-1])
+        dt = 1.0 / self.update_rate_hz
+        sample_ts = np.arange(self.phase_jitter * dt, t_end, dt)
+        # dense grid for window averaging
+        grid = np.arange(0.0, t_end, 1e-4)
+        dense = np.interp(grid, times, watts)
+        if self.mode == "instant":
+            vals = np.interp(sample_ts, times, watts)
+        else:
+            vals = np.empty_like(sample_ts)
+            for i, t in enumerate(sample_ts):
+                lo = max(0.0, t - self.window_s)
+                sel = (grid >= lo) & (grid <= t)
+                vals[i] = dense[sel].mean() if np.any(sel) else dense[0]
+        # energy as an application would compute it: trapezoid over readings
+        energy = float(np.trapezoid(vals, sample_ts)) if len(sample_ts) > 1 else 0.0
+        # extend to full window with edge-hold (application has no better info)
+        if len(sample_ts) > 1:
+            energy += vals[0] * sample_ts[0] + vals[-1] * (t_end - sample_ts[-1])
+        return Measurement(self.name, sample_ts, vals, energy, _true_energy(times, watts), self.update_rate_hz)
+
+
+@dataclass
+class RaplLikeMeter(PowerMeter):
+    """1 kHz cumulative-energy counter (RAPL-style, paper §II)."""
+
+    update_rate_hz: float = 1000.0
+    name: str = "rapl-like"
+
+    def measure(self, times, watts):
+        times = np.asarray(times)
+        watts = np.asarray(watts)
+        t_end = float(times[-1])
+        ts = np.arange(0.0, t_end, 1.0 / self.update_rate_hz)
+        vals = np.interp(ts, times, watts)
+        e = float(np.trapezoid(vals, ts)) if len(ts) > 1 else 0.0
+        return Measurement(self.name, ts, vals, e, _true_energy(times, watts), self.update_rate_hz)
+
+
+def compare_meters(
+    times: np.ndarray,
+    watts: np.ndarray,
+    meters: list[PowerMeter] | None = None,
+) -> dict[str, Measurement]:
+    """The Fig 7 experiment: same workload, every meter."""
+    if meters is None:
+        meters = [
+            GroundTruthMeter(),
+            PowerSensor3Meter(),
+            BuiltinCounterMeter(mode="instant"),
+            BuiltinCounterMeter(mode="average"),
+        ]
+    return {m.name: m.measure(times, watts) for m in meters}

@@ -1,0 +1,218 @@
+"""Analytical TPU-chip power/performance model (the PowerSensor3 "DUT").
+
+Hardware-adaptation layer (DESIGN.md §2.2): the paper measures GPUs through
+physical rails; our target is a TPU v5e-class chip, so the device under
+test becomes an analytical model driven by **compiled HLO** — the same
+quantities the roofline analysis extracts from the dry-run:
+
+    P(t) = P_static + e_flop · flop_rate(t) + e_hbm · hbm_rate(t)
+                    + e_ici · ici_rate(t)
+
+Hardware constants (per chip, the numbers used throughout this repo):
+
+* peak compute  : 197 TFLOP/s bf16
+* HBM bandwidth : 819 GB/s
+* ICI           : ~50 GB/s/link, 4 links (2D torus)
+* HBM capacity  : 16 GiB
+
+Energy constants are engineering estimates (documented, not vendor data):
+at full MXU utilisation the dynamic compute power is ~89 W, at full HBM
+streaming ~74 W, giving a ~220 W busy chip over a 55 W static floor —
+consistent with public v5e TDP-class figures.  The *relative* phenomena
+the paper demonstrates (transients, phase dips, energy-vs-speed Pareto)
+are what the reproduction targets; see DESIGN.md §7.
+
+DVFS: TPUs expose limited frequency control compared to `nvidia-smi -lgc`,
+but the mechanism the paper tunes over (clock scaling) is modelled here:
+``time ∝ 1/s`` for compute-bound phases and dynamic power ``∝ s·V(s)²``
+with a linear voltage/frequency curve — the classic CMOS model.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+
+
+@dataclass(frozen=True)
+class TpuChipSpec:
+    name: str = "tpu-v5e-sim"
+    peak_flops_bf16: float = 197e12
+    hbm_bw: float = 819e9
+    ici_links: int = 4
+    ici_bw_per_link: float = 50e9
+    hbm_bytes: int = 16 * 2**30
+    vmem_bytes: int = 128 * 2**20
+    mxu_dim: int = 128
+
+    # energy model constants (J per op / per byte) + static floor (W)
+    p_static: float = 55.0
+    e_flop: float = 0.45e-12
+    e_hbm_byte: float = 90e-12
+    e_ici_byte: float = 70e-12
+
+    @property
+    def ici_bw(self) -> float:
+        return self.ici_links * self.ici_bw_per_link
+
+    @property
+    def p_peak(self) -> float:
+        return (
+            self.p_static
+            + self.e_flop * self.peak_flops_bf16
+            + self.e_hbm_byte * self.hbm_bw
+        )
+
+    # ------------------------------------------------------------- power
+    def power(
+        self,
+        flop_rate: float = 0.0,
+        hbm_rate: float = 0.0,
+        ici_rate: float = 0.0,
+        dvfs: "DvfsState | None" = None,
+    ) -> float:
+        dyn = (
+            self.e_flop * flop_rate
+            + self.e_hbm_byte * hbm_rate
+            + self.e_ici_byte * ici_rate
+        )
+        if dvfs is not None:
+            dyn *= dvfs.power_factor
+        return self.p_static + dyn
+
+    # ------------------------------------------------------------- roofline
+    def roofline_times(
+        self, flops: float, hbm_bytes: float, ici_bytes: float, dvfs: "DvfsState | None" = None
+    ) -> tuple[float, float, float]:
+        """(t_compute, t_memory, t_collective) — the three §Roofline terms."""
+        scale = dvfs.scale if dvfs else 1.0
+        return (
+            flops / (self.peak_flops_bf16 * scale),
+            hbm_bytes / self.hbm_bw,
+            ici_bytes / self.ici_bw,
+        )
+
+    def step_time(self, flops: float, hbm_bytes: float, ici_bytes: float, **kw) -> float:
+        return max(self.roofline_times(flops, hbm_bytes, ici_bytes, **kw))
+
+
+V5E = TpuChipSpec()
+
+
+@dataclass(frozen=True)
+class DvfsState:
+    """Clock/voltage scaling state. scale = f/f_max ∈ (0, 1]."""
+
+    scale: float = 1.0
+    v_floor: float = 0.65  # V(s)/V(1) at s→0 intercept
+
+    @property
+    def voltage_ratio(self) -> float:
+        return self.v_floor + (1.0 - self.v_floor) * self.scale
+
+    @property
+    def power_factor(self) -> float:
+        """dynamic power ∝ f · V², normalised to 1 at full clock."""
+        return self.scale * self.voltage_ratio**2
+
+    @classmethod
+    def sweep(cls, lo: float = 0.6, hi: float = 1.0, n: int = 9) -> list["DvfsState"]:
+        return [cls(scale=lo + i * (hi - lo) / (n - 1)) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# step costs and phase schedules
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class StepCost:
+    """Per-device, per-step cost triple — the contract between the dry-run
+    roofline extraction (`repro.launch.roofline`) and the power model."""
+
+    flops: float
+    hbm_bytes: float
+    ici_bytes: float
+
+    def __add__(self, o: "StepCost") -> "StepCost":
+        return StepCost(self.flops + o.flops, self.hbm_bytes + o.hbm_bytes, self.ici_bytes + o.ici_bytes)
+
+    def scaled(self, k: float) -> "StepCost":
+        return StepCost(self.flops * k, self.hbm_bytes * k, self.ici_bytes * k)
+
+
+@dataclass(frozen=True)
+class Phase:
+    """One power phase: a named interval with average resource rates."""
+
+    name: str
+    duration_s: float
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    ici_bytes: float = 0.0
+
+    def power(self, chip: TpuChipSpec, dvfs: DvfsState | None = None) -> float:
+        if self.duration_s <= 0:
+            return chip.p_static
+        return chip.power(
+            self.flops / self.duration_s,
+            self.hbm_bytes / self.duration_s,
+            self.ici_bytes / self.duration_s,
+            dvfs=dvfs,
+        )
+
+
+def phases_for_step(
+    cost: StepCost,
+    n_layers: int,
+    chip: TpuChipSpec = V5E,
+    dvfs: DvfsState | None = None,
+    layer_fraction: float = 0.9,
+    efficiency: float = 0.85,
+    overlap_collectives: bool = False,
+) -> list[Phase]:
+    """Schedule a train/serve step into power phases.
+
+    The structure mirrors what the paper observes on real accelerators
+    (Fig 7): per-layer compute bursts separated by collective phases, then
+    an optimizer/gradient-sync tail.  ``layer_fraction`` of the cost is
+    attributed to the layer loop, the rest to embed/head/optimizer.
+
+    With ``overlap_collectives`` the ICI time hides under compute (the
+    classic distributed-optimization trick); power during overlapped
+    phases includes both rate terms.
+    """
+    scale = dvfs.scale if dvfs else 1.0
+    lf, tail = layer_fraction, 1.0 - layer_fraction
+    layer = cost.scaled(lf / n_layers)
+    t_comp = max(
+        layer.flops / (chip.peak_flops_bf16 * scale * efficiency),
+        layer.hbm_bytes / (chip.hbm_bw * efficiency),
+    )
+    t_coll = layer.ici_bytes / (chip.ici_bw * efficiency)
+    phases: list[Phase] = []
+    for i in range(n_layers):
+        if overlap_collectives:
+            t = max(t_comp, t_coll)
+            phases.append(
+                Phase(f"layer{i}", t, layer.flops, layer.hbm_bytes, layer.ici_bytes)
+            )
+        else:
+            phases.append(Phase(f"layer{i}", t_comp, layer.flops, layer.hbm_bytes, 0.0))
+            if t_coll > 0:
+                phases.append(Phase(f"coll{i}", t_coll, 0.0, 0.0, layer.ici_bytes))
+    tail_cost = cost.scaled(tail)
+    t_tail = max(
+        tail_cost.flops / (chip.peak_flops_bf16 * scale * efficiency),
+        tail_cost.hbm_bytes / (chip.hbm_bw * efficiency),
+        tail_cost.ici_bytes / (chip.ici_bw * efficiency),
+    )
+    phases.append(
+        Phase("opt+sync", t_tail, tail_cost.flops, tail_cost.hbm_bytes, tail_cost.ici_bytes)
+    )
+    return phases
+
+
+def step_duration(phases: list[Phase]) -> float:
+    return sum(p.duration_s for p in phases)
+
+
+def step_energy(phases: list[Phase], chip: TpuChipSpec = V5E, dvfs: DvfsState | None = None) -> float:
+    return sum(p.power(chip, dvfs) * p.duration_s for p in phases)

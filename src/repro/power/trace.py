@@ -1,0 +1,88 @@
+"""Render phase schedules into 20 kHz-resolvable power traces.
+
+The output (times, watts) arrays plug directly into
+`repro.core.dut.TraceLoad`, closing the loop: *adapted* TPU workload →
+*faithful* sensor stack (DESIGN.md §2.2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .tpu_model import V5E, DvfsState, Phase, TpuChipSpec
+
+
+@dataclass
+class RenderedTrace:
+    times_s: np.ndarray
+    watts: np.ndarray
+    #: (phase name, start time) for marker correlation
+    phase_marks: list[tuple[str, float]]
+
+    @property
+    def duration_s(self) -> float:
+        return float(self.times_s[-1])
+
+    @property
+    def energy_j(self) -> float:
+        return float(np.trapezoid(self.watts, self.times_s))
+
+    def sampled(self, fs_hz: float = 20_000.0) -> tuple[np.ndarray, np.ndarray]:
+        t = np.arange(0.0, self.duration_s, 1.0 / fs_hz)
+        return t, np.interp(t, self.times_s, self.watts)
+
+
+def render_phases(
+    phases: list[Phase],
+    chip: TpuChipSpec = V5E,
+    dvfs: DvfsState | None = None,
+    idle_before_s: float = 0.0,
+    idle_after_s: float = 0.0,
+    ramp_s: float = 0.0,
+    repeat: int = 1,
+) -> RenderedTrace:
+    """Piecewise trace: each phase holds its average power for its duration.
+
+    ``ramp_s`` adds a linear clock-ramp into the first phase (the paper's
+    RTX 4000 Ada takes ~100 ms to reach peak clocks — GPUs ramp; we keep
+    the knob so the Fig 7 comparison can show it).
+    """
+    times: list[float] = [0.0]
+    watts: list[float] = [chip.p_static]
+    marks: list[tuple[str, float]] = []
+    t = 0.0
+    if idle_before_s > 0:
+        t += idle_before_s
+        times.append(t)
+        watts.append(chip.p_static)
+    for r in range(repeat):
+        for i, ph in enumerate(phases):
+            p = ph.power(chip, dvfs)
+            if ramp_s > 0 and r == 0 and i == 0:
+                # linear ramp to the first phase's power
+                n = 8
+                for k in range(1, n + 1):
+                    frac = k / n
+                    times.append(t + ramp_s * frac)
+                    watts.append(chip.p_static + (p - chip.p_static) * frac)
+                t += ramp_s
+            marks.append((ph.name if repeat == 1 else f"{ph.name}@{r}", t))
+            times.append(t + 1e-9)
+            watts.append(p)
+            t += ph.duration_s
+            times.append(t)
+            watts.append(p)
+    if idle_after_s > 0:
+        times.append(t + 1e-9)
+        watts.append(chip.p_static)
+        t += idle_after_s
+        times.append(t)
+        watts.append(chip.p_static)
+    return RenderedTrace(np.asarray(times), np.asarray(watts), marks)
+
+
+def trace_as_load(trace: RenderedTrace, volts: float = 12.0, repeat: bool = False):
+    from repro.core.dut import TraceLoad
+
+    return TraceLoad(times_s=trace.times_s, watts=trace.watts, volts=volts, repeat=repeat)

@@ -1,0 +1,209 @@
+"""Energy-aware kernel autotuner (the paper's Kernel Tuner case study, §V-A2).
+
+The paper's methodology:
+
+* enumerate functionally equivalent kernel variants (block dims, fragment
+  counts, double buffering) × GPU clock frequencies;
+* measure **time and energy** per variant — with PowerSensor3 a variant's
+  energy comes from a handful of launches (7 trials) read through markers;
+  with the 10 Hz on-board counter each variant must run continuously for
+  1–2 s to collect enough samples, stretching tuning by hours (3.25×
+  on the Tensor-Core Beamformer);
+* report the TFLOP/s vs TFLOP/J Pareto front (Fig 8/10).
+
+Here the variants are Pallas kernel configurations (block shapes, compute
+schedule) × DVFS states; per-variant time/energy comes from the TPU model
+(`modelled=True`, the CPU container cannot time a TPU) through the full
+virtual-sensor chain, so measurement noise and sampling artefacts are
+faithfully present.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Iterable
+
+import numpy as np
+
+from .pmt import BuiltinCounterMeter, PowerSensor3Meter, PowerMeter
+from .tpu_model import V5E, DvfsState, Phase, StepCost, TpuChipSpec
+from .trace import render_phases
+
+
+@dataclass(frozen=True)
+class KernelVariantModel:
+    """A tunable kernel: config -> (time_s, StepCost) on the target chip."""
+
+    name: str
+    useful_flops: float
+    model: Callable[[dict, TpuChipSpec, DvfsState], tuple[float, StepCost]]
+    search_space: dict[str, tuple] = field(default_factory=dict)
+
+    def configs(self) -> Iterable[dict]:
+        keys = list(self.search_space)
+        for combo in itertools.product(*(self.search_space[k] for k in keys)):
+            yield dict(zip(keys, combo))
+
+
+@dataclass
+class TuneRecord:
+    config: dict
+    dvfs_scale: float
+    time_s: float
+    joules: float
+    tuning_cost_s: float
+    meter: str
+
+    @property
+    def tflops(self) -> float:
+        return self._useful / self.time_s / 1e12 if self.time_s > 0 else 0.0
+
+    @property
+    def tflop_per_j(self) -> float:
+        return self._useful / self.joules / 1e12 if self.joules > 0 else 0.0
+
+    _useful: float = 0.0
+
+
+@dataclass
+class MeasurementStrategy:
+    """How a variant's energy is obtained — the axis of the 3.25× claim."""
+
+    meter: PowerMeter
+    n_trials: int = 7
+    #: per-variant fixed overhead: compile + launch + host sync
+    overhead_s: float = 0.4
+    #: minimum continuous runtime the meter needs for a stable reading
+    min_window_s: float = 0.0
+
+    def evaluate(
+        self, time_s: float, phases: list[Phase], chip: TpuChipSpec, dvfs: DvfsState
+    ) -> tuple[float, float]:
+        """Returns (joules_per_launch_as_reported, tuning_cost_s)."""
+        run_s = max(self.n_trials * time_s, self.min_window_s)
+        n_launches = max(self.n_trials, int(np.ceil(run_s / max(time_s, 1e-9))))
+        idle_s = 0.002
+        trace = render_phases(phases, chip, dvfs, idle_before_s=idle_s, repeat=n_launches)
+        meas = self.meter.measure(trace.times_s, trace.watts)
+        # subtract the pre-workload idle window (baseline subtraction — what
+        # the marker mechanism gives the paper's Kernel Tuner integration)
+        joules = (meas.energy_j - chip.p_static * idle_s) / n_launches
+        return joules, run_s + self.overhead_s
+
+
+def fast_sensor_strategy(seed: int = 0) -> MeasurementStrategy:
+    """PowerSensor3: 7 launches are enough (markers give per-kernel energy)."""
+    return MeasurementStrategy(PowerSensor3Meter(seed=seed), n_trials=7, min_window_s=0.0)
+
+
+def builtin_counter_strategy() -> MeasurementStrategy:
+    """On-board 10 Hz counter: stretch each variant to >= 2 s (paper §V-A2)."""
+    return MeasurementStrategy(
+        BuiltinCounterMeter(mode="instant"), n_trials=7, min_window_s=2.0
+    )
+
+
+@dataclass
+class TuneResultSet:
+    records: list[TuneRecord]
+    total_tuning_time_s: float
+    meter: str
+
+    def pareto_front(self) -> list[TuneRecord]:
+        """Non-dominated set maximising (tflops, tflop_per_j)."""
+        # tie-break on efficiency so equal-speed, lower-efficiency points
+        # never precede (and shadow) their dominating twins
+        recs = sorted(self.records, key=lambda r: (-r.tflops, -r.tflop_per_j))
+        front: list[TuneRecord] = []
+        best_eff = -1.0
+        last_tflops = None
+        for r in recs:
+            if r.tflop_per_j > best_eff and r.tflops != last_tflops:
+                front.append(r)
+                best_eff = r.tflop_per_j
+            last_tflops = r.tflops
+        return front
+
+    def fastest(self) -> TuneRecord:
+        return max(self.records, key=lambda r: r.tflops)
+
+    def most_efficient(self) -> TuneRecord:
+        return max(self.records, key=lambda r: r.tflop_per_j)
+
+
+class EnergyTuner:
+    def __init__(self, chip: TpuChipSpec = V5E):
+        self.chip = chip
+
+    def tune(
+        self,
+        kernel: KernelVariantModel,
+        strategy: MeasurementStrategy,
+        dvfs_states: list[DvfsState] | None = None,
+        max_configs: int | None = None,
+        exact_energy: bool = False,
+    ) -> TuneResultSet:
+        """Evaluate the full (config × dvfs) space with one strategy.
+
+        ``exact_energy=True`` bypasses the virtual meter (fast, for large
+        sweeps) and integrates the model trace directly; the Fig 8
+        benchmark uses the real meter on a subsample to keep fidelity.
+        """
+        dvfs_states = dvfs_states or [DvfsState(1.0)]
+        records: list[TuneRecord] = []
+        total_cost = 0.0
+        for i, cfg in enumerate(kernel.configs()):
+            if max_configs is not None and i >= max_configs:
+                break
+            for dv in dvfs_states:
+                time_s, cost = kernel.model(cfg, self.chip, dv)
+                phases = [
+                    Phase(
+                        kernel.name,
+                        time_s,
+                        flops=cost.flops,
+                        hbm_bytes=cost.hbm_bytes,
+                        ici_bytes=cost.ici_bytes,
+                    )
+                ]
+                if exact_energy:
+                    from .tpu_model import step_energy
+
+                    joules = step_energy(phases, self.chip, dv)
+                    run_s = max(strategy.n_trials * time_s, strategy.min_window_s)
+                    tcost = run_s + strategy.overhead_s
+                else:
+                    joules, tcost = strategy.evaluate(time_s, phases, self.chip, dv)
+                total_cost += tcost
+                rec = TuneRecord(
+                    config=dict(cfg),
+                    dvfs_scale=dv.scale,
+                    time_s=time_s,
+                    joules=joules,
+                    tuning_cost_s=tcost,
+                    meter=strategy.meter.name,
+                )
+                rec._useful = kernel.useful_flops
+                records.append(rec)
+        return TuneResultSet(records, total_cost, strategy.meter.name)
+
+
+def tuning_speedup(
+    kernel: KernelVariantModel,
+    chip: TpuChipSpec = V5E,
+    dvfs_states: list[DvfsState] | None = None,
+    max_configs: int | None = None,
+) -> tuple[float, TuneResultSet, TuneResultSet]:
+    """Reproduce the paper's 3.25× tuning-time comparison (modelled costs).
+
+    Uses exact energies for both strategies (the *costs* differ by
+    methodology, the energies don't) so large spaces sweep quickly.
+    """
+    tuner = EnergyTuner(chip)
+    fast = tuner.tune(
+        kernel, fast_sensor_strategy(), dvfs_states, max_configs, exact_energy=True
+    )
+    slow = tuner.tune(
+        kernel, builtin_counter_strategy(), dvfs_states, max_configs, exact_energy=True
+    )
+    return slow.total_tuning_time_s / fast.total_tuning_time_s, fast, slow

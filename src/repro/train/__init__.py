@@ -1,0 +1,24 @@
+from .checkpoint import AsyncCheckpointer, available_steps, latest_step, restore, save, step_path
+from .fault import FaultInjector, PreemptionHandler, SimulatedPreemption, StragglerWatchdog
+from .loop import LoopConfig, TrainResult, train
+from .step import TrainStepConfig, make_decode_step, make_prefill_step, make_train_step
+
+__all__ = [
+    "AsyncCheckpointer",
+    "available_steps",
+    "latest_step",
+    "restore",
+    "save",
+    "step_path",
+    "FaultInjector",
+    "PreemptionHandler",
+    "SimulatedPreemption",
+    "StragglerWatchdog",
+    "LoopConfig",
+    "TrainResult",
+    "train",
+    "TrainStepConfig",
+    "make_decode_step",
+    "make_prefill_step",
+    "make_train_step",
+]

@@ -1,0 +1,166 @@
+"""Sharded, atomic, async, mesh-agnostic checkpointing.
+
+Layout: one `.npy` per pytree leaf (path-encoded filename) + a JSON
+manifest (a recursive tree *skeleton*, step metadata, data-pipeline
+state).  Writes go to `<name>.tmp/` and are renamed atomically — a crash
+mid-write never corrupts the previous checkpoint.
+
+Elastic resume: leaves are stored *unsharded* (gathered via device_get),
+so a checkpoint written under one mesh loads under any other —
+`restore(..., shardings=...)` device_puts each leaf with the new mesh's
+sharding.  At real multi-host scale the same manifest format extends to
+per-host shard files; the single-process writer here is the degenerate
+case (DESIGN.md §3).
+
+`AsyncCheckpointer` snapshots on the caller thread (device_get = a
+consistent cut) and writes on a background thread — training overlaps
+the IO.  `keep_last` prunes old checkpoints; `latest_step` resumes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+MANIFEST = "manifest.json"
+_LEAF = "__leaf__"
+
+
+def _sanitize(s: str) -> str:
+    return re.sub(r"[^A-Za-z0-9_.-]", "_", s)
+
+
+def _skeletonize(tree, prefix: str, leaves: dict):
+    if isinstance(tree, dict):
+        return {k: _skeletonize(v, f"{prefix}.{k}" if prefix else str(k), leaves)
+                for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        kind = "list" if isinstance(tree, list) else "tuple"
+        return {
+            "__seq__": kind,
+            "items": [_skeletonize(v, f"{prefix}.{i}", leaves) for i, v in enumerate(tree)],
+        }
+    name = _sanitize(prefix or "leaf")
+    assert name not in leaves, f"duplicate leaf {name}"
+    leaves[name] = tree
+    return {_LEAF: name}
+
+
+def _rebuild(skel, loader):
+    if isinstance(skel, dict) and _LEAF in skel:
+        return loader(skel[_LEAF])
+    if isinstance(skel, dict) and "__seq__" in skel:
+        items = [_rebuild(s, loader) for s in skel["items"]]
+        return items if skel["__seq__"] == "list" else tuple(items)
+    return {k: _rebuild(v, loader) for k, v in skel.items()}
+
+
+def save(path: str, tree, extra: dict | None = None) -> None:
+    """Atomic synchronous save of a pytree (+ JSON-serialisable extras)."""
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    leaves: dict = {}
+    skel = _skeletonize(tree, "", leaves)
+    for name, leaf in leaves.items():
+        np.save(os.path.join(tmp, name + ".npy"), np.asarray(jax.device_get(leaf)))
+    manifest = {"skeleton": skel, "extra": extra or {}, "time": time.time()}
+    with open(os.path.join(tmp, MANIFEST), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+
+
+def restore(path: str, shardings=None):
+    """Returns (tree, extra).
+
+    `shardings`: optional pytree of NamedShardings (same structure) —
+    each leaf is device_put with the *new* mesh's sharding, enabling
+    elastic remesh on resume.
+    """
+    with open(os.path.join(path, MANIFEST)) as f:
+        manifest = json.load(f)
+
+    def load(name):
+        return np.load(os.path.join(path, name + ".npy"))
+
+    tree = _rebuild(manifest["skeleton"], load)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(jax.numpy.asarray(x), s), tree, shardings
+        )
+    else:
+        tree = jax.tree.map(jax.numpy.asarray, tree)
+    return tree, manifest["extra"]
+
+
+# ---------------------------------------------------------------------------
+# checkpoint directories: step-numbered, pruned, resumable
+# ---------------------------------------------------------------------------
+def step_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:08d}")
+
+
+def available_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, MANIFEST)):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = available_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def prune(ckpt_dir: str, keep_last: int) -> None:
+    steps = available_steps(ckpt_dir)
+    for s in steps[:-keep_last] if keep_last > 0 else []:
+        shutil.rmtree(step_path(ckpt_dir, s), ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Snapshot now, write later.  One in-flight write at a time (a second
+    request waits — backpressure rather than unbounded host RAM)."""
+
+    def __init__(self, ckpt_dir: str, keep_last: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep_last = keep_last
+        self._thread: threading.Thread | None = None
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def save_async(self, step: int, tree, extra: dict | None = None) -> None:
+        self.wait()
+        # consistent cut on the caller thread
+        snapshot = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def _write():
+            save(step_path(self.ckpt_dir, step), snapshot, extra)
+            prune(self.ckpt_dir, self.keep_last)
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def save_sync(self, step: int, tree, extra: dict | None = None) -> None:
+        self.wait()
+        save(step_path(self.ckpt_dir, step), tree, extra)
+        prune(self.ckpt_dir, self.keep_last)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

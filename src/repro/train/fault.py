@@ -1,0 +1,84 @@
+"""Fault tolerance: preemption handling, straggler detection, fault injection.
+
+At 1000+ nodes failures are routine, not exceptional:
+
+* `PreemptionHandler` — SIGTERM/SIGUSR1 → checkpoint-and-exit-cleanly
+  (the maintenance-event contract on cloud TPU fleets).
+* `StragglerWatchdog` — EWMA step-time monitor; a step slower than
+  `threshold ×` the EWMA flags a straggler (on a real fleet this feeds
+  the re-slicing controller; here it feeds metrics + logs, and tests
+  assert the detection logic).
+* `FaultInjector` — deterministic crash at step N (`SimulatedPreemption`)
+  so tests can prove checkpoint/resume is *bitwise* transparent.
+"""
+from __future__ import annotations
+
+import signal
+import threading
+from dataclasses import dataclass, field
+
+
+class SimulatedPreemption(Exception):
+    """Raised by FaultInjector to emulate a node loss mid-training."""
+
+
+@dataclass
+class FaultInjector:
+    crash_at_step: int = -1
+
+    def check(self, step: int) -> None:
+        if 0 <= self.crash_at_step == step:
+            self.crash_at_step = -1  # one-shot
+            raise SimulatedPreemption(f"injected preemption at step {step}")
+
+
+class PreemptionHandler:
+    """Install with `with PreemptionHandler() as h:` — `h.requested` flips
+    on SIGTERM/SIGUSR1 and the loop checkpoints + exits at the next step
+    boundary."""
+
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGUSR1)):
+        self.requested = False
+        self._signals = signals
+        self._old = {}
+        self._lock = threading.Lock()
+
+    def _handler(self, signum, frame):
+        with self._lock:
+            self.requested = True
+
+    def __enter__(self):
+        if threading.current_thread() is threading.main_thread():
+            for s in self._signals:
+                self._old[s] = signal.signal(s, self._handler)
+        return self
+
+    def __exit__(self, *exc):
+        for s, old in self._old.items():
+            signal.signal(s, old)
+        return False
+
+
+@dataclass
+class StragglerWatchdog:
+    """EWMA step-time monitor (per-host; a controller aggregates across
+    hosts in a real deployment)."""
+
+    threshold: float = 2.0
+    alpha: float = 0.1
+    warmup: int = 5
+    ewma: float = 0.0
+    n: int = 0
+    events: list = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        self.n += 1
+        if self.n <= self.warmup:
+            self.ewma = dt if self.ewma == 0 else (1 - self.alpha) * self.ewma + self.alpha * dt
+            return False
+        is_straggler = dt > self.threshold * self.ewma
+        if is_straggler:
+            self.events.append((step, dt, self.ewma))
+        else:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return is_straggler

@@ -1,0 +1,77 @@
+"""Step builders: train_step / prefill_step / decode_step.
+
+`make_train_step` closes over the model + optimizer config and returns a
+pure function `(params, opt_state, batch) -> (params, opt_state, metrics)`
+ready for `jax.jit` (with donation) under any mesh.  Microbatch gradient
+accumulation (`accum_steps`) runs as a `lax.scan` over batch slices —
+the standard memory lever when the global batch exceeds HBM.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import AdamWConfig, apply_updates
+
+
+@dataclass(frozen=True)
+class TrainStepConfig:
+    accum_steps: int = 1
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, step_cfg: TrainStepConfig = TrainStepConfig()):
+    def loss_fn(params, batch):
+        loss, metrics = model.loss_fn(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if step_cfg.accum_steps > 1:
+            n = step_cfg.accum_steps
+
+            def slice_batch(b, i):
+                def sl(x):
+                    mb = x.shape[0] // n
+                    return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+                return jax.tree.map(sl, b)
+
+            def body(carry, i):
+                g_acc, l_acc = carry
+                (loss, _), grads = grad_fn(params, slice_batch(batch, i))
+                return (
+                    jax.tree.map(jnp.add, g_acc, grads),
+                    l_acc + loss,
+                ), None
+
+            g0 = jax.tree.map(jnp.zeros_like, params)
+            (grads, loss_sum), _ = jax.lax.scan(body, (g0, jnp.float32(0.0)), jnp.arange(n))
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss = loss_sum / n
+            metrics = {"ce": loss}
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+        new_params, new_opt, stats = apply_updates(params, grads, opt_state, opt_cfg)
+        out = {"loss": loss, **metrics, **stats}
+        return new_params, new_opt, out
+
+    return train_step
+
+
+def make_prefill_step(model, max_len: int | None = None):
+    def prefill_step(params, batch):
+        if model.cfg.is_encdec:
+            return model.prefill(params, batch, max_len=max_len)
+        return model.prefill(params, batch["tokens"], max_len=max_len)
+
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, cache, token):
+        return model.decode_step(params, cache, token)
+
+    return decode_step

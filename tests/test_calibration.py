@@ -1,0 +1,79 @@
+"""Calibration procedure (§III-D): offset/gain recovery within Table I."""
+import numpy as np
+import pytest
+
+from repro.core import ConstantLoad, Joules, PowerSensor, SweepLoad, Watt, make_device, seconds
+from repro.core.calibration import calibrate
+from repro.core.sensors import MODULE_CATALOG
+
+
+def _calibrated_sensor(module="slot-10a-12v", vrail=12.0, seed=42, n=8000):
+    dev = make_device([module], ConstantLoad(vrail, 0.0), seed=seed)
+    ps = PowerSensor(dev)
+    reports = calibrate(ps, {0: vrail}, n_samples=n)
+    return ps, reports
+
+
+def test_calibration_recovers_offset():
+    ps, reports = _calibrated_sensor(seed=21)
+    fw = ps.device.firmware
+    true_off = fw.modules[0].hall_offset_amps
+    assert reports[0].current_offset_amps == pytest.approx(true_off, abs=0.01)
+
+
+def test_calibration_recovers_gain():
+    ps, reports = _calibrated_sensor(seed=22)
+    fw = ps.device.firmware
+    true_gain_err = fw.modules[0].divider_gain_error
+    # measured gain correction should invert the manufacturing gain error
+    assert reports[0].voltage_gain == pytest.approx(1.0 / (1.0 + true_gain_err), rel=2e-3)
+
+
+@pytest.mark.parametrize("seed", [1, 2, 3])
+def test_post_calibration_accuracy_within_table1(seed):
+    """After calibration, measured power is within Table I worst case."""
+    module = "slot-10a-12v"
+    vrail, amps = 12.0, 8.0
+    dev = make_device([module], ConstantLoad(vrail, 0.0), seed=seed)
+    ps = PowerSensor(dev)
+    calibrate(ps, {0: vrail}, n_samples=8000)
+    # switch the same (calibrated) device to a loaded DUT
+    dev.firmware.dut.loads[0] = ConstantLoad(vrail, amps)
+    a = ps.read()
+    ps.run_for(0.5)
+    b = ps.read()
+    spec = MODULE_CATALOG[module]
+    measured = Watt(a, b)
+    # mean of 10k samples ≈ true power well within worst-case single-sample
+    assert measured == pytest.approx(vrail * amps, abs=spec.power_error / 3)
+
+
+def test_calibration_only_needed_once():
+    """§IV-B: re-measuring later (no recalibration) stays accurate."""
+    ps, _ = _calibrated_sensor(seed=23)
+    dev = ps.device
+    dev.firmware.dut.loads[0] = ConstantLoad(12.0, 7.5)
+    drift = []
+    for _ in range(5):
+        a = ps.read()
+        ps.run_for(0.2)
+        b = ps.read()
+        drift.append(Watt(a, b))
+    assert np.ptp(drift) < 0.5  # paper: ±0.09 W mean fluctuation over 50 h
+
+
+def test_sweep_error_profile_fig4():
+    """Fig 4: error vs load current stays inside worst-case bounds."""
+    module = "slot-10a-12v"
+    steps = np.arange(-10, 11, 2.0)
+    dev = make_device([module], ConstantLoad(12.0, 0.0), seed=24)
+    ps = PowerSensor(dev)
+    calibrate(ps, {0: 12.0}, n_samples=8000)
+    spec = MODULE_CATALOG[module]
+    for amps in steps:
+        dev.firmware.dut.loads[0] = ConstantLoad(12.0, float(amps))
+        a = ps.read()
+        ps.run_for(0.1)
+        b = ps.read()
+        err = Watt(a, b) - 12.0 * amps
+        assert abs(err) < spec.power_error

@@ -1,0 +1,113 @@
+"""Firmware emulation: timing arithmetic, streaming, commands, markers."""
+import numpy as np
+import pytest
+
+from repro.core import protocol
+from repro.core.dut import ConstantLoad, SquareWaveLoad
+from repro.core.firmware import (
+    CONV_US,
+    FIRMWARE_VERSION,
+    FRAME_US,
+    SAMPLE_RATE_HZ,
+    make_device,
+)
+from repro.core.protocol import (
+    CMD_READ_CONFIG,
+    CMD_START_STREAM,
+    CMD_STOP_STREAM,
+    CMD_VERSION,
+    CONFIG_BLOCK_SIZE,
+    SensorConfigBlock,
+)
+
+
+def test_paper_timing_arithmetic():
+    # §III-B: 25 cycles @ 24 MHz = 1.04 µs; 8 ch × 6 avg = 50 µs = 20 kHz
+    assert CONV_US == pytest.approx(1.0417, abs=1e-3)
+    assert FRAME_US == pytest.approx(50.0, rel=1e-3)
+    assert SAMPLE_RATE_HZ == pytest.approx(20_000, rel=1e-3)
+
+
+def test_sample_rate_is_20khz():
+    dev = make_device(["slot-10a-12v"], ConstantLoad(12.0, 1.0), seed=0)
+    dev.write(CMD_START_STREAM)
+    dev.advance(1.0)
+    raw = dev.read()
+    ids, vals, marks, _ = protocol.decode_packets(raw)
+    n_frames = int(np.sum(protocol.is_timestamp(ids, marks)))
+    assert n_frames == 20_000
+
+
+def test_no_stream_before_start():
+    dev = make_device(["slot-10a-12v"], ConstantLoad(12.0, 1.0), seed=0)
+    dev.advance(0.1)
+    assert dev.read() == b""
+
+
+def test_stop_stream():
+    dev = make_device(["slot-10a-12v"], ConstantLoad(12.0, 1.0), seed=0)
+    dev.write(CMD_START_STREAM)
+    dev.advance(0.01)
+    dev.read()
+    dev.write(CMD_STOP_STREAM)
+    dev.advance(0.01)
+    assert dev.read() == b""
+
+
+def test_version_command():
+    dev = make_device(["slot-10a-12v"], ConstantLoad(12.0, 1.0), seed=0)
+    dev.write(CMD_VERSION)
+    out = dev.read()
+    assert out.rstrip(b"\0").decode() == FIRMWARE_VERSION
+
+
+def test_config_read_write_roundtrip():
+    dev = make_device(["usb-c"], ConstantLoad(20.0, 2.0), seed=0)
+    dev.write(CMD_READ_CONFIG + bytes([0]))
+    blk = SensorConfigBlock.unpack(dev.read(CONFIG_BLOCK_SIZE))
+    assert blk.enabled and blk.type_code == 0
+    blk.offset_cal = 0.123
+    dev.write(protocol.CMD_WRITE_CONFIG + bytes([0]) + blk.pack())
+    dev.write(CMD_READ_CONFIG + bytes([0]))
+    blk2 = SensorConfigBlock.unpack(dev.read(CONFIG_BLOCK_SIZE))
+    assert blk2.offset_cal == pytest.approx(0.123, rel=1e-6)
+
+
+def test_frames_not_duplicated_across_advances():
+    dev = make_device(["slot-10a-12v"], ConstantLoad(12.0, 1.0), seed=0)
+    dev.write(CMD_START_STREAM)
+    for _ in range(100):
+        dev.advance(0.001)  # odd chunk sizes
+    raw = dev.read()
+    ids, vals, marks, _ = protocol.decode_packets(raw)
+    ts = vals[protocol.is_timestamp(ids, marks)]
+    unwrapped = protocol.unwrap_timestamps(ts)
+    assert np.all(np.diff(unwrapped) == 50)
+
+
+def test_disabled_channels_not_transmitted():
+    dev = make_device(["slot-10a-12v", None, None, None], ConstantLoad(12.0, 1.0), seed=0)
+    dev.write(CMD_START_STREAM)
+    dev.advance(0.01)
+    ids, vals, marks, _ = protocol.decode_packets(dev.read())
+    data = ~protocol.is_timestamp(ids, marks)
+    assert set(np.unique(ids[data])) == {0, 1}
+
+
+def test_step_response_visible_at_20khz():
+    """Fig 5: a 3.3 A -> 8 A step must settle within a few samples."""
+    dev = make_device(
+        ["slot-10a-12v"],
+        SquareWaveLoad(volts=12.0, amps_lo=3.3, amps_hi=8.0, freq_hz=100.0, slew_tau_s=25e-6),
+        seed=0,
+    )
+    dev.write(CMD_START_STREAM)
+    dev.advance(0.02)  # two full periods
+    ids, vals, marks, _ = protocol.decode_packets(dev.read())
+    data = (~protocol.is_timestamp(ids, marks)) & (ids == 0)
+    blk = dev.firmware.eeprom[0]
+    amps = blk.raw_to_physical(vals[data])
+    # both levels visible
+    assert amps.max() > 7.0 and amps.min() < 4.3
+    # transitions present: |diff| > 2 A within one sample proves 20 kHz
+    assert np.max(np.abs(np.diff(amps))) > 2.0

@@ -1,0 +1,224 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Per instructions: sweep shapes/dtypes per kernel and assert_allclose
+against the ref.py oracle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import (
+    beamform,
+    beamform_ref,
+    decode_attention,
+    decode_attention_ref,
+    flash_attention,
+    flash_attention_custom,
+    attention_ref,
+    rmsnorm,
+    rmsnorm_ref,
+    ssd_scan,
+    ssd_scan_ref,
+    wkv6,
+    wkv6_ref,
+)
+from repro.models.linear_scan import naive_linear_recurrence
+
+TOL = dict(rtol=2e-2, atol=2e-3)  # bf16 inputs, f32 accumulation
+TOL32 = dict(rtol=1e-3, atol=1e-3)  # f32: accumulation-order noise near zero
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# --------------------------------------------------------------------------- beamformer
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mnk,blocks", [
+    ((256, 256, 256), dict(bm=128, bn=128, bk=128)),
+    ((256, 128, 512), dict(bm=128, bn=128, bk=256)),
+])
+@pytest.mark.parametrize("karatsuba", [False, True])
+def test_beamformer_matches_ref(mnk, blocks, karatsuba, dtype):
+    m, n, k = mnk
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    ar, ai = _rand(ks[0], (m, k), dtype), _rand(ks[1], (m, k), dtype)
+    br, bi = _rand(ks[2], (k, n), dtype), _rand(ks[3], (k, n), dtype)
+    cr, ci = beamform(ar, ai, br, bi, karatsuba=karatsuba, **blocks)
+    rr, ri = beamform_ref(ar, ai, br, bi)
+    tol = TOL32 if dtype == jnp.float32 else dict(rtol=3e-2, atol=0.5)
+    np.testing.assert_allclose(np.asarray(cr), np.asarray(rr), **tol)
+    np.testing.assert_allclose(np.asarray(ci), np.asarray(ri), **tol)
+
+
+# --------------------------------------------------------------------------- flash attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [
+    # (B, Sq, Sk, Hq, Hkv, D)
+    (1, 128, 128, 2, 2, 64),
+    (2, 256, 256, 4, 1, 64),   # MQA
+    (1, 256, 256, 8, 2, 128),  # GQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(shape, causal, dtype):
+    b, sq, sk, hq, hkv, d = shape
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(ks[0], (b, sq, hq, d), dtype)
+    k = _rand(ks[1], (b, sk, hkv, d), dtype)
+    v = _rand(ks[2], (b, sk, hkv, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, bq=128, bk=128)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **TOL
+    )
+
+
+def test_flash_attention_custom_grad_matches_ref():
+    b, s, h, d = 1, 128, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q, k, v = (_rand(kk, (b, s, h, d), jnp.float32) for kk in ks)
+
+    def f_kernel(q, k, v):
+        return (flash_attention_custom(q, k, v, True) ** 2).sum()
+
+    def f_ref(q, k, v):
+        return (attention_ref(q, k, v, causal=True) ** 2).sum()
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-3, atol=1e-4)
+
+
+# --------------------------------------------------------------------------- decode attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [
+    # (B, S, Hq, Hkv, D, kv_lens)
+    (2, 512, 4, 4, 64, (100, 512)),
+    (2, 1024, 8, 2, 64, (1, 777)),
+    (1, 512, 4, 1, 128, (511,)),
+])
+def test_decode_attention_matches_ref(shape, dtype):
+    b, s, hq, hkv, d, lens = shape
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = _rand(ks[0], (b, hq, d), dtype)
+    kc = _rand(ks[1], (b, s, hkv, d), dtype)
+    vc = _rand(ks[2], (b, s, hkv, d), dtype)
+    kv_len = jnp.array(lens[:b], jnp.int32)
+    out = decode_attention(q, kc, vc, kv_len, bk=256)
+    ref = decode_attention_ref(q, kc, vc, kv_len)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **TOL
+    )
+
+
+# --------------------------------------------------------------------------- ssd scan
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(1, 128, 2, 16, 32), (2, 256, 4, 64, 64)])
+def test_ssd_scan_matches_ref(shape, dtype):
+    b, t, h, n, p = shape
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    q = _rand(ks[0], (b, t, h, n), dtype)
+    k = _rand(ks[1], (b, t, h, n), dtype)
+    v = _rand(ks[2], (b, t, h, p), dtype)
+    w = -jnp.exp(jax.random.normal(ks[3], (b, t, h), jnp.float32)) * 0.3
+    out, fin = ssd_scan(q, k, v, w, chunk=64)
+    ref_out, ref_fin = ssd_scan_ref(q, k, v, w)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref_out, np.float32), **TOL
+    )
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(ref_fin), rtol=2e-2, atol=2e-2)
+
+
+def test_ssd_scan_matches_naive_sequential():
+    """Kernel vs the O(T) per-token recurrence (ground truth)."""
+    b, t, h, n, p = 1, 64, 2, 8, 16
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    q, k = _rand(ks[0], (b, t, h, n), jnp.float32), _rand(ks[1], (b, t, h, n), jnp.float32)
+    v = _rand(ks[2], (b, t, h, p), jnp.float32)
+    w = -jnp.exp(jax.random.normal(ks[3], (b, t, h), jnp.float32)) * 0.5
+    out, fin = ssd_scan(q, k, v, w, chunk=16)
+    ref_out, ref_fin = naive_linear_recurrence(q, k, v, w, include_current=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(ref_fin), rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------- rwkv6 wkv
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(1, 64, 2, 32), (2, 128, 4, 64)])
+def test_wkv6_matches_ref(shape, dtype):
+    b, t, h, kd = shape
+    ks = jax.random.split(jax.random.PRNGKey(6), 5)
+    r = _rand(ks[0], (b, t, h, kd), dtype)
+    k = _rand(ks[1], (b, t, h, kd), dtype)
+    v = _rand(ks[2], (b, t, h, kd), dtype)
+    w = -jnp.clip(jnp.exp(jax.random.normal(ks[3], (b, t, h, kd)) * 0.5), 1e-4, 0.9)
+    u = 0.2 * jax.random.normal(ks[4], (h, kd), jnp.float32)
+    out, fin = wkv6(r, k, v, w, u, chunk=32)
+    ref_out, ref_fin = wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref_out, np.float32), **TOL
+    )
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(ref_fin), rtol=2e-2, atol=2e-2)
+
+
+def test_wkv6_matches_naive_sequential():
+    b, t, h, kd = 1, 32, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    r, k, v = (_rand(kk, (b, t, h, kd), jnp.float32) for kk in ks[:3])
+    w = -jnp.clip(jnp.exp(jax.random.normal(ks[3], (b, t, h, kd)) * 0.5), 1e-4, 0.9)
+    u = 0.2 * jax.random.normal(ks[4], (h, kd), jnp.float32)
+    out, fin = wkv6(r, k, v, w, u, chunk=8)
+    ref_out, ref_fin = naive_linear_recurrence(r, k, v, w, include_current=False, bonus=u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(ref_fin), rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------- rmsnorm
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 64), (3, 7, 128), (1000, 256)])
+def test_rmsnorm_matches_ref(shape, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(8))
+    x = _rand(k1, shape, dtype)
+    w = 1.0 + 0.1 * jax.random.normal(k2, (shape[-1],), jnp.float32)
+    out = rmsnorm(x, w)
+    ref = rmsnorm_ref(x, w)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=1e-2, atol=1e-3
+    )
+
+
+# --------------------------------------------------------------------------- properties
+@settings(max_examples=10, deadline=None)
+@given(
+    sq=st.sampled_from([128, 256]),
+    hq=st.sampled_from([2, 4]),
+    group=st.sampled_from([1, 2]),
+    d=st.sampled_from([32, 64]),
+)
+def test_flash_attention_property(sq, hq, group, d):
+    assert hq % group == 0
+    hkv = hq // group
+    ks = jax.random.split(jax.random.PRNGKey(hq * 131 + d), 3)
+    q = _rand(ks[0], (1, sq, hq, d), jnp.float32)
+    k = _rand(ks[1], (1, sq, hkv, d), jnp.float32)
+    v = _rand(ks[2], (1, sq, hkv, d), jnp.float32)
+    out = flash_attention(q, k, v, causal=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(t=st.sampled_from([32, 64, 96]), h=st.sampled_from([1, 3]), n=st.sampled_from([8, 16]))
+def test_ssd_scan_property(t, h, n):
+    ks = jax.random.split(jax.random.PRNGKey(t * 7 + h), 4)
+    q = _rand(ks[0], (1, t, h, n), jnp.float32)
+    k = _rand(ks[1], (1, t, h, n), jnp.float32)
+    v = _rand(ks[2], (1, t, h, n), jnp.float32)
+    w = -jnp.exp(jax.random.normal(ks[3], (1, t, h))) * 0.4
+    out, _ = ssd_scan(q, k, v, w, chunk=32)
+    ref, _ = naive_linear_recurrence(q, k, v, w, include_current=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,87 @@
+"""PMT meter-comparison layer: the Fig 7 phenomena."""
+import numpy as np
+import pytest
+
+from repro.core.dut import GpuKernelLoad
+from repro.power import (
+    BuiltinCounterMeter,
+    GroundTruthMeter,
+    PowerSensor3Meter,
+    RaplLikeMeter,
+    compare_meters,
+)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    """GPU-kernel-shaped trace with phase dips (the Fig 7 shape)."""
+    # phase_s deliberately not a multiple of the 10 Hz builtin period —
+    # a 4 ms dip has ~4% chance per dip of hitting a 10 Hz sample tick
+    g = GpuKernelLoad(t_start_s=0.1, ramp_s=0.1, n_phases=5, phase_s=0.21, dip_s=0.004)
+    t = np.linspace(0.0, g.t_total, 200_000)
+    v, a = g.sample(t)
+    return t, v * a, g
+
+
+def test_ground_truth_meter(workload):
+    t, w, _ = workload
+    m = GroundTruthMeter().measure(t, w)
+    assert m.energy_j == pytest.approx(np.trapezoid(w, t), rel=1e-9)
+
+
+def test_powersensor3_energy_accuracy(workload):
+    t, w, _ = workload
+    m = PowerSensor3Meter(seed=1).measure(t, w)
+    assert abs(m.energy_error_frac) < 0.02  # within 2% of true energy
+    assert m.update_rate_hz == 20_000
+
+
+def test_powersensor3_sees_interphase_dips(workload):
+    """The dips between kernel phases are visible at 20 kHz (paper Fig 7a)."""
+    t, w, g = workload
+    m = PowerSensor3Meter(seed=2).measure(t, w)
+    # second dip window
+    t_dip = g.t_start_s + g.ramp_s + g.phase_s
+    assert m.captures_transient(t_dip, t_dip + g.dip_s, min_samples=10)
+    sel = (m.sample_times_s >= t_dip) & (m.sample_times_s < t_dip + g.dip_s)
+    # measured power in the dip is clearly below the plateau
+    assert m.sample_watts[sel].mean() < 0.8 * g.peak_w
+
+
+def test_builtin_counter_misses_dips(workload):
+    t, w, g = workload
+    m = BuiltinCounterMeter(mode="instant").measure(t, w)
+    t_dip = g.t_start_s + g.ramp_s + g.phase_s
+    assert not m.captures_transient(t_dip, t_dip + g.dip_s, min_samples=1)
+
+
+def test_builtin_average_lags_transients(workload):
+    """Legacy averaged reading cannot represent the ramp (Fig 7a inset)."""
+    t, w, g = workload
+    inst = BuiltinCounterMeter(mode="instant").measure(t, w)
+    avg = BuiltinCounterMeter(mode="average", window_s=1.0).measure(t, w)
+    # during the ramp the averaged reading is far below instantaneous
+    t_probe = g.t_start_s + g.ramp_s
+    wi = np.interp(t_probe, inst.sample_times_s, inst.sample_watts)
+    wa = np.interp(t_probe, avg.sample_times_s, avg.sample_watts)
+    assert wa < 0.75 * wi
+
+
+def test_builtin_energy_error_worse_than_ps3(workload):
+    t, w, _ = workload
+    ps3 = PowerSensor3Meter(seed=3).measure(t, w)
+    avg = BuiltinCounterMeter(mode="average", window_s=1.0).measure(t, w)
+    assert abs(ps3.energy_error_frac) < abs(avg.energy_error_frac)
+
+
+def test_rapl_like_energy_ok_but_low_rate(workload):
+    t, w, _ = workload
+    m = RaplLikeMeter().measure(t, w)
+    assert abs(m.energy_error_frac) < 0.02
+    assert m.update_rate_hz == 1000
+
+
+def test_compare_meters_returns_all(workload):
+    t, w, _ = workload
+    res = compare_meters(t, w)
+    assert {"ground-truth", "powersensor3", "builtin-instant", "builtin-average"} <= set(res)

@@ -1,0 +1,116 @@
+"""Wire-protocol unit + property tests (byte-exact round-trip)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import protocol
+from repro.core.protocol import SensorConfigBlock
+
+
+def test_single_packet_roundtrip():
+    raw = protocol.encode_packets([3], [1023], [1])
+    assert len(raw) == 2
+    ids, vals, marks, consumed = protocol.decode_packets(raw)
+    assert consumed == 2
+    assert ids[0] == 3 and vals[0] == 1023 and marks[0] == 1
+
+
+def test_first_second_byte_flags():
+    raw = protocol.encode_packets([0], [0], [0])
+    assert raw[0] & 0x80 and not raw[1] & 0x80
+
+
+def test_out_of_range_rejected():
+    with pytest.raises(ValueError):
+        protocol.encode_packets([0], [1024], [0])
+    with pytest.raises(ValueError):
+        protocol.encode_packets([8], [0], [0])
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    st.lists(
+        st.tuples(
+            st.integers(0, 7), st.integers(0, 1023), st.integers(0, 1)
+        ),
+        min_size=1,
+        max_size=64,
+    )
+)
+def test_roundtrip_property(packets):
+    ids, vals, marks = map(np.array, zip(*packets))
+    raw = protocol.encode_packets(ids, vals, marks)
+    dids, dvals, dmarks, consumed = protocol.decode_packets(raw)
+    assert consumed == len(raw)
+    np.testing.assert_array_equal(dids, ids)
+    np.testing.assert_array_equal(dvals, vals)
+    np.testing.assert_array_equal(dmarks, marks)
+
+
+def test_resync_on_garbage_prefix():
+    raw = protocol.encode_packets([1, 2], [100, 200], [0, 0])
+    noisy = bytes([0x01]) + raw  # stray second-byte first
+    ids, vals, marks, consumed = protocol.decode_packets(noisy)
+    np.testing.assert_array_equal(ids, [1, 2])
+    np.testing.assert_array_equal(vals, [100, 200])
+
+
+def test_partial_packet_left_unconsumed():
+    raw = protocol.encode_packets([1], [100], [0])
+    ids, vals, marks, consumed = protocol.decode_packets(raw[:1])
+    assert len(ids) == 0
+    assert consumed <= 1
+
+
+def test_timestamp_detection():
+    ids = np.array([7, 7, 0])
+    marks = np.array([1, 0, 1])
+    ts = protocol.is_timestamp(ids, marks)
+    np.testing.assert_array_equal(ts, [True, False, False])
+
+
+def test_timestamp_unwrap():
+    # frames every 50 µs, 10-bit wrap at 1024
+    true_t = np.arange(0, 5000, 50)
+    wrapped = true_t % 1024
+    rec = protocol.unwrap_timestamps(wrapped)
+    np.testing.assert_array_equal(rec, true_t)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 1023), st.integers(1, 500))
+def test_timestamp_unwrap_property(start, n):
+    true_t = start + np.arange(n) * 50
+    rec = protocol.unwrap_timestamps(true_t % 1024)
+    np.testing.assert_array_equal(np.diff(rec), 50)
+
+
+def test_config_block_roundtrip():
+    blk = SensorConfigBlock(
+        name="pcie8p.i", type_code=0, enabled=True, vref=3.3,
+        sensitivity=0.0825, offset_cal=-0.12, gain_cal=1.002,
+    )
+    blk2 = SensorConfigBlock.unpack(blk.pack())
+    assert blk2.name == blk.name
+    assert blk2.type_code == blk.type_code
+    assert blk2.enabled == blk.enabled
+    np.testing.assert_allclose(
+        [blk2.vref, blk2.sensitivity, blk2.offset_cal, blk2.gain_cal],
+        [blk.vref, blk.sensitivity, blk.offset_cal, blk.gain_cal],
+        rtol=1e-6,
+    )
+
+
+def test_config_conversion_current_channel():
+    blk = SensorConfigBlock(type_code=0, enabled=True, vref=3.3, sensitivity=0.165)
+    # mid-rail code -> 0 A
+    mid_code = 0.5 * 1023
+    assert abs(blk.raw_to_physical(mid_code)) < 1e-9
+    # full-scale -> +10 A
+    np.testing.assert_allclose(blk.raw_to_physical(1023), 10.0, rtol=1e-3)
+
+
+def test_config_conversion_voltage_channel():
+    blk = SensorConfigBlock(type_code=1, enabled=True, vref=3.3, sensitivity=0.2)
+    np.testing.assert_allclose(blk.raw_to_physical(1023), 16.5, rtol=1e-3)

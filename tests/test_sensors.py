@@ -1,0 +1,64 @@
+"""Sensor physics: Table I accuracy model + noise statistics."""
+import numpy as np
+import pytest
+
+from repro.core.sensors import MODULE_CATALOG, SensorModule, adc_quantize, table1
+
+# Paper Table I: (module, E_u mV, E_i A, E_p W)
+TABLE1_PAPER = {
+    "slot-10a-12v": (28.6, 0.35, 4.2),
+    "slot-10a-3v3": (19.9, 0.35, 1.2),
+    "usb-c": (28.6, 0.35, 7.0),
+    "pcie8pin-20a": (28.6, 0.41, 5.0),
+}
+
+
+@pytest.mark.parametrize("key", list(TABLE1_PAPER))
+def test_table1_matches_paper(key):
+    spec = MODULE_CATALOG[key]
+    eu, ei, ep = TABLE1_PAPER[key]
+    assert spec.voltage_error * 1e3 == pytest.approx(eu, rel=0.02)
+    assert spec.current_error == pytest.approx(ei, rel=0.03)
+    assert spec.power_error == pytest.approx(ep, rel=0.05)
+
+
+def test_table1_report_has_all_modules():
+    rows = table1()
+    assert {r["module"] for r in rows} >= set(TABLE1_PAPER)
+
+
+def test_current_sensitivity_maps_full_scale():
+    spec = MODULE_CATALOG["slot-10a-12v"]
+    # +10 A must land at vref (full scale), -10 A at 0
+    assert spec.current_sensitivity * spec.max_amps == pytest.approx(3.3 / 2)
+
+
+def test_hall_noise_statistics():
+    mod = SensorModule(MODULE_CATALOG["slot-10a-12v"], seed=3)
+    rng = np.random.default_rng(0)
+    amps = np.zeros(200_000)
+    pins = mod.current_pin_volts(amps, rng)
+    # std of pin voltage = sensitivity * hall noise rms
+    measured = pins.std() / mod.spec.current_sensitivity
+    assert measured == pytest.approx(mod.spec.hall_noise_arms, rel=0.02)
+
+
+def test_manufacturing_offset_is_deterministic_per_seed():
+    a = SensorModule(MODULE_CATALOG["usb-c"], seed=7)
+    b = SensorModule(MODULE_CATALOG["usb-c"], seed=7)
+    c = SensorModule(MODULE_CATALOG["usb-c"], seed=8)
+    assert a.hall_offset_amps == b.hall_offset_amps
+    assert a.hall_offset_amps != c.hall_offset_amps
+
+
+def test_adc_quantize_clips_and_rounds():
+    np.testing.assert_array_equal(adc_quantize(np.array([-1.0, 0.0, 3.3, 99.0])), [0, 0, 1023, 1023])
+    assert adc_quantize(3.3 / 1023 * 100.4) == 100
+
+
+def test_power_error_formula():
+    # E_p = sqrt((U Ei)^2 + (I Eu)^2 + (Ei Eu)^2), paper §III-A
+    spec = MODULE_CATALOG["slot-10a-12v"]
+    ei, eu = spec.current_error, spec.voltage_error
+    expect = np.sqrt((12.0 * ei) ** 2 + (10.0 * eu) ** 2 + (ei * eu) ** 2)
+    assert spec.power_error == pytest.approx(expect, rel=1e-9)

@@ -1,0 +1,42 @@
+"""Compare two dry-run JSONs (baseline vs hillclimb iteration).
+
+    python tools/perf_diff.py grok1_314b train_4k baseline h1_moesort
+"""
+import json
+import sys
+
+KEYS = [
+    ("flops_per_dev", 1e12, "TFLOP/dev"),
+    ("hbm_bytes_per_dev", 1e9, "GB/dev"),
+    ("coll_bytes_per_dev", 1e9, "GB/dev"),
+    ("t_compute_s", 1e-3, "ms"),
+    ("t_memory_s", 1e-3, "ms"),
+    ("t_collective_s", 1e-3, "ms"),
+    ("step_time_s", 1e-3, "ms"),
+    ("useful_flops_ratio", 1, ""),
+    ("roofline_fraction", 1, ""),
+]
+
+
+def load(arch, shape, tag, mesh="pod16x16"):
+    with open(f"experiments/dryrun/{arch}__{shape}__{mesh}__{tag}.json") as f:
+        return json.load(f)
+
+
+def main():
+    arch, shape, tag_a, tag_b = sys.argv[1:5]
+    a = load(arch, shape, tag_a)
+    b = load(arch, shape, tag_b)
+    ra, rb = a["roofline"], b["roofline"]
+    print(f"{arch} × {shape}:  {tag_a}  ->  {tag_b}")
+    for k, scale, unit in KEYS:
+        va, vb = ra[k], rb[k]
+        delta = (vb - va) / va * 100 if va else float("nan")
+        print(f"  {k:<22s} {va/scale:12.3f} -> {vb/scale:12.3f} {unit:<9s} ({delta:+.1f}%)")
+    print(f"  bottleneck             {ra['bottleneck']:>12s} -> {rb['bottleneck']:>12s}")
+    ta, tb = a["memory"].get("temp_size_in_bytes", 0), b["memory"].get("temp_size_in_bytes", 0)
+    print(f"  temp_mem_GB            {ta/1e9:12.2f} -> {tb/1e9:12.2f}")
+
+
+if __name__ == "__main__":
+    main()
