@@ -1,0 +1,182 @@
+"""Receiver hot-path throughput: decoded frames/s, seed vs vectorised.
+
+The seed receiver fell back to per-frame Python loops for dump output and
+per-channel boolean masking for conversion — exactly the host-overhead
+trap the paper's §III-C lightweight-thread design avoids.  This benchmark
+replays the *same* pre-generated 10 s, 8-channel, dump-enabled byte stream
+through
+
+* ``legacy``     — a faithful copy of the seed `_process` hot path
+  (per-sid masked `raw_to_physical`, nested f-string dump loop);
+* ``vectorised`` — the current `PowerSensor` receiver (fused affine
+  conversion, ring-buffer append, batched %-format dump).
+
+    PYTHONPATH=src python -m benchmarks.receiver_throughput [seconds]
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core import ConstantLoad, PowerSensor, make_device
+from repro.core import protocol
+from repro.core.firmware import FRAME_US, N_CHANNELS
+from repro.core.host import MAX_PAIRS
+
+from .common import emit, timer
+
+
+class _NullDump:
+    """Counts dumped characters without retaining them."""
+
+    def __init__(self):
+        self.chars = 0
+
+    def write(self, s: str) -> None:
+        self.chars += len(s)
+
+    def flush(self) -> None: ...
+
+    def tell(self) -> int:
+        return self.chars
+
+
+def _record_stream(seconds: float, chunk_s: float = 0.5):
+    """Generate the 8-channel 20 kHz byte stream once, in poll-sized chunks."""
+    dev = make_device(
+        ["pcie8pin-20a", "slot-10a-12v", "slot-10a-3v3", "hc-50a"],
+        ConstantLoad(12.0, 4.0),
+        seed=0,
+    )
+    ps = PowerSensor(dev)  # performs the handshake; stream starts
+    chunks = []
+    remaining = seconds
+    while remaining > 1e-12:
+        step = min(chunk_s, remaining)
+        dev.advance(step)
+        chunks.append(dev.read())
+        remaining -= step
+    return ps, chunks
+
+
+class LegacyReceiver:
+    """The seed _process hot path, verbatim (for before/after comparison)."""
+
+    def __init__(self, configs, dump):
+        self.configs = configs
+        self._dump = dump
+        self._dump_every = 1
+        self._last_ts10 = None
+        self._device_time_us = 0.0
+        self._energy = np.zeros(MAX_PAIRS)
+        self._n_samples = 0
+
+    def process(self, ids, vals, marks) -> int:
+        is_ts = protocol.is_timestamp(ids, marks)
+        ts_idx = np.flatnonzero(is_ts)
+        if ts_idx.size == 0:
+            return 0
+        ts_vals = vals[ts_idx]
+        if self._last_ts10 is None:
+            base = float(ts_vals[0])
+            self._device_time_us = base
+            deltas = np.diff(ts_vals) % 1024
+            times = base + np.concatenate([[0], np.cumsum(deltas)])
+        else:
+            d0 = (ts_vals[0] - self._last_ts10) % 1024
+            deltas = np.concatenate([[d0], np.diff(ts_vals) % 1024])
+            times = self._device_time_us + np.cumsum(deltas)
+        self._last_ts10 = int(ts_vals[-1])
+        self._device_time_us = float(times[-1])
+
+        n_frames = ts_idx.size
+        dt_s = FRAME_US / 1e6
+        data_mask = ~is_ts
+        d_ids = ids[data_mask]
+        d_vals = vals[data_mask]
+        frame_of = np.searchsorted(ts_idx, np.flatnonzero(data_mask)) - 1
+        ok = frame_of >= 0
+        d_ids, d_vals, frame_of = d_ids[ok], d_vals[ok], frame_of[ok]
+
+        volts = np.zeros((n_frames, MAX_PAIRS))
+        amps = np.zeros((n_frames, MAX_PAIRS))
+        for sid in range(N_CHANNELS):
+            blk = self.configs[sid]
+            if not blk.enabled:
+                continue
+            sel = d_ids == sid
+            if not np.any(sel):
+                continue
+            phys = blk.raw_to_physical(d_vals[sel])
+            tgt = amps if blk.type_code == 0 else volts
+            tgt[frame_of[sel], sid // 2] = phys
+
+        watts = volts * amps
+        self._energy += watts.sum(axis=0) * dt_s
+        self._n_samples += n_frames
+
+        step = self._dump_every
+        sel = np.arange(0, n_frames, step)
+        lines = []
+        for f in sel:
+            t = times[f] / 1e6
+            for p in range(MAX_PAIRS):
+                if self.configs[2 * p].enabled:
+                    lines.append(
+                        f"{t:.6f} {p} {volts[f, p]:.4f} {amps[f, p]:.4f} {watts[f, p]:.4f}\n"
+                    )
+        self._dump.write("".join(lines))
+        return n_frames
+
+
+def _run_legacy(ps, chunks) -> tuple[float, int, float]:
+    dump = _NullDump()
+    rx = LegacyReceiver(ps.configs, dump)
+    frames = 0
+    residual = b""
+    with timer() as t:
+        for chunk in chunks:
+            buf = residual + chunk
+            ids, vals, marks, consumed = protocol.decode_packets(buf)
+            residual = buf[consumed:]
+            frames += rx.process(ids, vals, marks)
+    return t.dt, frames, float(rx._energy.sum())
+
+
+def _run_vectorised(ps, chunks) -> tuple[float, int, float]:
+    dump = _NullDump()
+    ps.set_dump_file(dump)
+    frames = 0
+    residual = b""
+    with timer() as t:
+        for chunk in chunks:
+            buf = residual + chunk
+            ids, vals, marks, consumed = protocol.decode_packets(buf)
+            residual = buf[consumed:]
+            frames += ps._process(ids, vals, marks)
+    ps.set_dump_file(None)
+    return t.dt, frames, float(ps._energy.sum())
+
+
+def run(seconds: float = 10.0) -> None:
+    ps, chunks = _record_stream(seconds)
+    stream_bytes = sum(len(c) for c in chunks)
+    dt_new, frames_new, e_new = _run_vectorised(ps, chunks)
+    dt_old, frames_old, e_old = _run_legacy(ps, chunks)
+    assert frames_new == frames_old, (frames_new, frames_old)
+    assert abs(e_new - e_old) < max(1e-6, 1e-6 * abs(e_old)), (e_new, e_old)
+    fps_old = frames_old / dt_old
+    fps_new = frames_new / dt_new
+    emit("receiver_legacy", dt_old / frames_old * 1e6, f"{fps_old:.0f} frames/s")
+    emit("receiver_vectorised", dt_new / frames_new * 1e6, f"{fps_new:.0f} frames/s")
+    print(
+        f"# {frames_new} frames ({stream_bytes/1e6:.1f} MB stream, "
+        f"{seconds:.0f} s at 20 kHz, 8 ch, dump on): "
+        f"legacy {fps_old:,.0f} -> vectorised {fps_new:,.0f} frames/s "
+        f"({fps_new/fps_old:.1f}x)"
+    )
+
+
+if __name__ == "__main__":
+    run(float(sys.argv[1]) if len(sys.argv) > 1 else 10.0)

@@ -16,6 +16,7 @@ from . import (
     fig7_compare,
     fig8_tuning,
     fig12_storage,
+    receiver_throughput,
     roofline_report,
     stability,
     table1_accuracy,
@@ -32,6 +33,7 @@ BENCHES = {
     "fig12": fig12_storage.run,
     "stability": stability.run,
     "roofline": roofline_report.run,
+    "receiver": receiver_throughput.run,
 }
 
 

@@ -24,11 +24,17 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.stream.ring import FrameRing
+from repro.stream.textio import format_dump_block
+
 from . import protocol
 from .firmware import FRAME_US, N_CHANNELS, VirtualDevice
-from .protocol import CMD_MARKER, CMD_READ_CONFIG, CMD_START_STREAM, CMD_STOP_STREAM, CMD_VERSION, CMD_WRITE_CONFIG, CONFIG_BLOCK_SIZE, SensorConfigBlock
+from .protocol import ADC_MAX, CMD_MARKER, CMD_READ_CONFIG, CMD_START_STREAM, CMD_STOP_STREAM, CMD_VERSION, CMD_WRITE_CONFIG, CONFIG_BLOCK_SIZE, SensorConfigBlock
 
 MAX_PAIRS = N_CHANNELS // 2
+
+#: default ring capacity: 2^18 frames ≈ 13 s of 20 kHz history
+DEFAULT_RING_CAPACITY = 1 << 18
 
 
 @dataclass(frozen=True)
@@ -67,26 +73,52 @@ def Watt(first: State, second: State, pair: int = -1) -> float:
     return Joules(first, second, pair) / dt if dt > 0 else 0.0
 
 
+def _forward_fill(dense: np.ndarray, observed: np.ndarray, held: np.ndarray) -> np.ndarray:
+    """Per-column forward fill of unobserved entries, seeded with `held`.
+
+    ``dense`` is (n_frames, n_pairs) with zeros where ``observed`` is False;
+    rows before the first observation of a column take that column's held
+    value from the previous batch.
+    """
+    if observed.all():
+        return dense
+    n, p = dense.shape
+    full = np.vstack([held[None, :], dense])
+    ok = np.vstack([np.ones((1, p), dtype=bool), observed])
+    idx = np.where(ok, np.arange(n + 1)[:, None], 0)
+    np.maximum.accumulate(idx, axis=0, out=idx)
+    return full[idx, np.arange(p)[None, :]][1:]
+
+
 class PowerSensor:
     """Host-side driver for a (virtual) PowerSensor3 device."""
 
-    def __init__(self, device: VirtualDevice, start: bool = True):
+    def __init__(
+        self,
+        device: VirtualDevice,
+        start: bool = True,
+        ring_capacity: int = DEFAULT_RING_CAPACITY,
+    ):
         self.device = device
         self._lock = threading.Lock()
         self._residual = b""
         self._pending_marker_chars: list[str] = []
         self._marker_events: list[tuple[str, float]] = []
         self._dump: io.TextIOBase | None = None
+        self._dump_owns = False
         self._dump_every = 1
         self._frame_count = 0
         self._device_time_us: float = 0.0
         self._last_ts10: int | None = None
         self._energy = np.zeros(MAX_PAIRS)
+        # last *observed* value per pair — held across frames with no data
+        # packets for that pair, so read() never flickers to 0
         self._inst_v = np.zeros(MAX_PAIRS)
         self._inst_i = np.zeros(MAX_PAIRS)
         self._n_samples = 0
         self._thread: threading.Thread | None = None
         self._thread_stop = threading.Event()
+        self.ring = FrameRing(ring_capacity, MAX_PAIRS)
 
         # ---- connect handshake: version + config download ----
         self.device.write(CMD_VERSION)
@@ -96,8 +128,40 @@ class PowerSensor:
             self.device.write(CMD_READ_CONFIG + bytes([sid]))
             raw = self.device.read(CONFIG_BLOCK_SIZE)
             self.configs.append(SensorConfigBlock.unpack(raw))
+        self._refresh_conversion()
         if start:
             self.start_streaming()
+
+    def _refresh_conversion(self) -> None:
+        """Precompute per-channel affine raw→physical tables.
+
+        `raw_to_physical` is affine in the ADC code for both channel types;
+        flattening it to ``phys = a·code + b`` lets the receiver convert a
+        whole poll batch with one fused multiply-add over all channels.
+        """
+        self._lin_a = np.zeros(N_CHANNELS)
+        self._lin_b = np.zeros(N_CHANNELS)
+        self._ch_enabled = np.zeros(N_CHANNELS, dtype=bool)
+        self._ch_is_volt = np.zeros(N_CHANNELS, dtype=bool)
+        # pairs with an enabled voltage/current channel: only these may hold
+        # a last-observed value — disabled pairs must read 0, not a stale hold
+        self._pair_has_v = np.zeros(MAX_PAIRS, dtype=bool)
+        self._pair_has_i = np.zeros(MAX_PAIRS, dtype=bool)
+        for sid, blk in enumerate(self.configs):
+            self._ch_enabled[sid] = blk.enabled
+            self._ch_is_volt[sid] = blk.type_code != 0
+            if blk.enabled:
+                if blk.type_code != 0:
+                    self._pair_has_v[sid // 2] = True
+                else:
+                    self._pair_has_i[sid // 2] = True
+            self._lin_a[sid] = blk.vref / ADC_MAX / blk.sensitivity * blk.gain_cal
+            if blk.type_code == 0:
+                self._lin_b[sid] = (
+                    -blk.vref / 2.0 / blk.sensitivity - blk.offset_cal
+                ) * blk.gain_cal
+            else:
+                self._lin_b[sid] = -blk.offset_cal * blk.gain_cal
 
     # ------------------------------------------------------------ config access
     def _read_cstring(self) -> str:
@@ -114,6 +178,7 @@ class PowerSensor:
     def set_config(self, sid: int, block: SensorConfigBlock) -> None:
         self.device.write(CMD_WRITE_CONFIG + bytes([sid]) + block.pack())
         self.configs[sid] = block
+        self._refresh_conversion()
 
     # ------------------------------------------------------------ streaming
     def start_streaming(self) -> None:
@@ -133,18 +198,36 @@ class PowerSensor:
     def set_dump_file(self, path_or_file, every: int = 1) -> None:
         """Continuous mode: write records as ``t pair V A W`` lines.
 
-        `every` subsamples the dump (1 = full 20 kHz resolution).
+        `every` subsamples the dump (1 = full 20 kHz resolution).  Handles
+        opened here are owned here: replacing or clearing the dump target
+        (or `close()`) closes them.  The header is written once per fresh
+        file — streams handed in mid-use are not re-headed.
         """
+        self._close_dump()
         if path_or_file is None:
-            if self._dump:
-                self._dump.flush()
-            self._dump = None
             return
-        self._dump = (
-            open(path_or_file, "w") if isinstance(path_or_file, (str, bytes)) else path_or_file
-        )
+        if isinstance(path_or_file, (str, bytes)):
+            self._dump = open(path_or_file, "w")
+            self._dump_owns = True
+            fresh = True
+        else:
+            self._dump = path_or_file
+            try:
+                fresh = self._dump.tell() == 0
+            except (AttributeError, OSError, io.UnsupportedOperation):
+                fresh = True  # unseekable sink: assume fresh
         self._dump_every = max(1, int(every))
-        self._dump.write("# t_s pair volts amps watts\n")
+        if fresh:
+            self._dump.write("# t_s pair volts amps watts\n")
+
+    def _close_dump(self) -> None:
+        """Flush and detach the dump target, closing it if owned here."""
+        if self._dump is not None:
+            self._dump.flush()
+            if self._dump_owns:
+                self._dump.close()
+            self._dump = None
+            self._dump_owns = False
 
     # ------------------------------------------------------------ the receiver
     def poll(self) -> int:
@@ -157,13 +240,102 @@ class PowerSensor:
                 return 0
             return self._process(ids, vals, marks)
 
+    def _convert_regular(self, ids, vals, marks, per, n_frames):
+        """Reshape-based conversion for a frame-regular batch: no packet
+        scatter, no per-packet frame search — pure column operations."""
+        ch_ids = ids[1:per]
+        codes = vals.reshape(-1, per)[:, 1:]
+        phys = codes * self._lin_a[ch_ids][None, :] + self._lin_b[ch_ids][None, :]
+        pair_of = ch_ids >> 1
+        en = self._ch_enabled[ch_ids]
+        vcols = np.flatnonzero(en & self._ch_is_volt[ch_ids])
+        icols = np.flatnonzero(en & ~self._ch_is_volt[ch_ids])
+        # unobserved-but-enabled pairs hold their last value (see
+        # _forward_fill); pairs with no enabled channel read 0
+        volts = np.empty((n_frames, MAX_PAIRS))
+        amps = np.empty((n_frames, MAX_PAIRS))
+        volts[:] = np.where(self._pair_has_v, self._inst_v, 0.0)[None, :]
+        amps[:] = np.where(self._pair_has_i, self._inst_i, 0.0)[None, :]
+        volts[:, pair_of[vcols]] = phys[:, vcols]
+        amps[:, pair_of[icols]] = phys[:, icols]
+        ch0 = np.flatnonzero(ch_ids == 0)
+        if ch0.size:
+            mk_frames = np.flatnonzero(marks.reshape(-1, per)[:, 1 + ch0[0]])
+        else:
+            mk_frames = np.empty(0, dtype=np.int64)
+        return volts, amps, mk_frames
+
+    def _convert_generic(self, ids, vals, marks, is_ts, ts_idx, n_frames):
+        """Scatter-based conversion for irregular batches (resync, partial
+        frames, mixed layouts)."""
+        data_mask = ~is_ts
+        d_ids = ids[data_mask]
+        d_vals = vals[data_mask]
+        d_marks = marks[data_mask]
+        # frame index of each data packet
+        frame_of = np.searchsorted(ts_idx, np.flatnonzero(data_mask)) - 1
+        ok = frame_of >= 0
+        if not ok.all():
+            d_ids, d_vals, d_marks, frame_of = (
+                d_ids[ok], d_vals[ok], d_marks[ok], frame_of[ok],
+            )
+
+        # markers: marker bit on sensor-0 data packets (extracted before the
+        # enabled-channel filter so a disabled ch0 still carries markers)
+        mk_frames = frame_of[(d_ids == 0) & (d_marks == 1)]
+
+        # one fused multiply-add converts the whole batch to physical units
+        phys = d_vals * self._lin_a[d_ids] + self._lin_b[d_ids]
+        en = self._ch_enabled[d_ids]
+        is_volt = self._ch_is_volt[d_ids]
+        flat = frame_of * MAX_PAIRS + (d_ids >> 1)
+
+        volts = np.zeros((n_frames, MAX_PAIRS))
+        amps = np.zeros((n_frames, MAX_PAIRS))
+        obs_v = np.zeros((n_frames, MAX_PAIRS), dtype=bool)
+        obs_i = np.zeros((n_frames, MAX_PAIRS), dtype=bool)
+        vsel = en & is_volt
+        isel = en & ~is_volt
+        volts.ravel()[flat[vsel]] = phys[vsel]
+        obs_v.ravel()[flat[vsel]] = True
+        amps.ravel()[flat[isel]] = phys[isel]
+        obs_i.ravel()[flat[isel]] = True
+
+        # hold the last observed value across frames that carried no data
+        # packet for an *enabled* pair (instead of flickering to 0); pairs
+        # with no enabled channel stay at 0
+        volts = _forward_fill(volts, obs_v, np.where(self._pair_has_v, self._inst_v, 0.0))
+        amps = _forward_fill(amps, obs_i, np.where(self._pair_has_i, self._inst_i, 0.0))
+        return volts, amps, mk_frames
+
+    def _frames_regular(self, ids, is_ts) -> bool:
+        """Is this batch a whole number of [ts, ch, ch, ...] frames with a
+        constant channel layout?  True for chunked polls of a steady stream
+        (device emissions are frame-atomic), enabling the reshape fast path.
+        """
+        per = 1 + int(self._ch_enabled.sum())
+        if per < 2 or ids.size == 0 or ids.size % per:
+            return False
+        is_ts_r = is_ts.reshape(-1, per)
+        if not is_ts_r[:, 0].all() or is_ts_r[:, 1:].any():
+            return False
+        return bool((ids.reshape(-1, per)[:, 1:] == ids[1:per]).all())
+
     def _process(self, ids, vals, marks) -> int:
         is_ts = protocol.is_timestamp(ids, marks)
-        ts_idx = np.flatnonzero(is_ts)
-        if ts_idx.size == 0:
-            return 0
+        regular = self._frames_regular(ids, is_ts)
+        if regular:
+            per = 1 + int(self._ch_enabled.sum())
+            n_frames = ids.size // per
+            ts_vals = vals[::per]
+        else:
+            ts_idx = np.flatnonzero(is_ts)
+            if ts_idx.size == 0:
+                return 0
+            n_frames = ts_idx.size
+            ts_vals = vals[ts_idx]
+
         # device time reconstruction from 10-bit wrapping µs counter
-        ts_vals = vals[ts_idx]
         if self._last_ts10 is None:
             base = float(ts_vals[0])
             self._device_time_us = base
@@ -176,62 +348,45 @@ class PowerSensor:
         self._last_ts10 = int(ts_vals[-1])
         self._device_time_us = float(times[-1])
 
-        # frame boundaries: packets between consecutive timestamps
-        n_frames = ts_idx.size
         dt_s = FRAME_US / 1e6
+        times_s = times / 1e6
 
-        # physical conversion for every data packet
-        data_mask = ~is_ts
-        d_ids = ids[data_mask]
-        d_vals = vals[data_mask]
-        d_marks = marks[data_mask]
-        # frame index of each data packet
-        frame_of = np.searchsorted(ts_idx, np.flatnonzero(data_mask)) - 1
-        ok = frame_of >= 0
-        d_ids, d_vals, d_marks, frame_of = (
-            d_ids[ok], d_vals[ok], d_marks[ok], frame_of[ok],
-        )
-
-        volts = np.zeros((n_frames, MAX_PAIRS))
-        amps = np.zeros((n_frames, MAX_PAIRS))
-        for sid in range(N_CHANNELS):
-            blk = self.configs[sid]
-            if not blk.enabled:
-                continue
-            sel = d_ids == sid
-            if not np.any(sel):
-                continue
-            phys = blk.raw_to_physical(d_vals[sel])
-            tgt = amps if blk.type_code == 0 else volts
-            tgt[frame_of[sel], sid // 2] = phys
+        if regular:
+            volts, amps, mk_frames = self._convert_regular(ids, vals, marks, per, n_frames)
+        else:
+            volts, amps, mk_frames = self._convert_generic(ids, vals, marks, is_ts, ts_idx, n_frames)
+        self._inst_v = volts[-1].copy()
+        self._inst_i = amps[-1].copy()
 
         watts = volts * amps
         self._energy += watts.sum(axis=0) * dt_s
-        self._inst_v = volts[-1]
-        self._inst_i = amps[-1]
         self._n_samples += n_frames
+        self.ring.append(times_s, volts, amps, watts)
 
-        # markers: marker bit on sensor-0 data packets
-        mk = (d_ids == 0) & (d_marks == 1)
-        for fidx in frame_of[mk]:
-            char = self._pending_marker_chars.pop(0) if self._pending_marker_chars else "?"
-            t_mark = times[min(fidx, n_frames - 1)] / 1e6
-            self._marker_events.append((char, t_mark))
+        if mk_frames.size:
+            t_marks = times_s[np.minimum(mk_frames, n_frames - 1)]
+            chars = [
+                self._pending_marker_chars.pop(0) if self._pending_marker_chars else "?"
+                for _ in range(mk_frames.size)
+            ]
+            events = list(zip(chars, t_marks.tolist()))
+            self._marker_events.extend(events)
             if self._dump:
-                self._dump.write(f"M {char} {t_mark:.6f}\n")
+                self._dump.write("".join(f"M {c} {t:.6f}\n" for c, t in events))
 
         if self._dump:
-            step = self._dump_every
-            sel = np.arange(0, n_frames, step)
-            lines = []
-            for f in sel:
-                t = times[f] / 1e6
-                for p in range(MAX_PAIRS):
-                    if self.configs[2 * p].enabled:
-                        lines.append(
-                            f"{t:.6f} {p} {volts[f, p]:.4f} {amps[f, p]:.4f} {watts[f, p]:.4f}\n"
-                        )
-            self._dump.write("".join(lines))
+            sel = np.arange(0, n_frames, self._dump_every)
+            pairs = np.flatnonzero(self._ch_enabled[0::2])
+            if sel.size and pairs.size:
+                self._dump.write(
+                    format_dump_block(
+                        np.repeat(times_s[sel], pairs.size),
+                        np.tile(pairs, sel.size),
+                        volts[sel][:, pairs].ravel(),
+                        amps[sel][:, pairs].ravel(),
+                        watts[sel][:, pairs].ravel(),
+                    )
+                )
         self._frame_count += n_frames
         return n_frames
 
@@ -239,15 +394,33 @@ class PowerSensor:
     def read(self) -> State:
         self.poll()
         with self._lock:
-            watts = self._inst_v * self._inst_i
+            # instantaneous values are the ring's newest frame — which by
+            # construction holds the last observed V/I per pair
+            if len(self.ring):
+                newest = self.ring.latest(1)
+                t_s = float(newest.times_s[-1])
+                inst_v, inst_i = newest.volts[-1], newest.amps[-1]
+                watts = newest.watts[-1]
+            else:
+                t_s = self._device_time_us / 1e6
+                inst_v, inst_i = self._inst_v, self._inst_i
+                watts = inst_v * inst_i
             return State(
-                time_s=self._device_time_us / 1e6,
+                time_s=t_s,
                 consumed_joules=tuple(self._energy),
                 instant_watts=tuple(watts),
-                instant_volts=tuple(self._inst_v),
-                instant_amps=tuple(self._inst_i),
+                instant_volts=tuple(inst_v),
+                instant_amps=tuple(inst_i),
                 n_samples=self._n_samples,
             )
+
+    def snapshot(self, window_s: float = 1.0, pct: float = 95.0):
+        """Windowed stats (mean/peak/percentile/EWMA/energy) over the ring tail."""
+        from repro.stream.aggregate import window_stats
+
+        self.poll()
+        with self._lock:
+            return window_stats(self.ring.tail_window(window_s), pct=pct)
 
     @property
     def markers(self) -> list[tuple[str, float]]:
@@ -296,5 +469,4 @@ class PowerSensor:
     def close(self) -> None:
         self.stop_thread()
         self.stop_streaming()
-        if self._dump:
-            self._dump.flush()
+        self._close_dump()

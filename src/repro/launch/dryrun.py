@@ -54,7 +54,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, run_cfg=None,
     t_compile = time.time() - t0 - t_lower
     mem = rl.memory_analysis_dict(compiled)
     print(compiled.memory_analysis())
-    ca = compiled.cost_analysis() or {}
+    ca = rl.cost_analysis_dict(compiled)
     print({k: v for k, v in ca.items() if k in ("flops", "bytes accessed")})
     colls = rl.collective_wire_bytes(compiled.as_text())
 

@@ -6,10 +6,18 @@
 Implements a minimal continuous-batching server loop: a queue of
 synthetic requests, a fixed decode batch, slot recycling on completion.
 Reports tokens/s (wall, CPU) and modelled J/token (TPU power model).
+
+With ``--fleet N`` (default 2, ``--fleet 0`` disables) a `FleetMonitor`
+over N virtual PowerSensor3 devices rides along: each device plays the
+modelled per-shard serving power, request waves are bracketed with
+time-synced markers, and per-request-wave **measured** J/token is
+attributed from marker-aligned ring-buffer interval queries — the
+psrun-style external check on the model's own telemetry.
 """
 from __future__ import annotations
 
 import argparse
+import string
 import time
 
 import jax
@@ -19,6 +27,23 @@ import numpy as np
 from repro.configs import RunConfig, get_config, smoke_config
 from repro.models import build_model
 from repro.power import EnergyTelemetry, StepCost
+
+_WAVE_CHARS = string.ascii_uppercase + string.ascii_lowercase + string.digits
+
+
+def _make_fleet(n_devices: int, total_watts: float, seed: int):
+    """N virtual sensor devices, each playing one shard of the serving power."""
+    from repro.core import ConstantLoad
+    from repro.stream import make_virtual_fleet
+
+    volts = 12.0
+    per_dev = max(total_watts, 1e-3) / n_devices
+    return make_virtual_fleet(
+        [ConstantLoad(volts, per_dev / volts) for _ in range(n_devices)],
+        seed=seed,
+        window_s=0.5,
+        ring_capacity=1 << 18,  # ~13 s of history per device at 20 kHz
+    )
 
 
 def main(argv=None):
@@ -31,6 +56,8 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fleet", type=int, default=2,
+                    help="virtual PowerSensor3 devices for measured J/token (0 = off)")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -54,14 +81,41 @@ def main(argv=None):
         n_layers=cfg.n_layers, useful_flops_per_step=2.0 * n * b,
     )
 
+    fleet = None
+    if args.fleet > 0:
+        modelled_watts = (
+            telemetry.modelled_step_joules / telemetry.modelled_step_time_s
+            if telemetry.modelled_step_time_s
+            else 0.0
+        )
+        fleet = _make_fleet(args.fleet, modelled_watts, args.seed)
+
     done_tokens = 0
+    wave_tokens: list[int] = []
+    # measured energy per wave, resolved incrementally (one wave after its
+    # closing marker lands) so long runs never outlive the ring retention
+    wave_reports: dict[int, tuple[float, int]] = {}
+    max_waves = len(_WAVE_CHARS) - 1
+
+    def _resolve_wave(k: int) -> None:
+        if fleet is None or k < 0 or k in wave_reports or k >= max_waves:
+            return
+        per_dev = fleet.interval(_WAVE_CHARS[k], _WAVE_CHARS[k + 1])
+        if per_dev:
+            wave_reports[k] = (
+                sum(iv.total_energy_j for iv in per_dev.values()), len(per_dev),
+            )
+
     t0 = time.perf_counter()
     batch_idx = 0
+    t_wave = t0
     while pending:
         batch = pending[:b]
         pending = pending[b:]
         while len(batch) < b:  # pad the last wave
             batch.append(batch[-1])
+        if fleet is not None and batch_idx < max_waves:
+            fleet.mark_all(_WAVE_CHARS[batch_idx])  # last char reserved as closer
         tokens = jnp.asarray(np.stack(batch))
         if cfg.is_encdec:
             frames = jnp.asarray(
@@ -77,13 +131,41 @@ def main(argv=None):
             logits, cache = decode(params, cache, tok)
             telemetry.record_step(batch_idx * args.gen_len + i, 0.0, b)
             done_tokens += b
+        wave_tokens.append(b * args.gen_len)
+        if fleet is not None:
+            # devices play modelled power over the wave's wall time
+            now = time.perf_counter()
+            fleet.advance(now - t_wave)
+            t_wave = now
+            # this wave's advance flushed the previous wave's closing marker
+            _resolve_wave(batch_idx - 1)
         batch_idx += 1
+    if fleet is not None:
+        fleet.mark_all(_WAVE_CHARS[min(batch_idx, max_waves)])  # closing bracket
+        fleet.advance(0.01)  # flush the closing marker onto the stream
+        if batch_idx <= max_waves:  # past that, the closer's time is wrong
+            _resolve_wave(batch_idx - 1)
     dt = time.perf_counter() - t0
     s = telemetry.summary()
     print(f"served {args.requests} requests, {done_tokens} tokens in {dt:.2f}s "
           f"({done_tokens/dt:.1f} tok/s wall on CPU)")
     print(f"modelled: {s['j_per_token']*1e3:.3f} mJ/token, "
           f"{s['modelled_step_s']*1e3:.3f} ms/decode-step on {telemetry.chip.name}")
+    if fleet is not None:
+        snap = fleet.snapshot()
+        print(f"fleet: {snap.aggregate.n_devices} devices, "
+              f"{snap.aggregate.mean_w:.1f} W windowed mean, "
+              f"{snap.aggregate.energy_j:.2f} J in window")
+        for k in sorted(wave_reports):
+            wave_j, n_dev = wave_reports[k]
+            print(f"  wave {k}: measured {wave_j:.3f} J over "
+                  f"{n_dev} devices -> "
+                  f"{wave_j / wave_tokens[k] * 1e3:.3f} mJ/token")
+        missing = batch_idx - len(wave_reports)
+        if missing:
+            print(f"  ({missing} waves not individually attributed: "
+                  f"marker alphabet exhausted or ring history evicted)")
+        fleet.close()
 
 
 if __name__ == "__main__":

@@ -82,13 +82,15 @@ class PowerSensor3Meter(PowerMeter):
     update_rate_hz: float = 20_000.0
 
     def measure(self, times, watts):
-        import io
-
         from repro.core import ConstantLoad, PowerSensor, TraceLoad, make_device
         from repro.core.calibration import calibrate
+        from repro.core.host import DEFAULT_RING_CAPACITY, Joules
 
+        t_end = float(times[-1])
+        # ring must retain the whole trace at 20 kHz
+        capacity = max(DEFAULT_RING_CAPACITY, int(t_end * 20_000 * 1.05) + 4096)
         dev = make_device([self.module], ConstantLoad(self.volts, 0.0), seed=self.seed)
-        ps = PowerSensor(dev)
+        ps = PowerSensor(dev, ring_capacity=capacity)
         if self.calibrated:
             calibrate(ps, {0: self.volts}, n_samples=8000)
         dev.firmware.dut.loads[0] = TraceLoad(
@@ -97,22 +99,16 @@ class PowerSensor3Meter(PowerMeter):
             volts=self.volts,
             t_offset_s=dev.t_s,  # playback starts now, not at device boot
         )
-        # restart the stream so t=0 aligns with the trace
-        buf = io.StringIO()
-        ps.set_dump_file(buf)
-        t_end = float(times[-1])
+        seq0 = ps.ring.head  # first frame of the playback window
         a = ps.read()
         ps.run_for(t_end)
         b = ps.read()
-        ps.set_dump_file(None)
-        rows = [l.split() for l in buf.getvalue().splitlines() if l and l[0].isdigit()]
-        ts = np.array([float(r[0]) for r in rows])
-        ws = np.array([float(r[4]) for r in rows])
+        block = ps.ring.since(seq0)
+        ts = block.times_s
+        ws = block.watts[:, 0]
         # device clock started before the trace (calibration); re-zero
         if len(ts):
             ts = ts - ts[0]
-        from repro.core.host import Joules
-
         return Measurement(
             self.name, ts, ws, Joules(a, b), _true_energy(times, watts), self.update_rate_hz
         )
@@ -143,11 +139,9 @@ class BuiltinCounterMeter(PowerMeter):
         if self.mode == "instant":
             vals = np.interp(sample_ts, times, watts)
         else:
-            vals = np.empty_like(sample_ts)
-            for i, t in enumerate(sample_ts):
-                lo = max(0.0, t - self.window_s)
-                sel = (grid >= lo) & (grid <= t)
-                vals[i] = dense[sel].mean() if np.any(sel) else dense[0]
+            from repro.stream.aggregate import windowed_mean_at
+
+            vals = windowed_mean_at(grid, dense, sample_ts, self.window_s)
         # energy as an application would compute it: trapezoid over readings
         energy = float(np.trapezoid(vals, sample_ts)) if len(sample_ts) > 1 else 0.0
         # extend to full window with edge-hold (application has no better info)

@@ -1,0 +1,46 @@
+"""`repro.stream` — streaming telemetry over decoded PowerSensor3 frames.
+
+Scales the host side from "one sensor, one script" to a fleet of devices
+feeding live consumers:
+
+* `FrameRing` / `FrameBlock` — preallocated numpy ring buffer of decoded
+  frames (time/V/A/W per pair); the receiver's output, every consumer's
+  input (no dump-file text round-trips);
+* `window_stats` / `windowed_mean_at` / `sliding_mean` — cumulative-sum
+  vectorised windowed aggregation (mean/peak/percentile/EWMA/energy);
+* `FleetMonitor` — owns N `PowerSensor`s, polls them round-robin or via
+  per-device threads, and serves per-device + aggregate snapshots and
+  marker-aligned interval queries.
+"""
+from .aggregate import (
+    WindowStats,
+    cumulative_energy,
+    sliding_mean,
+    window_stats,
+    windowed_mean_at,
+)
+from .fleet import (
+    DeviceSnapshot,
+    FleetAggregate,
+    FleetMonitor,
+    FleetSnapshot,
+    IntervalStats,
+    make_virtual_fleet,
+)
+from .ring import FrameBlock, FrameRing
+
+__all__ = [
+    "WindowStats",
+    "cumulative_energy",
+    "sliding_mean",
+    "window_stats",
+    "windowed_mean_at",
+    "DeviceSnapshot",
+    "FleetAggregate",
+    "FleetMonitor",
+    "FleetSnapshot",
+    "IntervalStats",
+    "make_virtual_fleet",
+    "FrameBlock",
+    "FrameRing",
+]

@@ -1,0 +1,146 @@
+"""Windowed aggregation over decoded frame blocks — all cumulative-sum
+vectorised, no per-frame Python loops.
+
+Two layers:
+
+* one-shot stats over a block (`window_stats`): per-pair mean / peak /
+  percentile watts, EWMA, trapezoidal energy;
+* sliding-window series (`windowed_mean_at`, `sliding_mean`): prefix-sum +
+  binary-search evaluation of trailing-window averages at arbitrary query
+  times, O(n log n) total instead of O(n · window) — this is also what the
+  legacy NVML-style meter model in `repro.power.pmt` uses.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .ring import FrameBlock
+
+
+@dataclass(frozen=True)
+class WindowStats:
+    """Aggregate statistics of one time window of frames (per pair + total)."""
+
+    t0_s: float
+    t1_s: float
+    n_frames: int
+    mean_w: np.ndarray  # (n_pairs,)
+    peak_w: np.ndarray  # (n_pairs,) per-pair max
+    pct_w: np.ndarray  # (n_pairs,) percentile of per-frame watts
+    ewma_w: np.ndarray  # (n_pairs,) exponentially weighted toward t1
+    energy_j: np.ndarray  # (n_pairs,) trapezoidal integral
+    pct: float = 95.0
+
+    @property
+    def duration_s(self) -> float:
+        return self.t1_s - self.t0_s
+
+    @property
+    def total_mean_w(self) -> float:
+        return float(self.mean_w.sum())
+
+    @property
+    def total_peak_w(self) -> float:
+        return float(self.peak_w.sum())
+
+    @property
+    def total_energy_j(self) -> float:
+        return float(self.energy_j.sum())
+
+    @property
+    def total_ewma_w(self) -> float:
+        return float(self.ewma_w.sum())
+
+
+def _empty_stats(n_pairs: int, pct: float) -> WindowStats:
+    z = np.zeros(n_pairs)
+    return WindowStats(0.0, 0.0, 0, z, z.copy(), z.copy(), z.copy(), z.copy(), pct)
+
+
+def window_stats(
+    block: FrameBlock, pct: float = 95.0, ewma_tau_s: float = 0.05
+) -> WindowStats:
+    """Vectorised aggregate stats over a frame block."""
+    n = len(block)
+    if n == 0:
+        return _empty_stats(block.watts.shape[1] if block.watts.ndim == 2 else 0, pct)
+    w = block.watts
+    t = block.times_s
+    if n > 1:
+        energy = np.trapezoid(w, t, axis=0)
+    else:
+        energy = np.zeros(w.shape[1])
+    # EWMA snapshot: weights decay exponentially away from the window end
+    decay = np.exp((t - t[-1]) / max(ewma_tau_s, 1e-12))
+    ewma = (w * decay[:, None]).sum(axis=0) / decay.sum()
+    return WindowStats(
+        t0_s=float(t[0]),
+        t1_s=float(t[-1]),
+        n_frames=n,
+        mean_w=w.mean(axis=0),
+        peak_w=w.max(axis=0),
+        pct_w=np.percentile(w, pct, axis=0),
+        ewma_w=ewma,
+        energy_j=energy,
+        pct=pct,
+    )
+
+
+def cumulative_energy(times_s: np.ndarray, watts: np.ndarray) -> np.ndarray:
+    """Running trapezoidal integral, same shape as `watts` (first row 0)."""
+    watts = np.asarray(watts, dtype=np.float64)
+    one_d = watts.ndim == 1
+    w = watts[:, None] if one_d else watts
+    t = np.asarray(times_s, dtype=np.float64)
+    out = np.zeros_like(w)
+    if t.size > 1:
+        seg = 0.5 * (w[1:] + w[:-1]) * np.diff(t)[:, None]
+        np.cumsum(seg, axis=0, out=out[1:])
+    return out[:, 0] if one_d else out
+
+
+def windowed_mean_at(
+    grid_times: np.ndarray,
+    grid_values: np.ndarray,
+    query_times: np.ndarray,
+    window_s: float,
+) -> np.ndarray:
+    """Trailing-window mean of a regular series, evaluated at query times.
+
+    For each query time ``t`` this returns the mean of ``grid_values`` over
+    samples with ``max(grid[0], t - window) <= grid <= t`` — exactly the
+    legacy per-query Python loop, but via one prefix sum and two
+    searchsorted calls.  Empty windows fall back to the first grid value.
+    """
+    grid_times = np.asarray(grid_times, dtype=np.float64)
+    grid_values = np.asarray(grid_values, dtype=np.float64)
+    query_times = np.asarray(query_times, dtype=np.float64)
+    if grid_times.size == 0:
+        return np.zeros_like(query_times)
+    prefix = np.concatenate([[0.0], np.cumsum(grid_values, dtype=np.float64)])
+    lo_t = np.maximum(query_times - window_s, grid_times[0])
+    lo = np.searchsorted(grid_times, lo_t, side="left")
+    hi = np.searchsorted(grid_times, query_times, side="right")
+    count = hi - lo
+    sums = prefix[hi] - prefix[lo]
+    return np.where(count > 0, sums / np.maximum(count, 1), grid_values[0])
+
+
+def sliding_mean(
+    times_s: np.ndarray,
+    values: np.ndarray,
+    window_s: float,
+    stride_s: float,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Downsampled trailing-window mean series over an irregular series.
+
+    Returns ``(sample_times, means)`` with sample times every ``stride_s``
+    across the span of ``times_s``.
+    """
+    times_s = np.asarray(times_s, dtype=np.float64)
+    if times_s.size == 0:
+        return np.zeros(0), np.zeros(0)
+    qs = np.arange(times_s[0], times_s[-1] + stride_s * 0.5, stride_s)
+    return qs, windowed_mean_at(times_s, values, qs, window_s)

@@ -1,0 +1,250 @@
+"""FleetMonitor: one queryable snapshot API over N PowerSensor devices.
+
+Scales the host side from "one sensor, one script" to a fleet of devices
+feeding live consumers (paper §III-C's lightweight-receiver design, applied
+per device).  The monitor
+
+* owns named `PowerSensor` instances (any object with the PowerSensor
+  surface: ``poll``, ``read``, ``mark``, ``ring``, ``markers``, ``device``);
+* drains them **round-robin** (``poll(k)`` / ``poll_all()``) or via one
+  background receiver thread per device (``start_threads``);
+* exposes `snapshot()`: per-device windowed stats (from each device's ring
+  buffer) plus fleet aggregates computed as the sum over devices;
+* answers **marker-aligned interval queries**: energy / average power per
+  device between two named markers, straight from the ring buffer.
+
+This module deliberately avoids importing `repro.core` at module scope —
+`repro.core.host` imports `repro.stream.ring`, and keeping this side lazy
+keeps the package import-cycle free.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Iterable, Mapping
+
+import numpy as np
+
+from .aggregate import WindowStats, window_stats
+from .ring import FrameBlock
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.host import PowerSensor, State
+
+
+@dataclass(frozen=True)
+class DeviceSnapshot:
+    name: str
+    state: "State"
+    window: WindowStats
+
+
+@dataclass(frozen=True)
+class FleetAggregate:
+    """Fleet-wide totals: the sum over per-device windowed stats."""
+
+    n_devices: int
+    n_frames: int
+    mean_w: float  # sum of per-device windowed mean watts
+    peak_w: float  # sum of per-device peaks (synchronous-peak upper bound)
+    ewma_w: float
+    energy_j: float
+
+
+@dataclass(frozen=True)
+class FleetSnapshot:
+    time_s: float
+    devices: dict[str, DeviceSnapshot]
+    aggregate: FleetAggregate
+
+
+@dataclass(frozen=True)
+class IntervalStats:
+    """Marker-aligned interval query result for one device."""
+
+    t0_s: float
+    t1_s: float
+    n_frames: int
+    energy_j: np.ndarray  # per pair
+    mean_w: np.ndarray  # per pair
+
+    @property
+    def duration_s(self) -> float:
+        return self.t1_s - self.t0_s
+
+    @property
+    def total_energy_j(self) -> float:
+        return float(self.energy_j.sum())
+
+    @property
+    def total_mean_w(self) -> float:
+        return float(self.mean_w.sum())
+
+
+class FleetMonitor:
+    """Own, poll, and aggregate over a fleet of PowerSensor devices."""
+
+    def __init__(
+        self,
+        sensors: Mapping[str, "PowerSensor"] | None = None,
+        window_s: float = 1.0,
+        pct: float = 95.0,
+    ):
+        self._sensors: dict[str, PowerSensor] = {}
+        self.window_s = float(window_s)
+        self.pct = float(pct)
+        self._rr = 0  # round-robin cursor
+        if sensors:
+            for name, ps in sensors.items():
+                self.add(name, ps)
+
+    # ------------------------------------------------------------ membership
+    def add(self, name: str, sensor: "PowerSensor") -> None:
+        if name in self._sensors:
+            raise ValueError(f"duplicate device name {name!r}")
+        self._sensors[name] = sensor
+
+    def __len__(self) -> int:
+        return len(self._sensors)
+
+    def __getitem__(self, name: str) -> "PowerSensor":
+        return self._sensors[name]
+
+    @property
+    def names(self) -> list[str]:
+        return list(self._sensors)
+
+    # ------------------------------------------------------------ polling
+    def poll(self, k: int = 1) -> int:
+        """Drain the next ``k`` devices round-robin. Returns frames seen."""
+        names = self.names
+        if not names:
+            return 0
+        total = 0
+        for _ in range(min(k, len(names))):
+            name = names[self._rr % len(names)]
+            self._rr += 1
+            total += self._sensors[name].poll()
+        return total
+
+    def poll_all(self) -> int:
+        return self.poll(len(self._sensors))
+
+    def start_threads(self, real_time_factor: float = 0.0, tick_s: float = 0.01) -> None:
+        """One lightweight receiver thread per device (§III-C, per device)."""
+        for ps in self._sensors.values():
+            ps.start_thread(real_time_factor=real_time_factor, tick_s=tick_s)
+
+    def stop_threads(self) -> None:
+        for ps in self._sensors.values():
+            ps.stop_thread()
+
+    # ------------------------------------------------------------ sim helpers
+    def advance(self, dt_s: float) -> None:
+        """Advance every (virtual) device's clock and drain it."""
+        for ps in self._sensors.values():
+            ps.device.advance(dt_s)
+        self.poll_all()
+
+    def run_for(self, seconds: float, chunk_s: float = 0.5) -> None:
+        remaining = seconds
+        while remaining > 1e-12:
+            step = min(chunk_s, remaining)
+            self.advance(step)
+            remaining -= step
+
+    # ------------------------------------------------------------ markers
+    def mark_all(self, char: str = "M") -> None:
+        for ps in self._sensors.values():
+            ps.mark(char)
+
+    def _marker_time(self, ps: "PowerSensor", char: str, occurrence: int = 0) -> float | None:
+        hits = [t for c, t in ps.markers if c == char]
+        if occurrence >= len(hits):
+            return None
+        return hits[occurrence]
+
+    def interval(
+        self, char_a: str, char_b: str, occurrence: int = 0
+    ) -> dict[str, IntervalStats]:
+        """Per-device energy/power between markers `char_a` and `char_b`.
+
+        Devices missing either marker, or whose ring no longer retains the
+        *whole* span (eviction would silently undercount), are omitted.
+        """
+        out: dict[str, IntervalStats] = {}
+        for name, ps in self._sensors.items():
+            t0 = self._marker_time(ps, char_a, occurrence)
+            t1 = self._marker_time(ps, char_b, occurrence)
+            if t0 is None or t1 is None or t1 <= t0:
+                continue
+            block = self._locked_ring_read(ps, lambda: ps.ring.window(t0, t1))
+            if len(block) < 2:
+                continue
+            # evicted head: first retained frame starts well after t0
+            frame_dt = block.times_s[1] - block.times_s[0]
+            if block.times_s[0] - t0 > 2.0 * frame_dt:
+                continue
+            out[name] = IntervalStats(
+                t0_s=t0,
+                t1_s=t1,
+                n_frames=len(block),
+                energy_j=np.trapezoid(block.watts, block.times_s, axis=0),
+                mean_w=block.watts.mean(axis=0),
+            )
+        return out
+
+    # ------------------------------------------------------------ snapshots
+    @staticmethod
+    def _locked_ring_read(ps: "PowerSensor", fn):
+        """Read from a sensor's ring under its receiver lock (thread mode)."""
+        lock = getattr(ps, "_lock", None)
+        if lock is None:
+            return fn()
+        with lock:
+            return fn()
+
+    def read_all(self) -> dict[str, "State"]:
+        return {name: ps.read() for name, ps in self._sensors.items()}
+
+    def snapshot(self, window_s: float | None = None) -> FleetSnapshot:
+        """One queryable view of the whole fleet: per-device + aggregate."""
+        window_s = self.window_s if window_s is None else float(window_s)
+        devices: dict[str, DeviceSnapshot] = {}
+        for name, ps in self._sensors.items():
+            state = ps.read()  # drains the device, then snapshots
+            block = self._locked_ring_read(ps, lambda: ps.ring.tail_window(window_s))
+            stats = window_stats(block, pct=self.pct)
+            devices[name] = DeviceSnapshot(name=name, state=state, window=stats)
+        snaps = devices.values()
+        agg = FleetAggregate(
+            n_devices=len(devices),
+            n_frames=sum(d.window.n_frames for d in snaps),
+            mean_w=sum(d.window.total_mean_w for d in snaps),
+            peak_w=sum(d.window.total_peak_w for d in snaps),
+            ewma_w=sum(d.window.total_ewma_w for d in snaps),
+            energy_j=sum(d.window.total_energy_j for d in snaps),
+        )
+        t = max((d.state.time_s for d in snaps), default=0.0)
+        return FleetSnapshot(time_s=t, devices=devices, aggregate=agg)
+
+    def close(self) -> None:
+        self.stop_threads()
+        for ps in self._sensors.values():
+            ps.close()
+
+
+def make_virtual_fleet(
+    loads: Iterable,
+    module: str = "pcie8pin-20a",
+    seed: int = 0,
+    window_s: float = 1.0,
+    ring_capacity: int = 1 << 16,
+) -> FleetMonitor:
+    """Build a FleetMonitor over virtual devices, one per load."""
+    from repro.core import PowerSensor, make_device
+
+    fleet = FleetMonitor(window_s=window_s)
+    for i, load in enumerate(loads):
+        dev = make_device([module], load, seed=seed * 1009 + i)
+        fleet.add(f"dev{i}", PowerSensor(dev, ring_capacity=ring_capacity))
+    return fleet

@@ -1,0 +1,168 @@
+"""Preallocated ring buffer of decoded 20 kHz frames.
+
+This replaces the "dump file as API" pattern: the receiver appends decoded
+(time, V, A, W)-per-pair frame blocks with two slice assignments (no
+per-frame Python work), and consumers — snapshots, windowed aggregation,
+the PMT meter backend, the fleet monitor — query it without ever
+round-tripping through text.
+
+Frames are addressed two ways:
+
+* by **sequence number**: ``head`` is the total number of frames ever
+  appended; frame ``seq`` is retained while ``head - len(ring) <= seq``;
+* by **device time**: ``window(t0, t1)`` binary-searches the (sorted)
+  retained timestamps.
+
+All reads return chronologically-ordered copies, so callers can hold the
+result while the receiver keeps appending.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class FrameBlock:
+    """A chronologically ordered block of decoded frames (copies)."""
+
+    seq0: int  # sequence number of the first frame in the block
+    times_s: np.ndarray  # (n,)
+    volts: np.ndarray  # (n, n_pairs)
+    amps: np.ndarray  # (n, n_pairs)
+    watts: np.ndarray  # (n, n_pairs)
+
+    def __len__(self) -> int:
+        return int(self.times_s.size)
+
+    @property
+    def total_watts(self) -> np.ndarray:
+        """(n,) summed over pairs."""
+        return self.watts.sum(axis=1)
+
+
+class FrameRing:
+    """Fixed-capacity ring of decoded frames, vectorised append and query."""
+
+    def __init__(self, capacity: int, n_pairs: int):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = int(capacity)
+        self.n_pairs = int(n_pairs)
+        self.times_s = np.zeros(self.capacity)
+        self.volts = np.zeros((self.capacity, self.n_pairs))
+        self.amps = np.zeros((self.capacity, self.n_pairs))
+        self.watts = np.zeros((self.capacity, self.n_pairs))
+        self.head = 0  # total frames ever appended (monotonic)
+
+    def __len__(self) -> int:
+        return min(self.head, self.capacity)
+
+    @property
+    def last_time_s(self) -> float:
+        if self.head == 0:
+            return 0.0
+        return float(self.times_s[(self.head - 1) % self.capacity])
+
+    # ------------------------------------------------------------------ write
+    def append(
+        self,
+        times_s: np.ndarray,
+        volts: np.ndarray,
+        amps: np.ndarray,
+        watts: np.ndarray,
+    ) -> None:
+        """Append a block of n frames (two slice writes, O(n) C-side)."""
+        n = len(times_s)
+        if n == 0:
+            return
+        cap = self.capacity
+        if n > cap:  # only the trailing `cap` frames survive anyway
+            drop = n - cap
+            self.head += drop  # account for the frames that never land
+            times_s, volts, amps, watts = (
+                times_s[drop:], volts[drop:], amps[drop:], watts[drop:],
+            )
+            n = cap
+        start = self.head % cap
+        end = start + n
+        if end <= cap:
+            sl = slice(start, end)
+            self.times_s[sl] = times_s
+            self.volts[sl] = volts
+            self.amps[sl] = amps
+            self.watts[sl] = watts
+        else:
+            k = cap - start
+            self.times_s[start:] = times_s[:k]
+            self.volts[start:] = volts[:k]
+            self.amps[start:] = amps[:k]
+            self.watts[start:] = watts[:k]
+            self.times_s[: end - cap] = times_s[k:]
+            self.volts[: end - cap] = volts[k:]
+            self.amps[: end - cap] = amps[k:]
+            self.watts[: end - cap] = watts[k:]
+        self.head += n
+
+    # ------------------------------------------------------------------ read
+    def _block(self, lo: int, hi: int) -> FrameBlock:
+        """Frames with sequence numbers [lo, hi), both already retained."""
+        cap = self.capacity
+
+        def gather(arr):
+            i0, i1 = lo % cap, hi % cap
+            if lo == hi:
+                return arr[:0].copy()
+            if i0 < i1:
+                return arr[i0:i1].copy()
+            return np.concatenate([arr[i0:], arr[:i1]])
+
+        return FrameBlock(
+            seq0=lo,
+            times_s=gather(self.times_s),
+            volts=gather(self.volts),
+            amps=gather(self.amps),
+            watts=gather(self.watts),
+        )
+
+    def latest(self, n: int | None = None) -> FrameBlock:
+        """The most recent ``n`` frames (all retained frames if None)."""
+        avail = len(self)
+        n = avail if n is None else min(int(n), avail)
+        return self._block(self.head - n, self.head)
+
+    def since(self, seq: int) -> FrameBlock:
+        """Frames with sequence number >= seq (clamped to what's retained)."""
+        lo = max(int(seq), self.head - len(self))
+        return self._block(min(lo, self.head), self.head)
+
+    def _search_time(self, t_s: float) -> int:
+        """Logical offset (0..len) of the first retained frame with time >= t.
+
+        Binary search over the (up to) two contiguous physical segments —
+        no copy of the retained span is made.
+        """
+        cap = self.capacity
+        n = len(self)
+        start = (self.head - n) % cap
+        len_a = min(n, cap - start)
+        i = int(np.searchsorted(self.times_s[start : start + len_a], t_s))
+        if i < len_a or len_a == n:
+            return i
+        return len_a + int(np.searchsorted(self.times_s[: n - len_a], t_s))
+
+    def window(self, t0_s: float, t1_s: float) -> FrameBlock:
+        """Frames with t0 <= time < t1 (within the retained span)."""
+        base = self.head - len(self)
+        lo = base + self._search_time(t0_s)
+        hi = base + self._search_time(t1_s)
+        return self._block(lo, max(lo, hi))
+
+    def tail_window(self, window_s: float) -> FrameBlock:
+        """The trailing ``window_s`` seconds of frames."""
+        n = len(self)
+        if n == 0:
+            return self._block(self.head, self.head)
+        lo = (self.head - n) + self._search_time(self.last_time_s - window_s)
+        return self._block(lo, self.head)

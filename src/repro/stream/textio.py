@@ -1,0 +1,115 @@
+"""Vectorised fixed-point text formatting for the continuous-mode dump.
+
+CPython's ``%``-float formatting costs ~2 µs/row, which made the dump the
+receiver's bottleneck even after batching it into a single C-level format
+call.  This module renders the dump schema
+
+    <t:%.6f> <pair:%d> <V:%.4f> <A:%.4f> <W:%.4f>\\n
+
+entirely with integer digit arithmetic on a byte matrix: every row gets a
+fixed cell layout, pad cells (unused leading-digit positions, absent minus
+signs) are masked out, and the compacted bytes decode to the same text the
+printf path produces — except for values whose scaled product lands within
+1 ULP of a decimal rounding boundary (e.g. ``5118.10005``), where the last
+digit may differ by one: printf rounds the exact double, the fast path
+rounds the float64 product.  Harmless for dump data (4th-decimal noise),
+but don't rely on byte equality at constructed ties.
+
+Values outside the supported fixed-point range (|V|,|A| < 10^4, |W| < 10^6,
+0 <= t < 10^6, non-finite anything) fall back to the printf path for the
+whole block — correctness never depends on the fast path.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_PRINTF_FMT = "%.6f %d %.4f %.4f %.4f\n"
+
+
+def _printf_block(rows: np.ndarray) -> str:
+    """One C-level %-format for the whole block (the fallback path)."""
+    return (_PRINTF_FMT * rows.shape[0]) % tuple(rows.ravel().tolist())
+
+
+def _int_digits(out, keep, col, ip, width):
+    """Write ``ip`` right-aligned at cells [col, col+width); mask pad cells.
+
+    ``out``/``keep`` are (width_total, n) — cell-major, so each cell write
+    is one contiguous row.
+    """
+    pow10 = 1
+    for j in range(width):
+        c = col + width - 1 - j
+        np.add(48, (ip // pow10) % 10, out=out[c], casting="unsafe")
+        if j:
+            keep[c] = ip >= pow10
+        pow10 *= 10
+
+
+def _frac_digits(out, col, frac, width):
+    """Write ``frac`` zero-padded at cells [col, col+width)."""
+    pow10 = 10 ** (width - 1)
+    for j in range(width):
+        np.add(48, (frac // pow10) % 10, out=out[col + j], casting="unsafe")
+        pow10 //= 10
+
+
+def _signed_fixed(out, keep, col, values, int_width, dec):
+    """Render ``values`` as [-]int.frac at [col, col+1+int_width+1+dec)."""
+    scale = 10**dec
+    scaled = np.round(np.abs(values) * scale).astype(np.int64)
+    keep[col] = np.signbit(values)  # printf keeps the sign of -0.0001...
+    out[col] = ord("-")
+    _int_digits(out, keep, col + 1, scaled // scale, int_width)
+    out[col + 1 + int_width] = ord(".")
+    _frac_digits(out, col + 2 + int_width, scaled % scale, dec)
+    return col + 2 + int_width + dec
+
+
+def format_dump_block(
+    times_s: np.ndarray,
+    pairs: np.ndarray,
+    volts: np.ndarray,
+    amps: np.ndarray,
+    watts: np.ndarray,
+) -> str:
+    """Format n dump rows; byte-compatible with the printf schema."""
+    n = len(times_s)
+    if n == 0:
+        return ""
+    in_range = (
+        np.all(np.isfinite(times_s))
+        and np.all(np.isfinite(volts))
+        and np.all(np.isfinite(amps))
+        and np.all(np.isfinite(watts))
+        and times_s.min(initial=0.0) >= 0.0
+        and times_s.max(initial=0.0) < 1e6 - 5e-7
+        and np.abs(volts).max(initial=0.0) < 1e4 - 5e-5
+        and np.abs(amps).max(initial=0.0) < 1e4 - 5e-5
+        and np.abs(watts).max(initial=0.0) < 1e6 - 5e-5
+        and pairs.min(initial=0) >= 0
+        and pairs.max(initial=0) <= 9
+    )
+    if not in_range:
+        return _printf_block(
+            np.column_stack([times_s, pairs.astype(np.float64), volts, amps, watts])
+        )
+
+    # cell layout: t[6+1+6] sp pair sp v[1+4+1+4] sp a[1+4+1+4] sp w[1+6+1+4] nl
+    width = 13 + 1 + 1 + 1 + 10 + 1 + 10 + 1 + 12 + 1
+    # cell-major (width, n): each cell fills one contiguous row, transposed
+    # to row-major only for the final compaction
+    out = np.full((width, n), ord(" "), dtype=np.uint8)
+    keep = np.ones((width, n), dtype=bool)
+
+    t_scaled = np.round(times_s * 1e6).astype(np.int64)
+    _int_digits(out, keep, 0, t_scaled // 10**6, 6)
+    out[6] = ord(".")
+    _frac_digits(out, 7, t_scaled % 10**6, 6)
+    np.add(48, pairs, out=out[14], casting="unsafe")
+    col = _signed_fixed(out, keep, 16, volts, 4, 4)
+    col = _signed_fixed(out, keep, col + 1, amps, 4, 4)
+    col = _signed_fixed(out, keep, col + 1, watts, 6, 4)
+    out[col] = ord("\n")
+    flat = np.ascontiguousarray(out.T).ravel()
+    return flat[np.ascontiguousarray(keep.T).ravel()].tobytes().decode("ascii")

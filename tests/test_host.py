@@ -148,3 +148,47 @@ def test_table2_noise_vs_averaging():
     # paper Table II at 1 A load: std 0.72 W at 20 kHz, 0.117 W at 0.5 kHz.
     # our theoretical model (datasheet noise only) gives the same order:
     assert 0.2 < std_20k < 1.2
+
+
+def test_set_dump_file_closes_owned_handles(tmp_path):
+    """Handles opened by set_dump_file are closed on replace/clear/close."""
+    ps = _ps(ConstantLoad(12.0, 2.0), seed=12)
+    p1, p2 = tmp_path / "a.dump", tmp_path / "b.dump"
+    ps.set_dump_file(str(p1))
+    h1 = ps._dump
+    ps.run_for(0.005)
+    ps.set_dump_file(str(p2))  # replacement closes the first handle
+    h2 = ps._dump
+    assert h1.closed
+    ps.run_for(0.005)
+    ps.set_dump_file(None)  # clearing closes too
+    assert h2.closed
+    assert p1.read_text().startswith("# t_s pair")
+    assert len(p2.read_text().splitlines()) > 50
+
+    ps.set_dump_file(str(p1))
+    h3 = ps._dump
+    ps.close()  # close() also releases an owned handle
+    assert h3.closed
+
+
+def test_set_dump_file_does_not_close_caller_streams():
+    ps = _ps(ConstantLoad(12.0, 2.0), seed=13)
+    buf = io.StringIO()
+    ps.set_dump_file(buf)
+    ps.run_for(0.005)
+    ps.set_dump_file(None)
+    assert not buf.closed  # caller-owned stream stays open
+
+
+def test_dump_header_written_once_per_fresh_file():
+    ps = _ps(ConstantLoad(12.0, 2.0), seed=14)
+    fresh = io.StringIO()
+    ps.set_dump_file(fresh)
+    assert fresh.getvalue().count("# t_s pair") == 1
+    ps.set_dump_file(None)
+    used = io.StringIO()
+    used.write("0.000000 0 1.0 1.0 1.0\n")  # stream already in use
+    ps.set_dump_file(used)
+    assert "# t_s pair" not in used.getvalue()
+    ps.set_dump_file(None)

@@ -114,3 +114,41 @@ def test_config_conversion_current_channel():
 def test_config_conversion_voltage_channel():
     blk = SensorConfigBlock(type_code=1, enabled=True, vref=3.3, sensitivity=0.2)
     np.testing.assert_allclose(blk.raw_to_physical(1023), 16.5, rtol=1e-3)
+
+
+# ----------------------------------------------------------- resync edge cases
+def test_orphan_second_bytes_mid_stream_are_dropped():
+    """Stray second-bytes *between* packets (not just as a prefix) resync."""
+    raw1 = protocol.encode_packets([1], [100], [0])
+    raw2 = protocol.encode_packets([2], [200], [0])
+    noisy = raw1 + bytes([0x05]) + raw2 + bytes([0x7F, 0x03]) + raw1
+    ids, vals, marks, consumed = protocol.decode_packets(noisy)
+    np.testing.assert_array_equal(ids, [1, 2, 1])
+    np.testing.assert_array_equal(vals, [100, 200, 100])
+    assert consumed == len(noisy)
+
+
+def test_trailing_first_byte_carries_across_two_calls():
+    """A packet split across reads decodes once the second half arrives."""
+    raw = protocol.encode_packets([3, 4], [300, 400], [0, 1])
+    part1, part2 = raw[:3], raw[3:]  # second packet split after its first byte
+    ids1, vals1, marks1, c1 = protocol.decode_packets(part1)
+    np.testing.assert_array_equal(ids1, [3])
+    assert c1 == 2  # the dangling first byte stays unconsumed
+    residual = part1[c1:]
+    ids2, vals2, marks2, c2 = protocol.decode_packets(residual + part2)
+    np.testing.assert_array_equal(ids2, [4])
+    np.testing.assert_array_equal(vals2, [400])
+    np.testing.assert_array_equal(marks2, [1])
+    assert c2 == 2
+
+
+def test_marker_bit_on_nonzero_nontimestamp_id_is_plain_data():
+    """id != 0 with the marker bit set is neither a timestamp nor a marker
+    (the paper reserves it as unused) — it must decode as ordinary data."""
+    raw = protocol.encode_packets([5], [17], [1])
+    ids, vals, marks, consumed = protocol.decode_packets(raw)
+    np.testing.assert_array_equal(ids, [5])
+    np.testing.assert_array_equal(vals, [17])
+    np.testing.assert_array_equal(marks, [1])
+    np.testing.assert_array_equal(protocol.is_timestamp(ids, marks), [False])

@@ -1,0 +1,310 @@
+"""Streaming telemetry subsystem: ring buffer, windowed aggregation,
+receiver fast/generic path equivalence, and the FleetMonitor."""
+import numpy as np
+import pytest
+
+from repro.core import ConstantLoad, PowerSensor, make_device
+from repro.core import protocol
+from repro.core.host import MAX_PAIRS
+from repro.stream import (
+    FleetMonitor,
+    FrameRing,
+    make_virtual_fleet,
+    window_stats,
+    windowed_mean_at,
+)
+from repro.stream.textio import _printf_block, format_dump_block
+
+
+def _fill(n, pairs=2, t0=0.0):
+    t = t0 + np.arange(n) * 50e-6
+    v = np.tile(np.arange(1.0, pairs + 1.0), (n, 1)) + np.arange(n)[:, None] * 1e-3
+    a = np.ones((n, pairs)) * 0.5
+    return t, v, a, v * a
+
+
+# --------------------------------------------------------------------- ring
+def test_ring_append_and_latest_ordering():
+    r = FrameRing(64, 2)
+    t, v, a, w = _fill(10)
+    r.append(t, v, a, w)
+    assert len(r) == 10 and r.head == 10
+    blk = r.latest()
+    np.testing.assert_array_equal(blk.times_s, t)
+    np.testing.assert_array_equal(blk.watts, w)
+    assert len(r.latest(3)) == 3
+    np.testing.assert_array_equal(r.latest(3).times_s, t[-3:])
+
+
+def test_ring_wraparound_keeps_newest_in_order():
+    r = FrameRing(16, 2)
+    all_t = []
+    for k in range(5):  # 5 x 7 = 35 frames through a 16-slot ring
+        t, v, a, w = _fill(7, t0=k * 7 * 50e-6)
+        r.append(t, v, a, w)
+        all_t.append(t)
+    full_t = np.concatenate(all_t)
+    assert r.head == 35 and len(r) == 16
+    blk = r.latest()
+    np.testing.assert_allclose(blk.times_s, full_t[-16:])
+    assert np.all(np.diff(blk.times_s) > 0)  # chronological
+
+
+def test_ring_block_larger_than_capacity():
+    r = FrameRing(8, 1)
+    t = np.arange(20) * 1.0
+    x = t[:, None]
+    r.append(t, x, x, x)
+    assert r.head == 20 and len(r) == 8
+    np.testing.assert_array_equal(r.latest().times_s, t[-8:])
+
+
+def test_ring_window_and_since_queries():
+    r = FrameRing(128, 1)
+    t = np.arange(100) * 0.01
+    x = t[:, None]
+    r.append(t[:60], x[:60], x[:60], x[:60])
+    seq = r.head
+    r.append(t[60:], x[60:], x[60:], x[60:])
+    blk = r.since(seq)
+    assert blk.seq0 == 60 and len(blk) == 40
+    np.testing.assert_allclose(blk.times_s, t[60:])
+    win = r.window(0.25, 0.50)
+    np.testing.assert_allclose(win.times_s, t[(t >= 0.25) & (t < 0.50)])
+    # seq older than retention clamps to what's still there
+    assert len(r.since(-5)) == 100
+
+
+# ---------------------------------------------------------------- aggregate
+def test_window_stats_matches_direct_numpy():
+    r = FrameRing(256, 3)
+    rng = np.random.default_rng(0)
+    t = np.sort(rng.uniform(0, 1, 200))
+    w = rng.uniform(0, 50, (200, 3))
+    v = np.sqrt(w)
+    r.append(t, v, w / np.maximum(v, 1e-9), w)
+    st = window_stats(r.latest(), pct=90.0)
+    np.testing.assert_allclose(st.mean_w, w.mean(axis=0))
+    np.testing.assert_allclose(st.peak_w, w.max(axis=0))
+    np.testing.assert_allclose(st.pct_w, np.percentile(w, 90.0, axis=0))
+    np.testing.assert_allclose(st.energy_j, np.trapezoid(w, t, axis=0))
+    assert st.total_mean_w == pytest.approx(float(w.mean(axis=0).sum()))
+    assert st.n_frames == 200
+
+
+def test_windowed_mean_matches_python_loop():
+    rng = np.random.default_rng(1)
+    grid = np.arange(0.0, 2.0, 1e-3)
+    dense = rng.uniform(0, 100, grid.size)
+    queries = np.sort(rng.uniform(-0.1, 2.1, 50))
+    window = 0.25
+    fast = windowed_mean_at(grid, dense, queries, window)
+    for q, got in zip(queries, fast):
+        lo = max(0.0, q - window)
+        sel = (grid >= lo) & (grid <= q)
+        want = dense[sel].mean() if np.any(sel) else dense[0]
+        assert got == pytest.approx(want, rel=1e-9)
+
+
+# ------------------------------------------------------------------ textio
+def test_format_dump_block_matches_printf():
+    rng = np.random.default_rng(2)
+    n = 500
+    t = np.sort(rng.uniform(0, 5000, n))
+    p = rng.integers(0, MAX_PAIRS, n)
+    v = rng.uniform(-20, 20, n)
+    a = rng.uniform(-3, 3, n)
+    w = v * a
+    assert format_dump_block(t, p, v, a, w) == _printf_block(
+        np.column_stack([t, p.astype(np.float64), v, a, w])
+    )
+
+
+def test_format_dump_block_out_of_range_falls_back():
+    t = np.array([0.5])
+    p = np.array([0])
+    big = np.array([1.5e4])  # exceeds the fixed-point field
+    out = format_dump_block(t, p, big, big, big * big)
+    assert out == "0.500000 0 15000.0000 15000.0000 225000000.0000\n"
+
+
+# ------------------------------------------------------- receiver <-> ring
+def _ps(load, modules=("slot-10a-12v",), seed=0, **kw):
+    return PowerSensor(make_device(list(modules), load, seed=seed), **kw)
+
+
+def test_receiver_fills_ring():
+    ps = _ps(ConstantLoad(12.0, 4.0), seed=3)
+    ps.run_for(0.2)
+    st = ps.read()
+    assert len(ps.ring) == st.n_samples > 3000
+    blk = ps.ring.latest()
+    assert np.all(np.diff(blk.times_s) > 0)
+    assert blk.watts[:, 0].mean() == pytest.approx(48.0, abs=4.3)
+    stats = ps.snapshot(window_s=0.1)
+    assert stats.mean_w[0] == pytest.approx(48.0, abs=4.3)
+    assert 0.09 < stats.duration_s < 0.11
+
+
+def test_generic_path_matches_regular_path():
+    """Splitting the same packet stream at a non-frame boundary (forcing the
+    scatter path) must produce the same energy and ring contents."""
+    ps_a = _ps(ConstantLoad(12.0, 2.0), seed=4)
+    ps_b = _ps(ConstantLoad(12.0, 2.0), seed=4)
+    dev = ps_a.device
+    dev.advance(0.05)
+    raw = dev.read()
+    ids, vals, marks, consumed = protocol.decode_packets(raw)
+    assert consumed == len(raw)
+    ps_a._process(ids, vals, marks)
+    # feed the identical packets to ps_b in two ragged pieces
+    cut = (len(ids) // 2) + 3  # not a multiple of the frame size
+    ps_b._process(ids[:cut], vals[:cut], marks[:cut])
+    ps_b._process(ids[cut:], vals[cut:], marks[cut:])
+    np.testing.assert_allclose(ps_b._energy, ps_a._energy, rtol=1e-12)
+    assert len(ps_b.ring) == len(ps_a.ring)
+    np.testing.assert_allclose(
+        ps_b.ring.latest().watts, ps_a.ring.latest().watts, rtol=1e-12
+    )
+
+
+def test_read_holds_last_observed_value_per_pair():
+    """A frame with no data packets for a pair must not flicker V/I to 0."""
+    ps = _ps(ConstantLoad(12.0, 2.0), seed=5)
+    ps.run_for(0.01)
+    before = ps.read()
+    assert before.instant_watts[0] > 0
+    # inject two bare timestamp frames (no data packets at all)
+    ids = np.array([protocol.TIMESTAMP_SENSOR_ID] * 2)
+    vals = np.array([100, 150])
+    marks = np.array([1, 1])
+    ps._process(ids, vals, marks)
+    after = ps.read()
+    assert after.instant_volts[0] == pytest.approx(before.instant_volts[0])
+    assert after.instant_amps[0] == pytest.approx(before.instant_amps[0])
+    assert after.instant_watts[0] == pytest.approx(before.instant_watts[0])
+
+
+def test_marker_bit_on_nonzero_data_id_is_not_a_marker_event():
+    ps = _ps(ConstantLoad(12.0, 2.0), seed=6)
+    ids = np.array([protocol.TIMESTAMP_SENSOR_ID, 5])
+    vals = np.array([100, 40])
+    marks = np.array([1, 1])  # marker bit on sensor id 5: not ts, not marker
+    ps._process(ids, vals, marks)
+    assert ps.markers == []
+
+
+# ------------------------------------------------------------------- fleet
+def test_fleet_monitor_eight_devices_per_device_and_aggregate():
+    watts = [10.0 * (i + 1) for i in range(8)]  # 10..80 W
+    fleet = make_virtual_fleet(
+        [ConstantLoad(12.0, w / 12.0) for w in watts], seed=7, window_s=1.0
+    )
+    assert len(fleet) == 8
+    fleet.run_for(0.3)
+    snap = fleet.snapshot(window_s=0.25)
+    assert snap.aggregate.n_devices == 8
+    for i, name in enumerate(fleet.names):
+        dev = snap.devices[name]
+        assert dev.window.total_mean_w == pytest.approx(watts[i], abs=5.0)
+        assert dev.window.n_frames > 4000
+    # aggregate must equal the sum over the per-device windowed stats
+    assert snap.aggregate.mean_w == pytest.approx(
+        sum(d.window.total_mean_w for d in snap.devices.values()), rel=1e-12
+    )
+    assert snap.aggregate.energy_j == pytest.approx(
+        sum(d.window.total_energy_j for d in snap.devices.values()), rel=1e-12
+    )
+    assert snap.aggregate.mean_w == pytest.approx(sum(watts), abs=5.0 * 8)
+    fleet.close()
+
+
+def test_fleet_marker_aligned_interval_query():
+    fleet = make_virtual_fleet(
+        [ConstantLoad(12.0, 2.0), ConstantLoad(12.0, 4.0)], seed=8
+    )
+    fleet.run_for(0.05)
+    fleet.mark_all("A")
+    fleet.run_for(0.2)
+    fleet.mark_all("B")
+    fleet.run_for(0.05)
+    per_dev = fleet.interval("A", "B")
+    assert set(per_dev) == {"dev0", "dev1"}
+    for name, expect_w in (("dev0", 24.0), ("dev1", 48.0)):
+        iv = per_dev[name]
+        assert iv.duration_s == pytest.approx(0.2, abs=0.005)
+        assert iv.total_mean_w == pytest.approx(expect_w, abs=4.3)
+        assert iv.total_energy_j == pytest.approx(expect_w * 0.2, abs=1.0)
+    fleet.close()
+
+
+def test_fleet_round_robin_poll():
+    fleet = make_virtual_fleet([ConstantLoad(12.0, 1.0)] * 3, seed=9)
+    for ps in (fleet[n] for n in fleet.names):
+        ps.device.advance(0.01)
+    # 3 single-device round-robin polls drain each device exactly once
+    for _ in range(3):
+        assert fleet.poll(1) > 0
+    assert fleet.poll(1) == 0  # everything drained
+    fleet.close()
+
+
+def test_fleet_background_threads_smoke():
+    fleet = make_virtual_fleet([ConstantLoad(12.0, 1.0)] * 2, seed=10)
+    fleet.start_threads(real_time_factor=20.0, tick_s=0.002)
+    import time
+
+    time.sleep(0.1)
+    fleet.stop_threads()
+    snap = fleet.snapshot()
+    assert snap.aggregate.n_frames > 1000
+    fleet.close()
+
+
+def test_cumulative_energy_shapes_and_values():
+    from repro.stream import cumulative_energy
+
+    t = np.array([0.0, 0.1, 0.3, 0.6])
+    w2 = np.array([[10.0, 1.0], [20.0, 1.0], [20.0, 1.0], [0.0, 1.0]])
+    cum = cumulative_energy(t, w2)
+    assert cum.shape == w2.shape
+    np.testing.assert_allclose(cum[0], [0.0, 0.0])
+    np.testing.assert_allclose(cum[-1], np.trapezoid(w2, t, axis=0))
+    # 1-D input keeps its shape
+    cum1 = cumulative_energy(t, w2[:, 0])
+    assert cum1.shape == (4,)
+    np.testing.assert_allclose(cum1, cum[:, 0])
+
+
+def test_disabled_pair_stops_accruing_energy_and_power():
+    """Disabling a pair's channels mid-run must zero its power everywhere —
+    the last-observed hold applies to transient gaps, not disabled pairs."""
+    from dataclasses import replace
+
+    ps = _ps(ConstantLoad(12.0, 2.0), seed=15)
+    ps.run_for(0.2)
+    e_before = ps.read().consumed_joules[0]
+    assert e_before > 0
+    for sid in (0, 1):
+        ps.set_config(sid, replace(ps.get_config(sid), enabled=False))
+    ps.run_for(0.5)
+    st = ps.read()
+    assert st.consumed_joules[0] == pytest.approx(e_before, abs=1e-9)
+    assert st.instant_watts[0] == 0.0
+    stats = ps.snapshot(window_s=0.3)
+    assert stats.mean_w[0] == pytest.approx(0.0, abs=1e-12)
+
+
+def test_fleet_interval_omits_evicted_spans():
+    """An interval whose head the ring has already evicted must be omitted,
+    not silently undercounted."""
+    fleet = make_virtual_fleet(
+        [ConstantLoad(12.0, 2.0)], seed=11, ring_capacity=10_000  # ~0.5 s
+    )
+    fleet.run_for(0.05)
+    fleet.mark_all("A")
+    fleet.run_for(1.0)  # pushes the 'A' region out of the ring
+    fleet.mark_all("B")
+    fleet.run_for(0.05)
+    assert fleet.interval("A", "B") == {}
+    fleet.close()
