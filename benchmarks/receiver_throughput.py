@@ -11,11 +11,11 @@ through
 * ``vectorised`` — the current `PowerSensor` receiver (fused affine
   conversion, ring-buffer append, batched %-format dump).
 
-    PYTHONPATH=src python -m benchmarks.receiver_throughput [seconds]
+    PYTHONPATH=src python -m benchmarks.receiver_throughput [seconds] [--smoke]
 """
 from __future__ import annotations
 
-import sys
+import argparse
 
 import numpy as np
 
@@ -179,4 +179,8 @@ def run(seconds: float = 10.0) -> None:
 
 
 if __name__ == "__main__":
-    run(float(sys.argv[1]) if len(sys.argv) > 1 else 10.0)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("seconds", nargs="?", type=float, default=10.0)
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run (1 s)")
+    args = ap.parse_args()
+    run(1.0 if args.smoke else args.seconds)

@@ -1,0 +1,72 @@
+"""`repro.attrib` — per-kernel energy attribution over 20 kHz power traces.
+
+The consumer the sensor stack was missing: maps watts back to kernels,
+phases and code regions (the paper's Fig. 5 "identify GPU behavior at
+high temporal granularity" claim, made operational).
+
+* `segment`    — vectorised changepoint segmentation (derivative +
+  hysteresis edges, binary-segmentation refinement) straight off
+  `stream.FrameRing` views;
+* `attribute`  — marker-aligned energy ledgers: segments × markers ×
+  declared kernel timelines → per-kernel J / avg / peak / count;
+* `signatures` — normalised per-kernel waveforms + nearest-signature
+  matching so unlabeled segments in fresh traces can be identified;
+* `report`     — energy-ranked text / CSV / JSON emitters.
+
+Integration points: `train.loop` (per-step ledgers via `StepAttributor`),
+`launch.serve` (per-request-wave attribution), `power.tuner`
+(attribution-backed variant scoring), `benchmarks/attrib_accuracy.py`
+(the 20 kHz-vs-builtin-counter granularity experiment).
+"""
+from .attribute import (
+    EnergyLedger,
+    KernelSpan,
+    LedgerEntry,
+    StepAttributor,
+    attribute,
+    attribute_block,
+    marker_spans,
+    refine_spans,
+    spans_from_segments,
+    timeline_spans,
+)
+from .report import render_csv, render_json, render_text, write_report
+from .segment import (
+    Segment,
+    Segmentation,
+    active_spans,
+    segment_block,
+    segment_trace,
+)
+from .signatures import (
+    KernelSignature,
+    SignatureLibrary,
+    build_library,
+    identify_segments,
+)
+
+__all__ = [
+    "EnergyLedger",
+    "KernelSpan",
+    "LedgerEntry",
+    "StepAttributor",
+    "attribute",
+    "attribute_block",
+    "marker_spans",
+    "refine_spans",
+    "spans_from_segments",
+    "timeline_spans",
+    "render_csv",
+    "render_json",
+    "render_text",
+    "write_report",
+    "Segment",
+    "Segmentation",
+    "active_spans",
+    "segment_block",
+    "segment_trace",
+    "KernelSignature",
+    "SignatureLibrary",
+    "build_library",
+    "identify_segments",
+]

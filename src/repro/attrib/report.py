@@ -1,0 +1,109 @@
+"""Energy-ranked attribution reports: text, CSV and JSON emitters.
+
+The consumer-facing end of `repro.attrib`: an :class:`EnergyLedger`
+(from `attribute`) rendered as the table the paper's case studies print —
+kernels ranked by energy, with share-of-total, average/peak power,
+occurrence counts and per-occurrence joules.
+"""
+from __future__ import annotations
+
+import csv
+import io
+import json
+
+from .attribute import EnergyLedger
+
+_FIELDS = [
+    "name",
+    "count",
+    "energy_j",
+    "share",
+    "j_per_occurrence",
+    "avg_w",
+    "peak_w",
+    "duration_s",
+]
+
+
+def _rows(ledger: EnergyLedger) -> list[dict]:
+    total = ledger.total_energy_j
+    return [
+        {
+            "name": e.name,
+            "count": e.count,
+            "energy_j": e.energy_j,
+            "share": e.energy_j / total if total > 0 else 0.0,
+            "j_per_occurrence": e.j_per_occurrence,
+            "avg_w": e.avg_w,
+            "peak_w": e.peak_w,
+            "duration_s": e.duration_s,
+        }
+        for e in ledger.ranked()
+    ]
+
+
+def render_text(
+    ledger: EnergyLedger, top: int | None = None, title: str = "energy ledger"
+) -> str:
+    """Fixed-width, energy-ranked table (biggest consumer first)."""
+    rows = _rows(ledger)
+    shown = rows if top is None else rows[:top]
+    name_w = max([len(r["name"]) for r in shown] + [6])
+    lines = [
+        f"# {title}: {ledger.total_energy_j:.3f} J attributed "
+        f"({ledger.attributed_fraction * 100.0:.1f}% of trace window)",
+        f"{'kernel':<{name_w}} {'n':>4} {'energy_j':>10} {'share':>6} "
+        f"{'J/occ':>10} {'avg_w':>8} {'peak_w':>8} {'time_s':>8}",
+    ]
+    for r in shown:
+        lines.append(
+            f"{r['name']:<{name_w}} {r['count']:>4d} {r['energy_j']:>10.3f} "
+            f"{r['share'] * 100.0:>5.1f}% {r['j_per_occurrence']:>10.4f} "
+            f"{r['avg_w']:>8.1f} {r['peak_w']:>8.1f} {r['duration_s']:>8.3f}"
+        )
+    if top is not None and len(rows) > top:
+        rest = sum(r["energy_j"] for r in rows[top:])
+        lines.append(f"... {len(rows) - top} more entries, {rest:.3f} J")
+    if ledger.skipped_spans:
+        lines.append(
+            f"# {ledger.skipped_spans} spans skipped "
+            f"(too few samples or history evicted)"
+        )
+    return "\n".join(lines)
+
+
+def render_csv(ledger: EnergyLedger) -> str:
+    buf = io.StringIO()
+    w = csv.DictWriter(buf, fieldnames=_FIELDS)
+    w.writeheader()
+    for r in _rows(ledger):
+        w.writerow(r)
+    return buf.getvalue()
+
+
+def render_json(ledger: EnergyLedger, indent: int | None = None) -> str:
+    return json.dumps(
+        {
+            "total_energy_j": ledger.total_energy_j,
+            "trace_energy_j": ledger.trace_energy_j,
+            "attributed_fraction": ledger.attributed_fraction,
+            "t0_s": ledger.t0_s,
+            "t1_s": ledger.t1_s,
+            "skipped_spans": ledger.skipped_spans,
+            "entries": _rows(ledger),
+        },
+        indent=indent,
+    )
+
+
+def write_report(ledger: EnergyLedger, path_or_file, fmt: str = "text") -> None:
+    """Write a report; ``fmt`` is one of ``text`` / ``csv`` / ``json``."""
+    renderers = {"text": render_text, "csv": render_csv, "json": render_json}
+    if fmt not in renderers:
+        raise ValueError(f"unknown report format {fmt!r}")
+    text = renderers[fmt](ledger)
+    if isinstance(path_or_file, (str, bytes)):
+        with open(path_or_file, "w") as f:
+            f.write(text)
+    else:
+        path_or_file.write(text)

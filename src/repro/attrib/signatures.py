@@ -1,0 +1,220 @@
+"""Per-kernel power signatures: normalised waveforms + nearest matching.
+
+Once a labelled trace has been attributed (markers + declared timeline,
+see `repro.attrib.attribute`), each kernel's occurrences share a power
+*shape* — the Fig. 5/7 observation that individual kernels are visually
+identifiable at 20 kHz.  This module makes that operational:
+
+* :func:`build_library` averages every occurrence of every span into a
+  :class:`KernelSignature` — the waveform resampled to a fixed grid and
+  normalised to relative deviation from its mean, plus duration and
+  mean-power scalars;
+* :meth:`SignatureLibrary.match` scores an unlabeled interval against the
+  whole library at once (stacked L2 over shapes + log-scale penalties on
+  duration and mean power) and returns the nearest kernel;
+* :func:`identify_segments` labels a marker-free segmentation of a fresh
+  trace — kernels recognised with no markers and no timeline at all.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+from .attribute import KernelSpan
+from .segment import Segmentation
+
+
+def _watt_prefix(watts: np.ndarray) -> np.ndarray:
+    """Shared cumulative sum so many spans resample one trace in one pass."""
+    return np.concatenate([[0.0], np.cumsum(watts, dtype=np.float64)])
+
+
+def _resample(
+    times_s: np.ndarray,
+    watts: np.ndarray,
+    t0: float,
+    t1: float,
+    n_points: int,
+    prefix: np.ndarray | None = None,
+) -> np.ndarray:
+    """Fixed-grid resampling; bin-averages when the interval is sample-rich
+    (knocks the 20 kHz per-sample noise down by √(samples/bin))."""
+    edges = np.linspace(t0, t1, n_points + 1)
+    idx = np.searchsorted(times_s, edges)
+    counts = np.diff(idx)
+    if counts.min() >= 2:
+        if prefix is None:
+            prefix = _watt_prefix(watts)
+        return (prefix[idx[1:]] - prefix[idx[:-1]]) / counts
+    return np.interp((edges[:-1] + edges[1:]) / 2.0, times_s, watts)
+
+
+def _normalise(wave: np.ndarray) -> np.ndarray:
+    """Relative deviation from the mean, NOT a z-score: z-scoring a flat
+    kernel amplifies pure sensor noise to unit variance and swamps the
+    duration/power scalars; relative deviation keeps flat kernels flat."""
+    mu = float(wave.mean())
+    return (wave - mu) / max(abs(mu), 1e-9)
+
+
+@dataclass
+class KernelSignature:
+    """Averaged, normalised power waveform of one kernel."""
+
+    name: str
+    shape: np.ndarray  # (n_points,) relative-deviation waveform (mean over occurrences)
+    duration_s: float  # mean occurrence duration
+    mean_w: float  # mean occurrence power
+    count: int = 1  # occurrences folded in
+
+    def fold(self, shape: np.ndarray, duration_s: float, mean_w: float) -> None:
+        """Running-mean another occurrence into this signature."""
+        k = self.count
+        self.shape = (self.shape * k + shape) / (k + 1)
+        self.duration_s = (self.duration_s * k + duration_s) / (k + 1)
+        self.mean_w = (self.mean_w * k + mean_w) / (k + 1)
+        self.count = k + 1
+
+
+@dataclass
+class SignatureLibrary:
+    """Named signatures + vectorised nearest-signature matching."""
+
+    n_points: int = 64
+    #: distance weights: shape L2 is 1.0; these scale the scalar penalties
+    duration_weight: float = 0.5
+    power_weight: float = 0.5
+    signatures: dict[str, KernelSignature] = field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return len(self.signatures)
+
+    def add_occurrence(
+        self,
+        name: str,
+        times_s: np.ndarray,
+        watts: np.ndarray,
+        t0: float,
+        t1: float,
+        prefix: np.ndarray | None = None,
+    ) -> None:
+        wave = _resample(times_s, watts, t0, t1, self.n_points, prefix=prefix)
+        shape = _normalise(wave)
+        dur, mw = t1 - t0, float(wave.mean())
+        sig = self.signatures.get(name)
+        if sig is None:
+            self.signatures[name] = KernelSignature(name, shape, dur, mw)
+        else:
+            sig.fold(shape, dur, mw)
+
+    # ------------------------------------------------------------- matching
+    def _distances(
+        self, shape: np.ndarray, duration_s: float, mean_w: float
+    ) -> tuple[list[str], np.ndarray]:
+        names = list(self.signatures)
+        mat = np.stack([self.signatures[n].shape for n in names])
+        durs = np.array([self.signatures[n].duration_s for n in names])
+        mws = np.array([self.signatures[n].mean_w for n in names])
+        d_shape = np.mean((mat - shape[None, :]) ** 2, axis=1)
+        d_dur = np.log(np.maximum(duration_s, 1e-9) / np.maximum(durs, 1e-9)) ** 2
+        d_pow = np.log(np.maximum(mean_w, 1e-9) / np.maximum(mws, 1e-9)) ** 2
+        return names, d_shape + self.duration_weight * d_dur + self.power_weight * d_pow
+
+    def match(
+        self,
+        times_s: np.ndarray,
+        watts: np.ndarray,
+        t0: float,
+        t1: float,
+        prefix: np.ndarray | None = None,
+    ) -> tuple[str, float]:
+        """Nearest signature for the interval [t0, t1]: (name, distance)."""
+        if not self.signatures:
+            raise ValueError("empty signature library")
+        wave = _resample(
+            np.asarray(times_s), np.asarray(watts), t0, t1, self.n_points, prefix=prefix
+        )
+        names, dist = self._distances(_normalise(wave), t1 - t0, float(wave.mean()))
+        k = int(np.argmin(dist))
+        return names[k], float(dist[k])
+
+    # -------------------------------------------------------- serialisation
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "n_points": self.n_points,
+                "duration_weight": self.duration_weight,
+                "power_weight": self.power_weight,
+                "signatures": [
+                    {
+                        "name": s.name,
+                        "shape": s.shape.tolist(),
+                        "duration_s": s.duration_s,
+                        "mean_w": s.mean_w,
+                        "count": s.count,
+                    }
+                    for s in self.signatures.values()
+                ],
+            }
+        )
+
+    @classmethod
+    def from_json(cls, text: str) -> "SignatureLibrary":
+        obj = json.loads(text)
+        lib = cls(
+            n_points=obj["n_points"],
+            duration_weight=obj["duration_weight"],
+            power_weight=obj["power_weight"],
+        )
+        for s in obj["signatures"]:
+            lib.signatures[s["name"]] = KernelSignature(
+                s["name"], np.asarray(s["shape"]), s["duration_s"], s["mean_w"], s["count"]
+            )
+        return lib
+
+
+def build_library(
+    times_s: np.ndarray,
+    watts: np.ndarray,
+    spans: Sequence[KernelSpan],
+    n_points: int = 64,
+) -> SignatureLibrary:
+    """Fold every labelled span of a trace into a signature library."""
+    lib = SignatureLibrary(n_points=n_points)
+    t = np.asarray(times_s, dtype=np.float64)
+    w = np.asarray(watts, dtype=np.float64)
+    prefix = _watt_prefix(w)
+    for s in spans:
+        if s.duration_s > 0:
+            lib.add_occurrence(s.name, t, w, s.t0_s, s.t1_s, prefix=prefix)
+    return lib
+
+
+def identify_segments(
+    times_s: np.ndarray,
+    watts: np.ndarray,
+    seg: Segmentation,
+    library: SignatureLibrary,
+    max_distance: float | None = None,
+) -> list[tuple[KernelSpan, float]]:
+    """Label a marker-free segmentation from a signature library.
+
+    Returns ``(span, distance)`` per segment, with ``span.name`` set to the
+    nearest signature — or ``"?"`` when ``max_distance`` is given and no
+    signature comes close enough.
+    """
+    t = np.asarray(times_s, dtype=np.float64)
+    w = np.asarray(watts, dtype=np.float64)
+    prefix = _watt_prefix(w)
+    out: list[tuple[KernelSpan, float]] = []
+    for s in seg.segments:
+        if s.duration_s <= 0:
+            continue
+        name, dist = library.match(t, w, s.t0_s, s.t1_s, prefix=prefix)
+        if max_distance is not None and dist > max_distance:
+            name = "?"
+        out.append((KernelSpan(name, s.t0_s, s.t1_s), dist))
+    return out

@@ -220,14 +220,22 @@ class Firmware:
         ids[:, 1:] = ch_ids[None, :]
         vals[:, 1:] = codes[:, ch_ids]
         # host-requested markers ride on sensor-0 data packets (paper §III-B)
-        if self.pending_markers and 0 in ch_ids:
+        k = min(self.pending_markers, n)
+        if k and 0 in ch_ids:
             col = 1 + int(np.flatnonzero(ch_ids == 0)[0])
-            k = min(self.pending_markers, n)
             marks[:k, col] = 1
+        ids_f, vals_f, marks_f = ids.ravel(), vals.ravel(), marks.ravel()
+        if k:
+            if 0 not in ch_ids:
+                # ch0 disabled: markers must still reach the host, so emit
+                # bare sensor-0 packets (the host extracts the marker bit
+                # before its enabled-channel filter and ignores the value)
+                pos = np.arange(k) * per_frame + 1  # right after timestamps
+                ids_f = np.insert(ids_f, pos, 0)
+                vals_f = np.insert(vals_f, pos, codes[:k, 0])
+                marks_f = np.insert(marks_f, pos, 1)
             self.pending_markers -= k
-        self._out.extend(
-            protocol.encode_packets(ids.ravel(), vals.ravel(), marks.ravel())
-        )
+        self._out.extend(protocol.encode_packets(ids_f, vals_f, marks_f))
 
 
 @dataclass

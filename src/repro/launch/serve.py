@@ -9,26 +9,29 @@ Reports tokens/s (wall, CPU) and modelled J/token (TPU power model).
 
 With ``--fleet N`` (default 2, ``--fleet 0`` disables) a `FleetMonitor`
 over N virtual PowerSensor3 devices rides along: each device plays the
-modelled per-shard serving power, request waves are bracketed with
-time-synced markers, and per-request-wave **measured** J/token is
-attributed from marker-aligned ring-buffer interval queries — the
-psrun-style external check on the model's own telemetry.
+modelled per-shard serving power, every request wave is bracketed with
+one occurrence of a single time-synced marker char, and per-wave
+**measured** J/token comes from `repro.attrib.attribute` over the ring
+buffers — occurrence-indexed, so any number of waves attribute cleanly
+(the old per-wave marker *alphabet* wrapped after 62 waves and silently
+returned the first occurrence's interval).
 """
 from __future__ import annotations
 
 import argparse
-import string
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.attrib import EnergyLedger, KernelSpan, attribute_block, render_text
 from repro.configs import RunConfig, get_config, smoke_config
 from repro.models import build_model
 from repro.power import EnergyTelemetry, StepCost
 
-_WAVE_CHARS = string.ascii_uppercase + string.ascii_lowercase + string.digits
+#: one char brackets every wave; wave k spans occurrences k .. k+1
+_WAVE_MARK = "W"
 
 
 def _make_fleet(n_devices: int, total_watts: float, seed: int):
@@ -92,19 +95,29 @@ def main(argv=None):
 
     done_tokens = 0
     wave_tokens: list[int] = []
-    # measured energy per wave, resolved incrementally (one wave after its
+    # measured per-wave energy, resolved incrementally (one wave after its
     # closing marker lands) so long runs never outlive the ring retention
-    wave_reports: dict[int, tuple[float, int]] = {}
-    max_waves = len(_WAVE_CHARS) - 1
+    wave_ledger = EnergyLedger()
+    wave_devices: dict[int, int] = {}  # wave index -> devices that attributed
 
     def _resolve_wave(k: int) -> None:
-        if fleet is None or k < 0 or k in wave_reports or k >= max_waves:
+        """Attribute wave k (occurrences k..k+1 of the wave marker)."""
+        if fleet is None or k < 0 or k in wave_devices:
             return
-        per_dev = fleet.interval(_WAVE_CHARS[k], _WAVE_CHARS[k + 1])
-        if per_dev:
-            wave_reports[k] = (
-                sum(iv.total_energy_j for iv in per_dev.values()), len(per_dev),
+        n_dev = 0
+        for name in fleet.names:
+            hit = fleet.marker_window(name, _WAVE_MARK, occurrence=k, occurrence_b=k + 1)
+            if hit is None:
+                continue
+            t0, t1, block = hit
+            led = attribute_block(
+                block, [KernelSpan(f"wave{k}", t0, t1)], min_coverage=0.9
             )
+            if led.entries:
+                wave_ledger.absorb(led)
+                n_dev += 1
+        if n_dev:
+            wave_devices[k] = n_dev
 
     t0 = time.perf_counter()
     batch_idx = 0
@@ -114,8 +127,8 @@ def main(argv=None):
         pending = pending[b:]
         while len(batch) < b:  # pad the last wave
             batch.append(batch[-1])
-        if fleet is not None and batch_idx < max_waves:
-            fleet.mark_all(_WAVE_CHARS[batch_idx])  # last char reserved as closer
+        if fleet is not None:
+            fleet.mark_all(_WAVE_MARK)
         tokens = jnp.asarray(np.stack(batch))
         if cfg.is_encdec:
             frames = jnp.asarray(
@@ -141,10 +154,9 @@ def main(argv=None):
             _resolve_wave(batch_idx - 1)
         batch_idx += 1
     if fleet is not None:
-        fleet.mark_all(_WAVE_CHARS[min(batch_idx, max_waves)])  # closing bracket
+        fleet.mark_all(_WAVE_MARK)  # closing bracket of the last wave
         fleet.advance(0.01)  # flush the closing marker onto the stream
-        if batch_idx <= max_waves:  # past that, the closer's time is wrong
-            _resolve_wave(batch_idx - 1)
+        _resolve_wave(batch_idx - 1)
     dt = time.perf_counter() - t0
     s = telemetry.summary()
     print(f"served {args.requests} requests, {done_tokens} tokens in {dt:.2f}s "
@@ -156,15 +168,16 @@ def main(argv=None):
         print(f"fleet: {snap.aggregate.n_devices} devices, "
               f"{snap.aggregate.mean_w:.1f} W windowed mean, "
               f"{snap.aggregate.energy_j:.2f} J in window")
-        for k in sorted(wave_reports):
-            wave_j, n_dev = wave_reports[k]
-            print(f"  wave {k}: measured {wave_j:.3f} J over "
-                  f"{n_dev} devices -> "
-                  f"{wave_j / wave_tokens[k] * 1e3:.3f} mJ/token")
-        missing = batch_idx - len(wave_reports)
+        print(render_text(wave_ledger, title="per-wave measured energy"))
+        for k in sorted(wave_devices):
+            entry = wave_ledger.entries[f"wave{k}"]
+            print(f"  wave {k}: measured {entry.energy_j:.3f} J over "
+                  f"{wave_devices[k]} devices -> "
+                  f"{entry.energy_j / wave_tokens[k] * 1e3:.3f} mJ/token")
+        missing = batch_idx - len(wave_devices)
         if missing:
             print(f"  ({missing} waves not individually attributed: "
-                  f"marker alphabet exhausted or ring history evicted)")
+                  f"ring history evicted)")
         fleet.close()
 
 

@@ -26,11 +26,13 @@ from .tpu_model import (
     step_energy,
 )
 from .tuner import (
+    AttributionStrategy,
     EnergyTuner,
     KernelVariantModel,
     MeasurementStrategy,
     TuneRecord,
     TuneResultSet,
+    attribution_strategy,
     builtin_counter_strategy,
     fast_sensor_strategy,
     tuning_speedup,
@@ -57,11 +59,13 @@ __all__ = [
     "phases_for_step",
     "step_duration",
     "step_energy",
+    "AttributionStrategy",
     "EnergyTuner",
     "KernelVariantModel",
     "MeasurementStrategy",
     "TuneRecord",
     "TuneResultSet",
+    "attribution_strategy",
     "builtin_counter_strategy",
     "fast_sensor_strategy",
     "tuning_speedup",

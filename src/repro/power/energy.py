@@ -69,6 +69,12 @@ class EnergyTelemetry:
         self._step_energy = step_energy(self._phases, self.chip, self.dvfs)
 
     @property
+    def phases(self) -> list:
+        """The declared per-step kernel timeline (`repro.attrib` consumes
+        this as the ground truth to lay out between step markers)."""
+        return list(self._phases)
+
+    @property
     def modelled_step_time_s(self) -> float:
         return self._step_time
 

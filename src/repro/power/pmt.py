@@ -40,7 +40,11 @@ class Measurement:
     @property
     def energy_error_frac(self) -> float:
         if self.true_energy_j == 0:
-            return 0.0
+            # a zero-truth window must not report perfect accuracy when the
+            # meter measured energy anyway: the error is unbounded, not 0
+            if self.energy_j == 0:
+                return 0.0
+            return float("inf") if self.energy_j > 0 else float("-inf")
         return (self.energy_j - self.true_energy_j) / self.true_energy_j
 
     def captures_transient(self, t0: float, t1: float, min_samples: int = 2) -> bool:

@@ -16,6 +16,13 @@ schedule) × DVFS states; per-variant time/energy comes from the TPU model
 (`modelled=True`, the CPU container cannot time a TPU) through the full
 virtual-sensor chain, so measurement noise and sampling artefacts are
 faithfully present.
+
+Three measurement strategies are provided: the fast marker-bracketed
+sensor (`fast_sensor_strategy`), the slow builtin counter
+(`builtin_counter_strategy`), and — new — `attribution_strategy`, which
+needs no markers at all: it recovers each launch burst from the measured
+trace by changepoint segmentation and scores the variant on attributed
+per-launch energy (see `repro.attrib`).
 """
 from __future__ import annotations
 
@@ -100,6 +107,58 @@ def builtin_counter_strategy() -> MeasurementStrategy:
     """On-board 10 Hz counter: stretch each variant to >= 2 s (paper §V-A2)."""
     return MeasurementStrategy(
         BuiltinCounterMeter(mode="instant"), n_trials=7, min_window_s=2.0
+    )
+
+
+@dataclass
+class AttributionStrategy(MeasurementStrategy):
+    """Score variants from *segmented* measurements, not whole-window energy.
+
+    Each trial renders one launch **burst** (enough back-to-back launches
+    to clear the 20 kHz resolution floor) separated by idle gaps.  The
+    measured trace is then carved marker-free by
+    `repro.attrib.segment_trace`; bursts are recovered as above-threshold
+    spans and attributed individually, and the variant is scored by the
+    **median per-launch energy** — robust to baseline drift, stray
+    transients and outlier launches, which whole-window integration (and
+    its single idle-baseline subtraction) folds straight into the score.
+    """
+
+    #: a burst must span at least this long to segment cleanly at 20 kHz
+    min_burst_s: float = 0.004
+    #: idle gap separating bursts (also the pre/post padding)
+    gap_s: float = 0.004
+
+    def evaluate(
+        self, time_s: float, phases: list[Phase], chip: TpuChipSpec, dvfs: DvfsState
+    ) -> tuple[float, float]:
+        from repro.attrib import active_spans, attribute, KernelSpan, segment_trace
+
+        per_burst = max(1, int(np.ceil(self.min_burst_s / max(time_s, 1e-9))))
+        sched = [Phase("gap", self.gap_s)] + list(phases) * per_burst
+        trace = render_phases(
+            sched, chip, dvfs, repeat=self.n_trials, idle_after_s=self.gap_s
+        )
+        meas = self.meter.measure(trace.times_s, trace.watts)
+        seg = segment_trace(meas.sample_times_s, meas.sample_watts)
+        spans = [
+            KernelSpan(f"burst{i}", t0, t1)
+            for i, (t0, t1) in enumerate(active_spans(seg))
+        ]
+        run_s = float(trace.times_s[-1])
+        if not spans:  # degenerate trace: fall back to whole-window scoring
+            joules = (meas.energy_j - chip.p_static * (run_s - self.n_trials
+                      * time_s * per_burst)) / (self.n_trials * per_burst)
+            return joules, run_s + self.overhead_s
+        ledger = attribute(meas.sample_times_s, meas.sample_watts, spans)
+        burst_j = np.array([e.energy_j for e in ledger.entries.values()])
+        return float(np.median(burst_j) / per_burst), run_s + self.overhead_s
+
+
+def attribution_strategy(seed: int = 0, n_trials: int = 7) -> AttributionStrategy:
+    """Marker-free PowerSensor3 scoring via trace segmentation (attrib)."""
+    return AttributionStrategy(
+        PowerSensor3Meter(seed=seed), n_trials=n_trials, min_window_s=0.0
     )
 
 

@@ -13,6 +13,11 @@ per device).  The monitor
 * answers **marker-aligned interval queries**: energy / average power per
   device between two named markers, straight from the ring buffer.
 
+For *per-kernel* accounting on top of these primitives — changepoint
+segmentation of ring views, marker-aligned energy ledgers, power
+signatures — see `repro.attrib` (`segment_block` / `attribute_block`
+consume the same `FrameBlock`s that `interval()` reads).
+
 This module deliberately avoids importing `repro.core` at module scope —
 `repro.core.host` imports `repro.stream.ring`, and keeping this side lazy
 keeps the package import-cycle free.
@@ -163,27 +168,72 @@ class FleetMonitor:
             return None
         return hits[occurrence]
 
+    def marker_window(
+        self,
+        device: str,
+        char_a: str,
+        char_b: str | None = None,
+        occurrence: int = 0,
+        occurrence_b: int | None = None,
+    ) -> tuple[float, float, FrameBlock] | None:
+        """One device's ring frames between two marker occurrences.
+
+        Returns ``(t0, t1, block)`` — the marker times plus a locked read
+        of the frames between them — or None when either marker is
+        missing, out of order, under-sampled, or no longer fully retained
+        (an evicted head would silently undercount).  ``char_b`` defaults
+        to ``char_a``, so one repeated char brackets an unbounded sequence
+        of intervals — wave ``k`` is ``occurrence=k, occurrence_b=k+1`` —
+        with no wrapping marker alphabet to collide.
+
+        This is the raw-frames core under `interval()`; consumers that do
+        their own integration (e.g. `repro.attrib.attribute_block`) start
+        here instead of reaching into the ring and lock directly.
+        """
+        if char_b is None:
+            char_b = char_a
+        if occurrence_b is None:
+            occurrence_b = occurrence
+        ps = self._sensors[device]
+        # one pass over the (copied) marker list serves both lookups
+        hits_a = [t for c, t in ps.markers if c == char_a]
+        hits_b = hits_a if char_b == char_a else [t for c, t in ps.markers if c == char_b]
+        if occurrence >= len(hits_a) or occurrence_b >= len(hits_b):
+            return None
+        t0, t1 = hits_a[occurrence], hits_b[occurrence_b]
+        if t1 <= t0:
+            return None
+        block = self._locked_ring_read(ps, lambda: ps.ring.window(t0, t1))
+        if len(block) < 2:
+            return None
+        # evicted head: first retained frame starts well after t0
+        frame_dt = block.times_s[1] - block.times_s[0]
+        if block.times_s[0] - t0 > 2.0 * frame_dt:
+            return None
+        return t0, t1, block
+
     def interval(
-        self, char_a: str, char_b: str, occurrence: int = 0
+        self,
+        char_a: str,
+        char_b: str,
+        occurrence: int = 0,
+        occurrence_b: int | None = None,
     ) -> dict[str, IntervalStats]:
         """Per-device energy/power between markers `char_a` and `char_b`.
+
+        ``occurrence`` indexes repeated markers; ``occurrence_b`` (default:
+        same as ``occurrence``) indexes the closing marker independently —
+        see `marker_window()`, which this integrates over per device.
 
         Devices missing either marker, or whose ring no longer retains the
         *whole* span (eviction would silently undercount), are omitted.
         """
         out: dict[str, IntervalStats] = {}
-        for name, ps in self._sensors.items():
-            t0 = self._marker_time(ps, char_a, occurrence)
-            t1 = self._marker_time(ps, char_b, occurrence)
-            if t0 is None or t1 is None or t1 <= t0:
+        for name in self._sensors:
+            hit = self.marker_window(name, char_a, char_b, occurrence, occurrence_b)
+            if hit is None:
                 continue
-            block = self._locked_ring_read(ps, lambda: ps.ring.window(t0, t1))
-            if len(block) < 2:
-                continue
-            # evicted head: first retained frame starts well after t0
-            frame_dt = block.times_s[1] - block.times_s[0]
-            if block.times_s[0] - t0 > 2.0 * frame_dt:
-                continue
+            t0, t1, block = hit
             out[name] = IntervalStats(
                 t0_s=t0,
                 t1_s=t1,

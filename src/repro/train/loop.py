@@ -41,6 +41,8 @@ class TrainResult:
     stopped_at: int = 0
     preempted: bool = False
     straggler_events: list = field(default_factory=list)
+    #: per-kernel `repro.attrib.EnergyLedger` (set when an attributor runs)
+    energy_ledger: object | None = None
 
 
 def train(
@@ -52,9 +54,16 @@ def train(
     fault_injector: FaultInjector | None = None,
     mesh=None,
     shardings=None,
+    attributor=None,
 ) -> TrainResult:
     """Run (or resume) training.  `shardings`: optional dict with keys
-    'params', 'opt', 'batch' (NamedSharding pytrees) for pjit execution."""
+    'params', 'opt', 'batch' (NamedSharding pytrees) for pjit execution.
+
+    ``attributor``: an optional `repro.attrib.StepAttributor`.  Every step
+    is bracketed with a time-synced marker on its virtual sensor and the
+    modelled phase trace is played through the full 20 kHz chain; the
+    resulting per-kernel energy ledger lands in ``result.energy_ledger``.
+    """
     step_fn = make_train_step(model, opt_cfg, TrainStepConfig(loop_cfg.accum_steps))
     jit_kwargs = {}
     if shardings is not None:
@@ -132,6 +141,8 @@ def train(
                     erec = telemetry.record_step(step, dt, tokens)
                     rec["joules"] = erec.joules
                     rec["j_per_token"] = erec.j_per_token
+                if attributor is not None:
+                    attributor.on_step()
                 history.append(rec)
                 if loop_cfg.log_every and step % loop_cfg.log_every == 0:
                     msg = f"step {step:6d} loss {rec['loss']:.4f} gnorm {rec['grad_norm']:.3f} {dt*1e3:.0f} ms"
@@ -153,6 +164,13 @@ def train(
             checkpoint_now(step, sync=True)
     if saver:
         saver.wait()
+    if attributor is not None:
+        result.energy_ledger = attributor.finish()
+        if loop_cfg.log_every:
+            from repro.attrib import render_text
+
+            print(render_text(result.energy_ledger, top=8,
+                              title="per-kernel energy (measured)"), flush=True)
     result.params = params
     result.opt_state = opt_state
     result.stopped_at = step

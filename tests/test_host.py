@@ -181,6 +181,34 @@ def test_set_dump_file_does_not_close_caller_streams():
     assert not buf.closed  # caller-owned stream stays open
 
 
+def test_marker_survives_disabled_ch0():
+    """Markers ride sensor-0 packets; disabling ch0 must not swallow them.
+
+    The firmware emits bare sensor-0 packets for pending markers when ch0
+    is disabled, and the host extracts the marker bit *before* its
+    enabled-channel filter — so the event lands, time-synced, while the
+    disabled pair's power correctly reads 0."""
+    from dataclasses import replace
+
+    ps = _ps(ConstantLoad(12.0, 2.0), seed=20)
+    ps.run_for(0.05)
+    ps.set_config(0, replace(ps.get_config(0), enabled=False))
+    ps.run_for(0.05)
+    ps.mark("D")
+    ps.run_for(0.05)
+    assert len(ps.markers) == 1
+    char, t = ps.markers[0]
+    assert char == "D"
+    assert t == pytest.approx(0.1, abs=0.002)
+    st = ps.read()
+    assert st.instant_watts[0] == 0.0  # current channel disabled: no power
+    assert st.instant_volts[0] == pytest.approx(12.0, abs=0.5)  # voltage ch still on
+    # the marker-carrying packet's ADC value must not leak into energy
+    e_mark = st.consumed_joules[0]
+    ps.run_for(0.2)
+    assert ps.read().consumed_joules[0] == pytest.approx(e_mark, abs=1e-9)
+
+
 def test_dump_header_written_once_per_fresh_file():
     ps = _ps(ConstantLoad(12.0, 2.0), seed=14)
     fresh = io.StringIO()

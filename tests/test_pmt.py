@@ -81,6 +81,21 @@ def test_rapl_like_energy_ok_but_low_rate(workload):
     assert m.update_rate_hz == 1000
 
 
+def test_energy_error_frac_zero_truth_is_not_perfect():
+    """A zero-truth window with nonzero measured energy must report an
+    unbounded error, never a perfect 0.0."""
+    from repro.power import Measurement
+
+    def meas(energy, true):
+        t = np.array([0.0, 1.0])
+        return Measurement("x", t, np.zeros(2), energy, true, 1.0)
+
+    assert meas(0.0, 0.0).energy_error_frac == 0.0
+    assert meas(0.5, 0.0).energy_error_frac == float("inf")
+    assert meas(-0.5, 0.0).energy_error_frac == float("-inf")
+    assert meas(1.1, 1.0).energy_error_frac == pytest.approx(0.1)
+
+
 def test_compare_meters_returns_all(workload):
     t, w, _ = workload
     res = compare_meters(t, w)

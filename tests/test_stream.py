@@ -295,6 +295,47 @@ def test_disabled_pair_stops_accruing_energy_and_power():
     assert stats.mean_w[0] == pytest.approx(0.0, abs=1e-12)
 
 
+def test_fleet_interval_occurrence_indexed_same_char():
+    """One repeated marker char brackets unbounded intervals: wave k is
+    interval('W', 'W', occurrence=k, occurrence_b=k+1) — no alphabet wrap."""
+    fleet = make_virtual_fleet([ConstantLoad(12.0, 2.0)], seed=16)
+    fleet.run_for(0.02)
+    durations = (0.1, 0.2, 0.05)
+    fleet.mark_all("W")
+    for d in durations:
+        fleet.run_for(d)
+        fleet.mark_all("W")
+    fleet.run_for(0.02)
+    for k, d in enumerate(durations):
+        iv = fleet.interval("W", "W", occurrence=k, occurrence_b=k + 1)["dev0"]
+        assert iv.duration_s == pytest.approx(d, abs=0.005)
+        # uncalibrated per-device error allowed: Table I worst case ±4.2 W
+        assert iv.total_energy_j == pytest.approx(24.0 * d, abs=4.3 * d)
+    # same-occurrence open/close is an empty interval, not the first wave
+    assert fleet.interval("W", "W", occurrence=1) == {}
+    fleet.close()
+
+
+def test_fleet_marker_interval_spans_ring_wraparound():
+    """A marker interval whose frames physically wrap the ring must still
+    integrate correctly (the retained span crosses the buffer seam)."""
+    fleet = make_virtual_fleet(
+        [ConstantLoad(12.0, 2.0)], seed=17, ring_capacity=10_000  # ~0.5 s
+    )
+    fleet.run_for(0.4)  # fill most of the ring
+    fleet.mark_all("A")
+    fleet.run_for(0.2)  # head wraps past the physical end
+    fleet.mark_all("B")
+    fleet.run_for(0.02)
+    ps = fleet["dev0"]
+    assert ps.ring.head > ps.ring.capacity  # wrapped for sure
+    iv = fleet.interval("A", "B")["dev0"]
+    assert iv.duration_s == pytest.approx(0.2, abs=0.005)
+    assert iv.total_mean_w == pytest.approx(24.0, abs=4.3)
+    assert iv.total_energy_j == pytest.approx(24.0 * 0.2, abs=1.0)
+    fleet.close()
+
+
 def test_fleet_interval_omits_evicted_spans():
     """An interval whose head the ring has already evicted must be omitted,
     not silently undercounted."""
