@@ -1,24 +1,27 @@
-"""Serving launcher: batched prefill + decode with energy telemetry.
+"""Serving launcher: scheduler-driven batching with energy telemetry.
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --smoke \
-        --requests 16 --prompt-len 64 --gen-len 32
+        --requests 16 --prompt-len 64 --gen-len 32 --policy energy-fair
 
-Implements a minimal continuous-batching server loop: a queue of
-synthetic requests, a fixed decode batch, slot recycling on completion.
-Reports tokens/s (wall, CPU) and modelled J/token (TPU power model).
+The wave loop is driven by `repro.sched.EnergySloScheduler`: every
+request is priced in joules at submission (per-kernel phase timeline →
+`EnergyPricer`), a policy (``--policy``: throughput-max, cap-strict,
+energy-fair) selects each wave under the joules budget (``--budget-j``)
+and optional fleet power cap (``--cap-w``), and the measured energy of
+every wave — attributed from the virtual sensor fleet's ring buffers —
+is reconciled back into the scheduler, correcting the pricer online.
 
 With ``--fleet N`` (default 2, ``--fleet 0`` disables) a `FleetMonitor`
 over N virtual PowerSensor3 devices rides along: each device plays the
 modelled per-shard serving power, every request wave is bracketed with
 one occurrence of a single time-synced marker char, and per-wave
 **measured** J/token comes from `repro.attrib.attribute` over the ring
-buffers — occurrence-indexed, so any number of waves attribute cleanly
-(the old per-wave marker *alphabet* wrapped after 62 waves and silently
-returned the first occurrence's interval).
+buffers — occurrence-indexed, so any number of waves attribute cleanly.
 """
 from __future__ import annotations
 
 import argparse
+import math
 import time
 
 import jax
@@ -29,6 +32,14 @@ from repro.attrib import EnergyLedger, KernelSpan, attribute_block, render_text
 from repro.configs import RunConfig, get_config, smoke_config
 from repro.models import build_model
 from repro.power import EnergyTelemetry, StepCost
+from repro.sched import (
+    POLICIES,
+    EnergyPricer,
+    EnergySloScheduler,
+    Request,
+    format_report_rows,
+    get_policy,
+)
 
 #: one char brackets every wave; wave k spans occurrences k .. k+1
 _WAVE_MARK = "W"
@@ -61,6 +72,13 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--fleet", type=int, default=2,
                     help="virtual PowerSensor3 devices for measured J/token (0 = off)")
+    ap.add_argument("--policy", default="throughput-max", choices=sorted(POLICIES))
+    ap.add_argument("--clients", type=int, default=3,
+                    help="synthetic clients round-robined across requests")
+    ap.add_argument("--budget-j", type=float, default=0.0,
+                    help="total joules budget for admission (0 = unlimited)")
+    ap.add_argument("--cap-w", type=float, default=0.0,
+                    help="fleet power cap for cap-strict admission (0 = uncapped)")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -74,39 +92,81 @@ def main(argv=None):
     prefill = jax.jit(lambda p, t: model.prefill(p, t, max_len=max_len))
     decode = jax.jit(model.decode_step)
 
-    pending = [
-        rng.integers(2, cfg.vocab_size, size=args.prompt_len).astype(np.int32)
-        for _ in range(args.requests)
-    ]
     n = cfg.param_count_estimate()
     telemetry = EnergyTelemetry(
         cost_per_step=StepCost(2.0 * n * b, 2.0 * n, 0.0),
         n_layers=cfg.n_layers, useful_flops_per_step=2.0 * n * b,
     )
 
+    # joule-priced admission: the per-kernel phase timeline prices one decode
+    # step, the measured wave ledgers correct that price online
+    pricer = EnergyPricer.from_phases(
+        telemetry.phases, telemetry.chip, tokens_per_step=b, dvfs=telemetry.dvfs
+    )
+    modelled_watts = (
+        telemetry.modelled_step_joules / telemetry.modelled_step_time_s
+        if telemetry.modelled_step_time_s
+        else 0.0
+    )
+    sched = EnergySloScheduler(
+        pricer,
+        get_policy(args.policy),
+        max_batch=b,
+        budget_j=args.budget_j if args.budget_j > 0 else math.inf,
+        cap_w=args.cap_w if args.cap_w > 0 else None,
+        # modelled wave power scales weakly with batch on this fleet model:
+        # expose the telemetry estimate so cap-strict has something to bound
+        power_of_batch=lambda bb: modelled_watts * (0.5 + 0.5 * bb / b) if b else 0.0,
+    )
+    for rid in range(args.requests):
+        sched.submit(Request(
+            rid=rid,
+            client=f"client{rid % max(args.clients, 1)}",
+            prompt_len=args.prompt_len,
+            gen_len=args.gen_len,
+            payload=rng.integers(
+                2, cfg.vocab_size, size=args.prompt_len
+            ).astype(np.int32),
+        ))
+
     fleet = None
     if args.fleet > 0:
-        modelled_watts = (
-            telemetry.modelled_step_joules / telemetry.modelled_step_time_s
-            if telemetry.modelled_step_time_s
-            else 0.0
-        )
         fleet = _make_fleet(args.fleet, modelled_watts, args.seed)
 
     done_tokens = 0
-    wave_tokens: list[int] = []
     # measured per-wave energy, resolved incrementally (one wave after its
     # closing marker lands) so long runs never outlive the ring retention
     wave_ledger = EnergyLedger()
     wave_devices: dict[int, int] = {}  # wave index -> devices that attributed
+    wave_occ: dict[int, int] = {}  # wave index -> its opening marker occurrence
+    n_marks = 0  # total wave markers issued (flush marks shift occurrences)
+    modelled_wave_s = telemetry.modelled_step_time_s * args.gen_len
+
+    def _mark_fleet() -> None:
+        nonlocal n_marks
+        if fleet is not None:
+            fleet.mark_all(_WAVE_MARK)
+            n_marks += 1
 
     def _resolve_wave(k: int) -> None:
-        """Attribute wave k (occurrences k..k+1 of the wave marker)."""
-        if fleet is None or k < 0 or k in wave_devices:
+        """Attribute wave k (occurrences k..k+1) and reconcile it.
+
+        The fleet plays modelled watts over *wall* time (the marker span),
+        so raw measured joules are inflated by the span/modelled time ratio
+        (huge on CPU, ~1 on real hardware); the scheduler is reconciled on
+        the modelled time base — each device's joules scaled by
+        ``modelled_wave_s / span`` — so predicted and measured J stay in
+        the same units and a ``--budget-j`` set from modelled numbers keeps
+        meaning something.  The raw sensor joules stay in ``wave_ledger``
+        untouched.
+        """
+        if fleet is None or k < 0 or k in wave_devices or k not in wave_occ:
             return
+        occ = wave_occ[k]  # the wave closes at the *next* marker, occ + 1
         n_dev = 0
+        energy = 0.0
         for name in fleet.names:
-            hit = fleet.marker_window(name, _WAVE_MARK, occurrence=k, occurrence_b=k + 1)
+            hit = fleet.marker_window(name, _WAVE_MARK, occurrence=occ, occurrence_b=occ + 1)
             if hit is None:
                 continue
             t0, t1, block = hit
@@ -115,20 +175,43 @@ def main(argv=None):
             )
             if led.entries:
                 wave_ledger.absorb(led)
+                dev_j = led.total_energy_j
+                if modelled_wave_s > 0 and t1 > t0:
+                    dev_j *= modelled_wave_s / (t1 - t0)
+                energy += dev_j
                 n_dev += 1
         if n_dev:
             wave_devices[k] = n_dev
+            # devices are identical shards: scale up for any whose ring had
+            # already evicted the span, instead of silently undercounting
+            energy *= len(fleet.names) / n_dev
+            sched.reconcile(k, energy)
 
     t0 = time.perf_counter()
-    batch_idx = 0
     t_wave = t0
-    while pending:
-        batch = pending[:b]
-        pending = pending[b:]
-        while len(batch) < b:  # pad the last wave
+    while True:
+        wave = sched.next_wave(time.perf_counter() - t0)
+        if wave is None and sched.queue and fleet is not None and sched.unreconciled():
+            # blocked on in-flight commitments, not the hard budget: flush
+            # the pending wave's closing marker, reconcile, and retry
+            _mark_fleet()
+            fleet.advance(0.01)
+            for kk in list(sched.unreconciled()):
+                _resolve_wave(kk)
+            for kk in list(sched.unreconciled()):
+                # closing marker just flushed yet still unattributable: the
+                # span is gone from the ring — settle at prediction now so
+                # the freed commitment can admit what is still queued
+                sched.release_wave(kk)
+            wave = sched.next_wave(time.perf_counter() - t0)
+        if wave is None:
+            break
+        k = sched.waves[-1].index
+        batch = [r.payload for r in wave]
+        while len(batch) < b:  # pad the last wave to the compiled batch shape
             batch.append(batch[-1])
-        if fleet is not None:
-            fleet.mark_all(_WAVE_MARK)
+        wave_occ[k] = n_marks
+        _mark_fleet()
         tokens = jnp.asarray(np.stack(batch))
         if cfg.is_encdec:
             frames = jnp.asarray(
@@ -142,39 +225,55 @@ def main(argv=None):
         for i in range(args.gen_len):
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32) % cfg.vocab_size
             logits, cache = decode(params, cache, tok)
-            telemetry.record_step(batch_idx * args.gen_len + i, 0.0, b)
+            telemetry.record_step(k * args.gen_len + i, 0.0, b)
             done_tokens += b
-        wave_tokens.append(b * args.gen_len)
+        sched.complete_wave(k, args.gen_len, decoded_tokens=b * args.gen_len)
+        if fleet is None:
+            # no sensors to measure against: settle at prediction right away
+            # so budget commitments never pile up unreleased
+            sched.release_wave(k)
         if fleet is not None:
             # devices play modelled power over the wave's wall time
             now = time.perf_counter()
             fleet.advance(now - t_wave)
             t_wave = now
             # this wave's advance flushed the previous wave's closing marker
-            _resolve_wave(batch_idx - 1)
-        batch_idx += 1
-    if fleet is not None:
-        fleet.mark_all(_WAVE_MARK)  # closing bracket of the last wave
+            _resolve_wave(k - 1)
+    n_waves = len(sched.waves)
+    if fleet is not None and n_waves:
+        _mark_fleet()  # closing bracket of the last wave
         fleet.advance(0.01)  # flush the closing marker onto the stream
-        _resolve_wave(batch_idx - 1)
+        for kk in list(sched.unreconciled()):
+            _resolve_wave(kk)
+    # waves whose span the ring already evicted can never be measured:
+    # release them so their budget commitment is settled, not leaked
+    for kk in list(sched.unreconciled()):
+        sched.release_wave(kk)
+    # anything still queued when the loop gave up was starved by the budget:
+    # account for it as rejected rather than dropping it silently
+    if sched.queue:
+        sched.rejected.extend(sched.queue)
+        sched.queue.clear()
     dt = time.perf_counter() - t0
     s = telemetry.summary()
-    print(f"served {args.requests} requests, {done_tokens} tokens in {dt:.2f}s "
-          f"({done_tokens/dt:.1f} tok/s wall on CPU)")
-    print(f"modelled: {s['j_per_token']*1e3:.3f} mJ/token, "
-          f"{s['modelled_step_s']*1e3:.3f} ms/decode-step on {telemetry.chip.name}")
+    print(f"served {len(sched.finished)}/{args.requests} requests "
+          f"({len(sched.rejected)} rejected by SLO), {done_tokens} tokens in "
+          f"{dt:.2f}s ({done_tokens/dt:.1f} tok/s wall on CPU) "
+          f"over {n_waves} {args.policy} waves")
+    if s:
+        print(f"modelled: {s['j_per_token']*1e3:.3f} mJ/token, "
+              f"{s['modelled_step_s']*1e3:.3f} ms/decode-step on {telemetry.chip.name}")
     if fleet is not None:
         snap = fleet.snapshot()
         print(f"fleet: {snap.aggregate.n_devices} devices, "
               f"{snap.aggregate.mean_w:.1f} W windowed mean, "
               f"{snap.aggregate.energy_j:.2f} J in window")
-        print(render_text(wave_ledger, title="per-wave measured energy"))
-        for k in sorted(wave_devices):
-            entry = wave_ledger.entries[f"wave{k}"]
-            print(f"  wave {k}: measured {entry.energy_j:.3f} J over "
-                  f"{wave_devices[k]} devices -> "
-                  f"{entry.energy_j / wave_tokens[k] * 1e3:.3f} mJ/token")
-        missing = batch_idx - len(wave_devices)
+        print(render_text(wave_ledger, title="per-wave measured energy (raw sensor J)"))
+        print("per-request energy SLO accounting, modelled time base "
+              f"(pricer correction {pricer.correction:.3f} after "
+              f"{pricer.n_updates} waves):")
+        print(format_report_rows(sched.report_rows()))
+        missing = n_waves - len(wave_devices)
         if missing:
             print(f"  ({missing} waves not individually attributed: "
                   f"ring history evicted)")

@@ -16,7 +16,9 @@ from .pmt import (
 )
 from .trace import RenderedTrace, render_phases, trace_as_load
 from .tpu_model import (
+    DEFAULT_LADDER,
     V5E,
+    DvfsLadder,
     DvfsState,
     Phase,
     StepCost,
@@ -51,7 +53,9 @@ __all__ = [
     "RenderedTrace",
     "render_phases",
     "trace_as_load",
+    "DEFAULT_LADDER",
     "V5E",
+    "DvfsLadder",
     "DvfsState",
     "Phase",
     "StepCost",

@@ -119,6 +119,49 @@ class DvfsState:
         return [cls(scale=lo + i * (hi - lo) / (n - 1)) for i in range(n)]
 
 
+@dataclass(frozen=True)
+class DvfsLadder:
+    """Discrete DVFS operating points a governor can actuate.
+
+    Real clock control is quantised (`nvidia-smi -lgc` accepts a table of
+    frequencies, not a continuum); the closed-loop governor in
+    `repro.sched` steps this ladder rather than an ideal analogue knob.
+    Scales are kept sorted ascending so ``index`` 0 is the power floor and
+    ``len(ladder) - 1`` is full clock.
+    """
+
+    scales: tuple[float, ...] = (0.5, 0.55, 0.6, 0.65, 0.7, 0.75, 0.8, 0.85, 0.9, 0.95, 1.0)
+    v_floor: float = 0.65
+
+    def __post_init__(self) -> None:
+        if not self.scales:
+            raise ValueError("empty DVFS ladder")
+        if any(s <= 0 or s > 1.0 for s in self.scales):
+            raise ValueError("DVFS scales must be in (0, 1]")
+        if list(self.scales) != sorted(self.scales):
+            object.__setattr__(self, "scales", tuple(sorted(self.scales)))
+
+    def __len__(self) -> int:
+        return len(self.scales)
+
+    def clamp(self, index: int) -> int:
+        return min(max(index, 0), len(self.scales) - 1)
+
+    def state(self, index: int) -> DvfsState:
+        return DvfsState(scale=self.scales[self.clamp(index)], v_floor=self.v_floor)
+
+    def states(self) -> list[DvfsState]:
+        return [DvfsState(scale=s, v_floor=self.v_floor) for s in self.scales]
+
+    def nearest(self, scale: float) -> int:
+        """Index of the ladder point closest to an ideal (continuous) scale."""
+        diffs = [abs(s - scale) for s in self.scales]
+        return diffs.index(min(diffs))
+
+
+DEFAULT_LADDER = DvfsLadder()
+
+
 # ---------------------------------------------------------------------------
 # step costs and phase schedules
 # ---------------------------------------------------------------------------

@@ -1,0 +1,79 @@
+"""`repro.sched` — closed-loop energy-aware serving over the sensor fleet.
+
+The first subsystem where measurement closes the loop back into the
+workload: 20 kHz fleet telemetry (`repro.stream`) and per-kernel energy
+attribution (`repro.attrib`) feed a controller and a scheduler that
+*drive* the serving plant instead of just watching it.
+
+* `governor`  — `PowerCapGovernor`: PI power-cap control (anti-windup,
+  hysteresis, minimum dwell) actuating modelled DVFS states × decode
+  batch (`OperatingGrid`) over a `VirtualPlant` of sensor devices;
+* `scheduler` — `EnergySloScheduler`: joule-priced admission and wave
+  batching (`EnergyPricer` from attrib ledgers / per-kernel signatures /
+  model phases), with measured-vs-predicted reconciliation per wave;
+* `policies`  — throughput-max, cap-strict and energy-fair policies plus
+  `compare_policies`, the benchmark-comparable harness.
+
+Integration points: `launch.serve` (the serving wave loop is scheduler
+driven), `benchmarks/governor_cap.py` (cap adherence at 20 kHz vs
+builtin-counter telemetry rates), `examples/governor_serve.py`.
+"""
+from .governor import (
+    GovernorConfig,
+    GovernorStatus,
+    OperatingGrid,
+    OperatingPoint,
+    PiController,
+    PowerCapGovernor,
+    SampledPowerReader,
+    VirtualPlant,
+    decode_cost_of_batch,
+    settle_time,
+    time_over_cap,
+)
+from .policies import (
+    POLICIES,
+    CapStrictPolicy,
+    EnergyFairPolicy,
+    Policy,
+    PolicyScore,
+    SchedContext,
+    ThroughputMaxPolicy,
+    compare_policies,
+    get_policy,
+)
+from .scheduler import (
+    EnergyPricer,
+    EnergySloScheduler,
+    Request,
+    WaveRecord,
+    format_report_rows,
+)
+
+__all__ = [
+    "GovernorConfig",
+    "GovernorStatus",
+    "OperatingGrid",
+    "OperatingPoint",
+    "PiController",
+    "PowerCapGovernor",
+    "SampledPowerReader",
+    "VirtualPlant",
+    "decode_cost_of_batch",
+    "settle_time",
+    "time_over_cap",
+    "POLICIES",
+    "CapStrictPolicy",
+    "EnergyFairPolicy",
+    "Policy",
+    "PolicyScore",
+    "SchedContext",
+    "ThroughputMaxPolicy",
+    "compare_policies",
+    "get_policy",
+    "EnergyPricer",
+    "EnergySloScheduler",
+    "Request",
+    "WaveRecord",
+    "format_report_rows",
+]

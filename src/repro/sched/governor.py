@@ -1,0 +1,555 @@
+"""Closed-loop fleet power-cap governor over 20 kHz telemetry.
+
+The paper's speed argument, finally closed into a loop: a controller that
+*consumes* the fast sensor stream in real time and actuates the workload.
+"Part-time Power Measurements" (arXiv:2312.02741) shows why this is
+impossible on builtin counters — a 10 Hz sample-and-hold reading leaves a
+PI loop flying blind for 100 ms at a time; `benchmarks/governor_cap.py`
+reproduces exactly that failure against this governor.
+
+Pieces:
+
+* :class:`OperatingGrid` — the modelled actuation space of one serving
+  device: every (DVFS ladder point × decode-batch size) scored for average
+  watts and tokens/s through `power.tpu_model.phases_for_step`;
+* :class:`PiController` — textbook PI with clamped integrator and
+  conditional anti-windup (integration freezes while the actuator is
+  pinned at either end of the grid);
+* :class:`PowerCapGovernor` — the loop: poll fleet power from the ring
+  buffers (`FleetMonitor.window_power_w`, windowed over the per-frame
+  totals the ring maintains), PI-correct a fleet power budget, pick the
+  highest-throughput operating point that fits, with hysteresis + minimum
+  dwell so quantised actuation cannot chatter;
+* :class:`VirtualPlant` — N virtual PowerSensor3 devices playing the
+  selected operating point through the full firmware/host chain, with a
+  per-device efficiency bias the governor does *not* know (that model
+  error is what makes feedback necessary) and a ground-truth actuation
+  log for scoring cap adherence;
+* :class:`SampledPowerReader` — sample-and-hold wrapper degrading the
+  governor's telemetry to builtin-counter rates (10–100 Hz);
+* :func:`time_over_cap` / :func:`settle_time` — cap-adherence metrics
+  over a piecewise-constant true-power log.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.power.tpu_model import (
+    DEFAULT_LADDER,
+    V5E,
+    DvfsLadder,
+    StepCost,
+    TpuChipSpec,
+    phases_for_step,
+    step_duration,
+    step_energy,
+)
+
+
+@dataclass(frozen=True)
+class OperatingPoint:
+    """One actuation choice for one device: a DVFS state + a batch size."""
+
+    dvfs_index: int
+    dvfs_scale: float
+    batch: int
+    watts: float  # modelled average device power at this point
+    tokens_per_s: float  # modelled decode throughput at this point
+
+    @property
+    def j_per_token(self) -> float:
+        return self.watts / self.tokens_per_s if self.tokens_per_s > 0 else math.inf
+
+
+class OperatingGrid:
+    """Modelled (DVFS × batch) actuation space of one serving device.
+
+    ``cost_of_batch(b)`` returns the per-step `StepCost` of decoding a
+    batch of ``b`` slots; every grid point is scored once through
+    `phases_for_step` at construction, then `best_under` is a pair of
+    vectorised masks per call.  An explicit idle point (batch 0, static
+    power, zero throughput) anchors the floor so a governor can always
+    park the plant.
+    """
+
+    def __init__(
+        self,
+        cost_of_batch: Callable[[int], StepCost],
+        n_layers: int,
+        batches: Sequence[int] = (1, 2, 4, 8, 16, 32),
+        ladder: DvfsLadder = DEFAULT_LADDER,
+        chip: TpuChipSpec = V5E,
+        tokens_per_slot_step: int = 1,
+    ):
+        self.chip = chip
+        self.ladder = ladder
+        pts: list[OperatingPoint] = [
+            OperatingPoint(0, ladder.scales[0], 0, chip.p_static, 0.0)
+        ]
+        for b in sorted(set(int(b) for b in batches if b > 0)):
+            cost = cost_of_batch(b)
+            for di, dvfs in enumerate(ladder.states()):
+                phases = phases_for_step(cost, n_layers, chip, dvfs)
+                t = step_duration(phases)
+                if t <= 0:
+                    continue
+                e = step_energy(phases, chip, dvfs)
+                pts.append(
+                    OperatingPoint(
+                        di, dvfs.scale, b, e / t, b * tokens_per_slot_step / t
+                    )
+                )
+        self.points = pts
+        self._watts = np.array([p.watts for p in pts])
+        self._tps = np.array([p.tokens_per_s for p in pts])
+        self._batch = np.array([p.batch for p in pts])
+
+    def __len__(self) -> int:
+        return len(self.points)
+
+    @property
+    def idle(self) -> OperatingPoint:
+        return self.points[0]
+
+    @property
+    def max_watts(self) -> float:
+        return float(self._watts.max())
+
+    def best_under(
+        self, budget_w: float, max_batch: int | None = None
+    ) -> OperatingPoint:
+        """Highest-throughput point with watts ≤ budget (ties: fewer watts).
+
+        ``max_batch`` bounds the batch (offered load / queue depth); when
+        no point fits the budget the lowest-power feasible point is
+        returned — a governor can always shed to the floor.
+        """
+        ok = self._watts <= budget_w
+        if max_batch is not None:
+            ok &= self._batch <= max_batch
+        if not ok.any():
+            ok = (
+                self._batch <= max_batch
+                if max_batch is not None
+                else np.ones_like(self._watts, dtype=bool)
+            )
+            if not ok.any():
+                return self.idle
+            return self.points[int(np.flatnonzero(ok)[np.argmin(self._watts[ok])])]
+        idx = np.flatnonzero(ok)
+        # argmax tokens/s; among equals prefer the cheapest watts
+        tps = self._tps[idx]
+        best_tps = tps.max()
+        tied = idx[tps >= best_tps - 1e-12]
+        return self.points[int(tied[np.argmin(self._watts[tied])])]
+
+    def next_above(
+        self, point: OperatingPoint, max_batch: int | None = None
+    ) -> OperatingPoint | None:
+        """The next rung up: cheapest strictly-faster point above ``point``.
+
+        None when ``point`` already tops the (demand-bounded) frontier —
+        the governor treats that as actuator saturation.
+        """
+        ok = (self._tps > point.tokens_per_s + 1e-12) & (self._watts > point.watts)
+        if max_batch is not None:
+            ok &= self._batch <= max_batch
+        if not ok.any():
+            return None
+        idx = np.flatnonzero(ok)
+        return self.points[int(idx[np.argmin(self._watts[idx])])]
+
+    def next_below(
+        self, point: OperatingPoint, max_batch: int | None = None
+    ) -> OperatingPoint | None:
+        """The next rung down the efficient frontier: the highest-throughput
+        point strictly cheaper than ``point`` (ties: fewer watts).
+
+        Selecting by watts adjacency instead would land on *dominated*
+        points — e.g. a smaller-batch rung 1 W cheaper with half the
+        tokens/s — shedding almost no power and destabilising the loop.
+        """
+        ok = self._watts < point.watts - 1e-12
+        if max_batch is not None:
+            ok &= self._batch <= max_batch
+        if not ok.any():
+            return None
+        idx = np.flatnonzero(ok)
+        tps = self._tps[idx]
+        tied = idx[tps >= tps.max() - 1e-12]
+        return self.points[int(tied[np.argmin(self._watts[tied])])]
+
+    def power_of_batch(self, batch: int) -> float:
+        """Full-clock modelled device watts for a batch (scheduler pricing)."""
+        ok = self._batch == batch
+        if not ok.any():
+            return float(self.chip.p_static)
+        full = np.flatnonzero(ok)
+        return float(self._watts[full].max())
+
+
+def decode_cost_of_batch(
+    flops_per_token: float,
+    hbm_bytes_per_step: float,
+    ici_bytes_per_step: float = 0.0,
+    tokens_per_slot_step: int = 1,
+) -> Callable[[int], StepCost]:
+    """Serving-step cost closure: flops scale with batch, weights stream once."""
+
+    def cost(b: int) -> StepCost:
+        return StepCost(
+            flops_per_token * tokens_per_slot_step * b,
+            hbm_bytes_per_step,
+            ici_bytes_per_step,
+        )
+
+    return cost
+
+
+class PiController:
+    """PI loop with a clamped integrator and conditional anti-windup."""
+
+    def __init__(self, kp: float, ki: float, i_lo: float, i_hi: float):
+        self.kp = float(kp)
+        self.ki = float(ki)
+        self.i_lo = float(i_lo)
+        self.i_hi = float(i_hi)
+        self.integral = 0.0
+
+    def update(
+        self,
+        error: float,
+        dt_s: float,
+        saturated_hi: bool = False,
+        saturated_lo: bool = False,
+    ) -> float:
+        """One tick: returns the control output kp·e + ∫ki·e.
+
+        Anti-windup is conditional integration: when the actuator is pinned
+        at full throttle and the error still asks for more (or pinned at
+        the floor and asked for less), the integrator freezes instead of
+        accumulating demand it cannot deliver.
+        """
+        pushing_past = (saturated_hi and error > 0) or (saturated_lo and error < 0)
+        if not pushing_past:
+            self.integral = min(
+                max(self.integral + self.ki * error * dt_s, self.i_lo), self.i_hi
+            )
+        return self.kp * error + self.integral
+
+    def reset(self) -> None:
+        self.integral = 0.0
+
+
+class SampledPowerReader:
+    """Sample-and-hold telemetry: what a builtin counter feeds a controller.
+
+    Wraps any ``read(now_s) -> watts`` callable and only refreshes it at
+    ``rate_hz``; between refreshes the stale value is returned, exactly the
+    nvidia-smi-style failure mode of arXiv:2312.02741.
+    """
+
+    def __init__(self, read_fn: Callable[[float], float], rate_hz: float):
+        if rate_hz <= 0:
+            raise ValueError("rate_hz must be positive")
+        self._read = read_fn
+        self.period_s = 1.0 / float(rate_hz)
+        self._next_due_s = -math.inf
+        self._held = 0.0
+        self.n_reads = 0
+
+    def __call__(self, now_s: float) -> float:
+        if now_s >= self._next_due_s:
+            self._held = self._read(now_s)
+            self.n_reads += 1
+            self._next_due_s = now_s + self.period_s
+        return self._held
+
+
+# --------------------------------------------------------------------- plant
+class VirtualPlant:
+    """N virtual sensor devices playing the governed operating point.
+
+    The actuation surface for simulation: ``apply(point, now)`` reprograms
+    every device's DUT load to the point's modelled watts, scaled by a
+    per-device efficiency bias the governor never sees — its feedback loop
+    has to discover and trim that model error, exactly as it would on real
+    silicon.  Every actuation is logged as ``(time, true fleet watts)`` so
+    benchmarks can score cap adherence against ground truth rather than
+    against the sensor being tested.
+
+    Each device's sensor is calibrated (§III-D) at construction — an
+    uncalibrated Hall offset reads several watts low/high per device,
+    which a cap governor would faithfully regulate to the wrong power.
+    Pass ``calibrate_samples=0`` to skip (tests that only exercise loop
+    dynamics and tolerate a few watts of instrument bias).
+    """
+
+    def __init__(
+        self,
+        grid: OperatingGrid,
+        n_devices: int = 4,
+        biases: Sequence[float] | None = None,
+        seed: int = 0,
+        volts: float = 12.0,
+        module: str = "pcie8pin-20a",
+        ring_capacity: int = 1 << 16,
+        window_s: float = 0.005,
+        calibrate_samples: int = 6000,
+    ):
+        from repro.core import ConstantLoad
+        from repro.core.calibration import calibrate
+        from repro.stream import make_virtual_fleet
+
+        self.grid = grid
+        self.volts = float(volts)
+        if biases is None:
+            rng = np.random.default_rng(seed + 7919)
+            biases = 1.0 + rng.uniform(-0.06, 0.08, size=n_devices)
+        self.biases = [float(b) for b in biases]
+        if len(self.biases) != n_devices:
+            raise ValueError("one bias per device")
+        self.fleet = make_virtual_fleet(
+            [ConstantLoad(self.volts, 0.0) for _ in range(n_devices)],
+            module=module,
+            seed=seed,
+            window_s=window_s,
+            ring_capacity=ring_capacity,
+        )
+        self._loads = [
+            self.fleet[name].device.firmware.dut.loads[0] for name in self.fleet.names
+        ]
+        if calibrate_samples > 0:
+            for name in self.fleet.names:
+                calibrate(self.fleet[name], {0: self.volts}, n_samples=calibrate_samples)
+        self.point = grid.idle
+        self.demand_batch = 0
+        self.log: list[tuple[float, float]] = []  # (t, true fleet watts)
+        self.apply(grid.idle, 0.0)
+
+    @property
+    def n_devices(self) -> int:
+        return len(self._loads)
+
+    def true_device_watts(self, point: OperatingPoint) -> list[float]:
+        """Per-device ground-truth watts at a point (bias on dynamic power)."""
+        p_static = self.grid.chip.p_static
+        dyn = max(point.watts - p_static, 0.0)
+        return [p_static + dyn * b for b in self.biases]
+
+    @property
+    def true_fleet_w(self) -> float:
+        return sum(self.true_device_watts(self.point))
+
+    def set_demand(self, batch: int) -> None:
+        """Offered load: the largest batch the queue can currently fill."""
+        self.demand_batch = max(int(batch), 0)
+
+    def apply(self, point: OperatingPoint, now_s: float) -> None:
+        for load, w in zip(self._loads, self.true_device_watts(point)):
+            load.amps = w / self.volts
+        self.point = point
+        self.log.append((float(now_s), self.true_fleet_w))
+
+    def advance(self, dt_s: float) -> None:
+        self.fleet.advance(dt_s)
+
+    def close(self) -> None:
+        self.fleet.close()
+
+
+# ------------------------------------------------------------------ governor
+@dataclass
+class GovernorConfig:
+    cap_w: float  # fleet-level power cap
+    window_s: float = 0.003  # telemetry window per control tick
+    dt_s: float = 0.001  # control tick period
+    kp: float = 0.8
+    ki: float = 60.0
+    #: deadband: upshifts need this much fleet-watt headroom under budget
+    hysteresis_w: float = 0.0  # 0 = auto (2 % of cap)
+    #: minimum spacing between switches before the next *upshift* — must
+    #: cover a full measurement-window refresh or stale telemetry re-fires
+    #: the upshift and the loop chatters over the cap
+    min_dwell_s: float = 0.0  # 0 = auto (2·window + tick)
+    #: integrator clamp as a fraction of the cap (anti-windup bound)
+    integral_span_frac: float = 0.3
+
+    def __post_init__(self) -> None:
+        if self.cap_w <= 0:
+            raise ValueError("cap_w must be positive")
+        if self.hysteresis_w <= 0:
+            self.hysteresis_w = 0.02 * self.cap_w
+        if self.min_dwell_s <= 0:
+            self.min_dwell_s = 2.0 * self.window_s + self.dt_s
+
+
+@dataclass(frozen=True)
+class GovernorStatus:
+    """One control tick's record."""
+
+    time_s: float
+    measured_w: float
+    budget_w: float
+    point: OperatingPoint
+    switched: bool
+
+
+class PowerCapGovernor:
+    """PI power-cap controller actuating an `OperatingGrid` over a plant.
+
+    Call :meth:`step` once per control tick *before* advancing the plant:
+    it reads fleet power (via the injected reader, default the 20 kHz
+    windowed ring hook), updates the PI budget, and — subject to
+    hysteresis and minimum dwell — re-selects the operating point.
+    Downshifts are never delayed: shedding power is a safety action.
+    """
+
+    def __init__(
+        self,
+        plant: VirtualPlant,
+        config: GovernorConfig,
+        read_power: Callable[[float], float] | None = None,
+    ):
+        self.plant = plant
+        self.cfg = config
+        self.read_power = read_power or (
+            lambda now_s: plant.fleet.window_power_w(config.window_s)
+        )
+        span = config.integral_span_frac * config.cap_w
+        self.pi = PiController(config.kp, config.ki, -span, span)
+        self._last_switch_s = -math.inf
+        #: EWMA of measured/modelled fleet power, the live model-bias
+        #: estimate; updated only from *fresh* windows (see step())
+        self._rho = 1.0
+        self.history: list[GovernorStatus] = []
+        self.n_switches = 0
+
+    def step(self, now_s: float) -> GovernorStatus:
+        cfg = self.cfg
+        plant = self.plant
+        measured = self.read_power(now_s)
+        err = cfg.cap_w - measured
+        n = plant.n_devices
+        # the telemetry window lags a switch by one window length: reads
+        # taken before it refreshes mix the old point's power in.  Blank
+        # the integrator and the bias estimate until the window is fresh,
+        # or every switch transient pumps the integrator with phantom error.
+        fresh = now_s - self._last_switch_s >= cfg.window_s
+        modelled = n * plant.point.watts
+        if fresh and modelled > 0 and measured > 0:
+            inst = min(max(measured / modelled, 0.6), 1.4)
+            self._rho += 0.4 * (inst - self._rho)
+        rho = self._rho
+        # anti-windup saturation: "more" is unavailable when there is no rung
+        # above (demand-bounded frontier topped out) or the next rung up is
+        # predicted — via the live bias estimate — to land over the cap;
+        # without this the integrator creeps through the quantisation
+        # residual and periodically re-tries a rung it already knows blows
+        # the cap (a permanent limit cycle)
+        nxt = plant.grid.next_above(plant.point, max_batch=plant.demand_batch)
+        at_ceiling = nxt is None or n * nxt.watts * rho > cfg.cap_w
+        at_floor = plant.point is plant.grid.idle
+        u = self.pi.update(
+            err, cfg.dt_s if fresh else 0.0,
+            saturated_hi=at_ceiling, saturated_lo=at_floor,
+        )
+        budget = min(max(cfg.cap_w + u, n * plant.grid.chip.p_static), 2.0 * cfg.cap_w)
+        # selection budget: the PI budget, additionally clamped so no rung
+        # *predicted* (via the live bias estimate) to blow the band is ever
+        # selected — the multi-rung jump lands at the highest safe rung
+        sel_budget = min(budget, (cfg.cap_w + cfg.hysteresis_w) / rho)
+        cand = plant.grid.best_under(sel_budget / n, max_batch=plant.demand_batch)
+        if err < -cfg.hysteresis_w and cand is plant.point:
+            # measured beyond the promised band: shed a rung *now* rather
+            # than waiting for the integrator to drain the budget past it
+            down = plant.grid.next_below(plant.point, max_batch=plant.demand_batch)
+            if down is not None:
+                cand = down
+        switched = False
+        if cand is not plant.point:
+            downshift = cand.watts < plant.point.watts - 1e-9 or (
+                plant.demand_batch < plant.point.batch
+            )
+            if downshift:
+                switched = True  # shedding is always allowed, immediately
+            elif (
+                now_s - self._last_switch_s >= cfg.min_dwell_s
+                and n * cand.watts <= budget - cfg.hysteresis_w
+            ):
+                switched = True
+            if switched:
+                plant.apply(cand, now_s)
+                self._last_switch_s = now_s
+                self.n_switches += 1
+        status = GovernorStatus(now_s, measured, budget, plant.point, switched)
+        self.history.append(status)
+        return status
+
+    def run(
+        self,
+        duration_s: float,
+        t0_s: float = 0.0,
+        demand_of_t: Callable[[float], int] | None = None,
+    ) -> list[GovernorStatus]:
+        """Drive the closed loop for a duration (convenience for sims)."""
+        t = t0_s
+        end = t0_s + duration_s
+        while t < end - 1e-12:
+            if demand_of_t is not None:
+                self.plant.set_demand(demand_of_t(t))
+            self.step(t)
+            self.plant.advance(self.cfg.dt_s)
+            t += self.cfg.dt_s
+        return self.history
+
+
+# ------------------------------------------------------------------- metrics
+def _log_segments(
+    log: Sequence[tuple[float, float]], t0_s: float, t1_s: float
+) -> list[tuple[float, float, float]]:
+    """Clip a piecewise-constant (t, w) log to [t0, t1) as (a, b, w) spans."""
+    segs: list[tuple[float, float, float]] = []
+    for i, (t, w) in enumerate(log):
+        t_next = log[i + 1][0] if i + 1 < len(log) else t1_s
+        a, b = max(t, t0_s), min(t_next, t1_s)
+        if b > a:
+            segs.append((a, b, w))
+    return segs
+
+
+def time_over_cap(
+    log: Sequence[tuple[float, float]],
+    cap_w: float,
+    t0_s: float,
+    t1_s: float,
+    tol: float = 0.01,
+) -> float:
+    """Fraction of [t0, t1) the true power spent above cap·(1 + tol)."""
+    if t1_s <= t0_s:
+        return 0.0
+    over = sum(b - a for a, b, w in _log_segments(log, t0_s, t1_s) if w > cap_w * (1.0 + tol))
+    return over / (t1_s - t0_s)
+
+
+def settle_time(
+    log: Sequence[tuple[float, float]],
+    cap_w: float,
+    t_step_s: float,
+    t_end_s: float,
+    tol: float = 0.02,
+) -> float:
+    """Seconds after a load step until the last over-cap excursion ends.
+
+    0.0 when the cap was never exceeded after the step; ``t_end - t_step``
+    when the plant was still over cap at the end of the run (not settled).
+    """
+    last_over_end = t_step_s
+    for a, b, w in _log_segments(log, t_step_s, t_end_s):
+        if w > cap_w * (1.0 + tol):
+            last_over_end = b
+    return last_over_end - t_step_s

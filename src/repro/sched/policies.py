@@ -1,0 +1,240 @@
+"""Admission/batching policies for the energy-SLO scheduler.
+
+A policy answers two questions per wave: in what order should queued
+requests be admitted (``order``), and how large may the wave be
+(``batch_limit``)?  The scheduler applies the joules budget on top, so
+policies stay pure ranking/limiting logic and are directly comparable.
+
+Three built-ins, benchmark-comparable via :func:`compare_policies`:
+
+* ``throughput-max`` — fill every wave FIFO to the batch limit: most
+  tokens/s, no regard for power or fairness;
+* ``cap-strict``    — bound the wave batch so the *modelled* wave power
+  stays under the cap (admission-side capping, complementing the
+  governor's actuation-side cap);
+* ``energy-fair``   — round-robin over clients ordered by cumulative
+  measured energy, so one heavy client cannot starve the rest of the
+  joules budget.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Callable, Mapping, Sequence
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .scheduler import Request
+
+
+@dataclass(frozen=True)
+class SchedContext:
+    """What the scheduler knows at wave-selection time."""
+
+    max_batch: int
+    remaining_budget_j: float
+    cap_w: float | None = None
+    #: modelled full-clock wave power for a batch size (from `OperatingGrid`)
+    power_of_batch: Callable[[int], float] | None = None
+    client_energy_j: Mapping[str, float] = field(default_factory=dict)
+    now_s: float = 0.0
+
+
+class Policy:
+    """Base: FIFO order, full batches. Subclasses override either hook."""
+
+    name = "fifo"
+
+    def order(self, queue: Sequence["Request"], ctx: SchedContext) -> list[int]:
+        return sorted(range(len(queue)), key=lambda i: (queue[i].arrival_s, queue[i].rid))
+
+    def batch_limit(self, queue: Sequence["Request"], ctx: SchedContext) -> int:
+        return ctx.max_batch
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return f"<{type(self).__name__} {self.name!r}>"
+
+
+class ThroughputMaxPolicy(Policy):
+    """Largest waves, FIFO admission: the tokens/s-at-any-cost baseline."""
+
+    name = "throughput-max"
+
+
+class CapStrictPolicy(Policy):
+    """Never *schedule* a wave whose modelled power exceeds the cap.
+
+    Complements the governor: the governor trims actuation when the
+    measured fleet runs hot; this policy refuses to queue work that the
+    model already predicts will blow the cap.  Falls back to batch 1 so
+    progress is never fully blocked (a single-slot wave under a cap the
+    hardware cannot meet is the governor's problem, not admission's).
+    """
+
+    name = "cap-strict"
+
+    def __init__(self, headroom: float = 1.0):
+        self.headroom = float(headroom)
+
+    def batch_limit(self, queue: Sequence["Request"], ctx: SchedContext) -> int:
+        if ctx.cap_w is None or ctx.power_of_batch is None:
+            return ctx.max_batch
+        best = 1
+        for b in range(1, ctx.max_batch + 1):
+            if ctx.power_of_batch(b) <= ctx.cap_w * self.headroom:
+                best = b
+        return best
+
+
+class EnergyFairPolicy(Policy):
+    """Round-robin clients by cumulative measured energy (least first).
+
+    Orders queue slots by interleaving clients, with the least-charged
+    client's requests first — so the joules budget drains evenly across
+    clients instead of first-come-first-burned.
+    """
+
+    name = "energy-fair"
+
+    def order(self, queue: Sequence["Request"], ctx: SchedContext) -> list[int]:
+        per_client: dict[str, list[int]] = {}
+        for i in sorted(
+            range(len(queue)), key=lambda i: (queue[i].arrival_s, queue[i].rid)
+        ):
+            per_client.setdefault(queue[i].client, []).append(i)
+        clients = sorted(
+            per_client, key=lambda c: (ctx.client_energy_j.get(c, 0.0), c)
+        )
+        out: list[int] = []
+        rank = 0
+        while len(out) < len(queue):
+            for c in clients:
+                slots = per_client[c]
+                if rank < len(slots):
+                    out.append(slots[rank])
+            rank += 1
+        return out
+
+
+POLICIES: dict[str, Callable[[], Policy]] = {
+    ThroughputMaxPolicy.name: ThroughputMaxPolicy,
+    CapStrictPolicy.name: CapStrictPolicy,
+    EnergyFairPolicy.name: EnergyFairPolicy,
+}
+
+
+def get_policy(name: str) -> Policy:
+    try:
+        return POLICIES[name]()
+    except KeyError:
+        raise ValueError(f"unknown policy {name!r}; choose from {sorted(POLICIES)}")
+
+
+# ------------------------------------------------------------------ compare
+@dataclass(frozen=True)
+class PolicyScore:
+    """One policy's run over the canned comparison workload."""
+
+    name: str
+    tokens_per_s: float
+    j_per_token: float
+    peak_wave_w: float
+    fairness_spread_j: float  # max - min cumulative client energy
+    waves: int
+    finished: int
+
+
+def compare_policies(
+    n_requests: int = 24,
+    n_clients: int = 3,
+    max_batch: int = 8,
+    gen_len_range: tuple[int, int] = (16, 64),
+    cap_w: float | None = None,
+    j_per_token: float | None = None,
+    budget_frac: float | None = None,
+    power_of_batch: Callable[[int], float] | None = None,
+    time_of_batch: Callable[[int], float] | None = None,
+    measured_bias: float = 1.1,
+    seed: int = 0,
+    policies: Sequence[str] | None = None,
+) -> dict[str, PolicyScore]:
+    """Run each policy over one synthetic workload; analytic wave execution.
+
+    Every policy sees the identical request set (same seed): per-wave time
+    and power come from the supplied batch models (defaults: linear power,
+    constant step time), measured energy is the prediction scaled by
+    ``measured_bias`` so the pricer's reconciliation loop is exercised.
+    ``budget_frac`` scarcifies the joules budget to that fraction of the
+    workload's total predicted cost — fairness only differentiates
+    policies when there is not enough energy for everyone.  Scores are
+    directly comparable — this is what the sched tests pin the policy
+    ranking with.
+    """
+    import numpy as np
+
+    from .scheduler import EnergyPricer, EnergySloScheduler, Request
+
+    power_of_batch = power_of_batch or (lambda b: 80.0 + 15.0 * b)
+    time_of_batch = time_of_batch or (lambda b: 1e-3)
+    if j_per_token is None:
+        # price consistently with the wave-execution models, so predictions
+        # track measurements up to `measured_bias` and the budget is honest
+        j_per_token = (
+            power_of_batch(max_batch) * time_of_batch(max_batch) / max_batch
+        )
+    rng = np.random.default_rng(seed)
+    gen_lens = rng.integers(gen_len_range[0], gen_len_range[1] + 1, size=n_requests)
+    clients = [f"client{int(rng.integers(n_clients))}" for _ in range(n_requests)]
+    budget_j = math.inf
+    if budget_frac is not None:
+        budget_j = budget_frac * j_per_token * float(np.sum(gen_lens))
+
+    out: dict[str, PolicyScore] = {}
+    for pname in policies or sorted(POLICIES):
+        policy = get_policy(pname)
+        sched = EnergySloScheduler(
+            EnergyPricer(j_per_token=j_per_token),
+            policy,
+            max_batch=max_batch,
+            budget_j=budget_j,
+            cap_w=cap_w,
+            power_of_batch=power_of_batch,
+        )
+        for rid in range(n_requests):
+            sched.submit(
+                Request(rid=rid, client=clients[rid], gen_len=int(gen_lens[rid]))
+            )
+        total_tokens = 0
+        total_time = 0.0
+        total_j = 0.0
+        peak_w = 0.0
+        now = 0.0
+        while True:
+            wave = sched.next_wave(now)
+            if wave is None:
+                break
+            b = len(wave)
+            steps = max(r.gen_len for r in wave)
+            # one wave decodes each admitted request to completion (padded
+            # slots keep decoding to the longest request, as serve.py does)
+            sched.complete_wave(sched.waves[-1].index, steps)
+            tokens = steps * b
+            t_wave = time_of_batch(b) * steps
+            watts = power_of_batch(b)
+            measured = watts * t_wave * measured_bias
+            sched.reconcile(sched.waves[-1].index, measured)
+            total_tokens += tokens
+            total_time += t_wave
+            total_j += measured
+            peak_w = max(peak_w, watts)
+            now += t_wave
+        energies = list(sched.client_energy_j.values()) or [0.0]
+        out[pname] = PolicyScore(
+            name=pname,
+            tokens_per_s=total_tokens / total_time if total_time else 0.0,
+            j_per_token=total_j / total_tokens if total_tokens else 0.0,
+            peak_wave_w=peak_w,
+            fairness_spread_j=max(energies) - min(energies),
+            waves=len(sched.waves),
+            finished=len(sched.finished),
+        )
+    return out

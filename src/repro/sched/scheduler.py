@@ -1,0 +1,360 @@
+"""Energy-SLO admission and batching over a priced request queue.
+
+The scheduling half of the closed loop: where the governor holds a power
+cap by actuating the plant, the scheduler decides *which work* runs by
+pricing every queued request in joules before it is admitted and
+reconciling those predictions against the energy the sensor fleet
+actually measured (per-wave `EnergyLedger`s from `repro.attrib`).
+
+* :class:`EnergyPricer` — predicted J/token for an architecture, built
+  from per-kernel attribution artifacts (an attributed `EnergyLedger`, a
+  `SignatureLibrary` of per-kernel waveforms, or the declared phase
+  timeline of the TPU model) and corrected online by an EWMA of the
+  measured/predicted ratio;
+* :class:`Request` — one queued generation request with its predicted
+  and measured energy accounting;
+* :class:`EnergySloScheduler` — policy-driven wave selection under a
+  joules budget, wave completion, and measured-energy reconciliation
+  (wave energy is split across the wave's requests by token share, so
+  per-request totals always sum to the ledger total).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Sequence
+
+from .policies import Policy, SchedContext
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.attrib import EnergyLedger
+    from repro.attrib.signatures import SignatureLibrary
+
+
+@dataclass
+class Request:
+    """One generation request moving through the scheduler."""
+
+    rid: int
+    client: str = "default"
+    prompt_len: int = 0
+    gen_len: int = 0
+    arrival_s: float = 0.0
+    payload: object = None  # opaque (e.g. the prompt token array)
+    predicted_j: float = 0.0
+    measured_j: float = 0.0
+    done_tokens: int = 0
+    finished: bool = False
+
+    @property
+    def measured_mj_per_token(self) -> float:
+        return self.measured_j / self.done_tokens * 1e3 if self.done_tokens else 0.0
+
+
+@dataclass
+class EnergyPricer:
+    """Predicted J/token for one architecture, reconciled against reality.
+
+    ``j_per_token`` is the base per-kernel prediction; ``correction`` is
+    an EWMA of measured/base ratios fed back from attributed wave ledgers,
+    so systematic model error (the same bias the governor's PI integrator
+    absorbs) washes out of admission pricing after a few waves.
+    """
+
+    j_per_token: float
+    alpha: float = 0.25
+    correction: float = 1.0
+    n_updates: int = 0
+
+    def price_tokens(self, n_tokens: int) -> float:
+        return self.j_per_token * self.correction * max(int(n_tokens), 0)
+
+    def update(self, tokens: int, measured_j: float) -> float:
+        """Fold one measured wave in; returns the instantaneous ratio."""
+        base = self.j_per_token * tokens
+        if base <= 0 or measured_j <= 0:
+            return self.correction
+        ratio = measured_j / base
+        self.correction = (1.0 - self.alpha) * self.correction + self.alpha * ratio
+        self.n_updates += 1
+        return ratio
+
+    # ------------------------------------------------------------ builders
+    @classmethod
+    def from_ledger(cls, ledger: "EnergyLedger", tokens: int, **kw) -> "EnergyPricer":
+        """Price from an attributed ledger covering ``tokens`` of decode."""
+        if tokens <= 0:
+            raise ValueError("tokens must be positive")
+        return cls(j_per_token=ledger.total_energy_j / tokens, **kw)
+
+    @classmethod
+    def from_signatures(
+        cls,
+        library: "SignatureLibrary",
+        tokens_per_step: int,
+        kernels: Sequence[str] | None = None,
+        **kw,
+    ) -> "EnergyPricer":
+        """Price from per-kernel power signatures: Σ mean_w · duration per step.
+
+        This is the `attrib.signatures` path: each kernel's signature
+        carries its mean occurrence power and duration, so one modelled
+        serving step costs the sum over its kernels — no markers needed on
+        the pricing side.
+        """
+        names = list(kernels) if kernels is not None else list(library.signatures)
+        step_j = 0.0
+        for name in names:
+            sig = library.signatures[name]
+            step_j += sig.mean_w * sig.duration_s
+        if tokens_per_step <= 0:
+            raise ValueError("tokens_per_step must be positive")
+        return cls(j_per_token=step_j / tokens_per_step, **kw)
+
+    @classmethod
+    def from_phases(cls, phases, chip, tokens_per_step: int, dvfs=None, **kw) -> "EnergyPricer":
+        """Price from the declared per-kernel phase timeline (model-only)."""
+        step_j = sum(p.power(chip, dvfs) * p.duration_s for p in phases)
+        if tokens_per_step <= 0:
+            raise ValueError("tokens_per_step must be positive")
+        return cls(j_per_token=step_j / tokens_per_step, **kw)
+
+
+@dataclass
+class WaveRecord:
+    """One scheduled wave and its energy accounting."""
+
+    index: int
+    rids: list[int]
+    tokens: int = 0  # tokens credited to real requests (gen_len-clamped)
+    #: tokens the hardware actually decoded, including padded batch slots —
+    #: the denominator the pricer's J/token correction must use
+    decoded_tokens: int = 0
+    request_tokens: list[int] = field(default_factory=list)
+    predicted_j: float = 0.0
+    measured_j: float | None = None  # None until reconciled/released
+    released: bool = False  # settled from prediction, not measurement
+
+
+class EnergySloScheduler:
+    """Policy-driven wave selection under a joules budget.
+
+    Lifecycle per wave: :meth:`next_wave` (policy orders the queue, the
+    scheduler admits a budget-feasible prefix), :meth:`complete_wave`
+    (tokens decoded), :meth:`reconcile` (attributed wave energy lands,
+    split across the wave's requests by token share, budget and pricer
+    updated).  Reconciliation is allowed to lag by any number of waves —
+    exactly how `launch.serve` resolves wave ``k`` one wave late, after
+    its closing marker has flushed through the ring.
+    """
+
+    def __init__(
+        self,
+        pricer: EnergyPricer,
+        policy: Policy,
+        max_batch: int,
+        budget_j: float = math.inf,
+        cap_w: float | None = None,
+        power_of_batch=None,
+    ):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.pricer = pricer
+        self.policy = policy
+        self.max_batch = int(max_batch)
+        self.budget_j = float(budget_j)
+        self.cap_w = cap_w
+        self.power_of_batch = power_of_batch
+        self.queue: list[Request] = []
+        self.waves: list[WaveRecord] = []
+        self.finished: list[Request] = []
+        self.rejected: list[Request] = []
+        self.spent_j = 0.0  # reconciled measured energy
+        self.committed_j = 0.0  # predicted energy of unreconciled waves
+        self.client_energy_j: dict[str, float] = {}
+        self._by_rid: dict[int, Request] = {}
+
+    # ---------------------------------------------------------- admission
+    @property
+    def remaining_budget_j(self) -> float:
+        return self.budget_j - self.spent_j - self.committed_j
+
+    def submit(self, req: Request) -> None:
+        req.predicted_j = self.pricer.price_tokens(req.gen_len)
+        self.queue.append(req)
+        self._by_rid[req.rid] = req
+        self.client_energy_j.setdefault(req.client, 0.0)
+
+    def _context(self, now_s: float) -> SchedContext:
+        return SchedContext(
+            max_batch=self.max_batch,
+            remaining_budget_j=self.remaining_budget_j,
+            cap_w=self.cap_w,
+            power_of_batch=self.power_of_batch,
+            client_energy_j=dict(self.client_energy_j),
+            now_s=now_s,
+        )
+
+    def next_wave(self, now_s: float = 0.0) -> list[Request] | None:
+        """Select the next wave, or None when the queue is empty / starved.
+
+        The policy orders the queue and bounds the batch; the scheduler
+        then walks that order admitting every request whose *re-priced*
+        predicted energy still fits the remaining budget.  Admission is
+        deliberately work-conserving: a request too expensive for the
+        current remainder is skipped (not a barrier), so cheaper requests
+        behind it keep the batch full — an expensive head-of-line request
+        waits until commitments resolve or is eventually rejected as
+        hopeless (predicted energy above the spent-adjusted budget alone),
+        an SLO decision surfaced in ``rejected`` rather than a silent
+        starve.
+        """
+        if not self.queue:
+            return None
+        ctx = self._context(now_s)
+        order = self.policy.order(self.queue, ctx)
+        limit = min(self.policy.batch_limit(self.queue, ctx), self.max_batch)
+        if limit < 1:
+            return None
+        chosen: list[Request] = []
+        predicted = 0.0
+        remaining = self.remaining_budget_j
+        for qi in order:
+            if len(chosen) >= limit:
+                break
+            req = self.queue[qi]
+            price = self.pricer.price_tokens(req.gen_len - req.done_tokens)
+            if predicted + price > remaining:
+                continue
+            req.predicted_j = price
+            chosen.append(req)
+            predicted += price
+        if not chosen:
+            # Nothing fits *right now*.  Only requests that cannot fit the
+            # budget even once every in-flight commitment resolves are
+            # hopeless and rejected; the rest stay queued — the caller can
+            # reconcile pending waves (freeing committed energy) and retry.
+            hard_remaining = self.budget_j - self.spent_j
+            for req in list(self.queue):
+                if self.pricer.price_tokens(req.gen_len - req.done_tokens) > hard_remaining:
+                    self.queue.remove(req)
+                    self.rejected.append(req)
+            return None
+        for req in chosen:
+            self.queue.remove(req)
+        wave = WaveRecord(
+            index=len(self.waves), rids=[r.rid for r in chosen], predicted_j=predicted
+        )
+        self.waves.append(wave)
+        self.committed_j += predicted
+        return chosen
+
+    # --------------------------------------------------------- completion
+    def complete_wave(
+        self,
+        wave_index: int,
+        tokens_per_request: int,
+        decoded_tokens: int | None = None,
+    ) -> None:
+        """Record the tokens a wave decoded.
+
+        Per-request credit is clamped at each request's remaining
+        ``gen_len`` (a short request padded into a long wave does not get
+        phantom tokens); ``decoded_tokens`` is what the hardware actually
+        ran — including padded batch slots — and defaults to
+        ``tokens_per_request × n_requests`` when no padding happened.
+        """
+        wave = self.waves[wave_index]
+        wave.request_tokens = []
+        for rid in wave.rids:
+            req = self._by_rid[rid]
+            d = min(tokens_per_request, max(req.gen_len - req.done_tokens, 0))
+            req.done_tokens += d
+            wave.request_tokens.append(d)
+            if req.done_tokens >= req.gen_len and not req.finished:
+                req.finished = True
+                self.finished.append(req)
+        wave.tokens = sum(wave.request_tokens)
+        wave.decoded_tokens = (
+            decoded_tokens
+            if decoded_tokens is not None
+            else tokens_per_request * len(wave.rids)
+        )
+
+    def _settle(self, wave: WaveRecord, energy_j: float, from_measurement: bool) -> None:
+        wave.measured_j = float(energy_j)
+        wave.released = not from_measurement
+        self.committed_j -= wave.predicted_j
+        self.spent_j += wave.measured_j
+        # split by per-request token share; the last share absorbs the float
+        # residue so the per-request sum is *exactly* the settled total
+        n = len(wave.rids)
+        shares = wave.request_tokens if sum(wave.request_tokens) else [1] * n
+        total_share = sum(shares)
+        handed = 0.0
+        for k, (rid, share) in enumerate(zip(wave.rids, shares)):
+            req = self._by_rid[rid]
+            d = wave.measured_j - handed if k == n - 1 else (
+                wave.measured_j * share / total_share
+            )
+            handed += d
+            req.measured_j += d
+            self.client_energy_j[req.client] = (
+                self.client_energy_j.get(req.client, 0.0) + d
+            )
+        if from_measurement and wave.decoded_tokens:
+            self.pricer.update(wave.decoded_tokens, wave.measured_j)
+
+    def reconcile(self, wave_index: int, measured_j: float) -> None:
+        """Land the attributed energy of one wave.
+
+        Splits by token share across the wave's requests (so per-request
+        totals sum exactly to the ledger total), releases the wave's
+        predicted commitment from the budget, charges the measured energy,
+        and feeds the pricer's correction loop.
+        """
+        wave = self.waves[wave_index]
+        if wave.measured_j is not None:
+            raise ValueError(f"wave {wave_index} already settled")
+        self._settle(wave, measured_j, from_measurement=True)
+
+    def release_wave(self, wave_index: int) -> None:
+        """Settle a wave whose energy could not be measured (e.g. the ring
+        evicted its span): charge its *predicted* energy so the budget
+        commitment is not leaked forever, without feeding the pricer."""
+        wave = self.waves[wave_index]
+        if wave.measured_j is not None:
+            raise ValueError(f"wave {wave_index} already settled")
+        self._settle(wave, wave.predicted_j, from_measurement=False)
+
+    # ------------------------------------------------------------ reports
+    def unreconciled(self) -> list[int]:
+        return [w.index for w in self.waves if w.measured_j is None]
+
+    def report_rows(self) -> list[dict]:
+        rows = []
+        for req in sorted(self._by_rid.values(), key=lambda r: r.rid):
+            rows.append(
+                {
+                    "rid": req.rid,
+                    "client": req.client,
+                    "tokens": req.done_tokens,
+                    "predicted_j": req.predicted_j,
+                    "measured_j": req.measured_j,
+                    "mj_per_token": req.measured_mj_per_token,
+                    "finished": req.finished,
+                }
+            )
+        return rows
+
+
+def format_report_rows(rows: Sequence[dict]) -> str:
+    """Render `report_rows` output as the per-request SLO accounting table."""
+    lines = ["  rid client    tokens  predicted J  measured J  mJ/token"]
+    for row in rows:
+        lines.append(
+            f"  {row['rid']:>3} {row['client']:<9} {row['tokens']:>5}  "
+            f"{row['predicted_j']:>11.4f} {row['measured_j']:>11.4f}  "
+            f"{row['mj_per_token']:>8.3f}"
+        )
+    return "\n".join(lines)

@@ -256,6 +256,30 @@ class FleetMonitor:
     def read_all(self) -> dict[str, "State"]:
         return {name: ps.read() for name, ps in self._sensors.items()}
 
+    def window_power_w(self, window_s: float | None = None, poll: bool = True) -> float:
+        """Fleet-summed trailing-window mean power — the governor's fast hook.
+
+        Unlike `snapshot()` this never materialises `FrameBlock` copies:
+        each device answers from its ring's maintained per-frame totals
+        (`FrameRing.tail_mean_watts`), so a control loop can poll it every
+        millisecond without competing with the 20 kHz receive path.
+        """
+        return sum(self.device_window_power_w(window_s, poll=poll).values())
+
+    def device_window_power_w(
+        self, window_s: float | None = None, poll: bool = True
+    ) -> dict[str, float]:
+        """Per-device trailing-window mean power (same fast path)."""
+        window_s = self.window_s if window_s is None else float(window_s)
+        out: dict[str, float] = {}
+        for name, ps in self._sensors.items():
+            if poll:
+                ps.poll()
+            out[name] = self._locked_ring_read(
+                ps, lambda: ps.ring.tail_mean_watts(window_s)
+            )
+        return out
+
     def snapshot(self, window_s: float | None = None) -> FleetSnapshot:
         """One queryable view of the whole fleet: per-device + aggregate."""
         window_s = self.window_s if window_s is None else float(window_s)

@@ -54,6 +54,9 @@ class FrameRing:
         self.volts = np.zeros((self.capacity, self.n_pairs))
         self.amps = np.zeros((self.capacity, self.n_pairs))
         self.watts = np.zeros((self.capacity, self.n_pairs))
+        # per-frame summed-pair watts, maintained on append so trailing-window
+        # power queries (the governor's 1 kHz poll) never copy frame blocks
+        self.wtot = np.zeros(self.capacity)
         self.head = 0  # total frames ever appended (monotonic)
 
     def __len__(self) -> int:
@@ -85,6 +88,7 @@ class FrameRing:
                 times_s[drop:], volts[drop:], amps[drop:], watts[drop:],
             )
             n = cap
+        wtot = watts.sum(axis=1)
         start = self.head % cap
         end = start + n
         if end <= cap:
@@ -93,16 +97,19 @@ class FrameRing:
             self.volts[sl] = volts
             self.amps[sl] = amps
             self.watts[sl] = watts
+            self.wtot[sl] = wtot
         else:
             k = cap - start
             self.times_s[start:] = times_s[:k]
             self.volts[start:] = volts[:k]
             self.amps[start:] = amps[:k]
             self.watts[start:] = watts[:k]
+            self.wtot[start:] = wtot[:k]
             self.times_s[: end - cap] = times_s[k:]
             self.volts[: end - cap] = volts[k:]
             self.amps[: end - cap] = amps[k:]
             self.watts[: end - cap] = watts[k:]
+            self.wtot[: end - cap] = wtot[k:]
         self.head += n
 
     # ------------------------------------------------------------------ read
@@ -158,6 +165,29 @@ class FrameRing:
         lo = base + self._search_time(t0_s)
         hi = base + self._search_time(t1_s)
         return self._block(lo, max(lo, hi))
+
+    def tail_mean_watts(self, window_s: float) -> float:
+        """Mean summed-pair power over the trailing ``window_s`` seconds.
+
+        The incremental hook the closed-loop governor polls every control
+        tick: two slice reductions over the maintained per-frame totals —
+        no FrameBlock copy, no per-frame Python work.  An empty ring reads
+        0; a window narrower than one frame reads the newest frame.
+        """
+        n = len(self)
+        if n == 0:
+            return 0.0
+        cap = self.capacity
+        lo = (self.head - n) + self._search_time(self.last_time_s - window_s)
+        m = self.head - lo
+        if m <= 0:
+            return float(self.wtot[(self.head - 1) % cap])
+        i0, i1 = lo % cap, self.head % cap
+        if i0 < i1:
+            total = float(self.wtot[i0:i1].sum())
+        else:
+            total = float(self.wtot[i0:].sum() + self.wtot[:i1].sum())
+        return total / m
 
     def tail_window(self, window_s: float) -> FrameBlock:
         """The trailing ``window_s`` seconds of frames."""

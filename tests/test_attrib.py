@@ -356,3 +356,117 @@ def test_tuner_attribution_strategy_tracks_exact_energy():
         assert a.joules == pytest.approx(e.joules, rel=0.15)
     # attribution agrees with the marker method on the winner
     assert attr.most_efficient().config == exact.most_efficient().config
+
+
+# ------------------------------------- segmentation regressions (edge cases)
+def _assert_contiguous(seg, n):
+    """Segments must tile [0, n) exactly: i0=0, i1=n, no gaps or overlaps."""
+    assert seg.segments[0].i0 == 0
+    assert seg.segments[-1].i1 == n
+    for a, b in zip(seg.segments[:-1], seg.segments[1:]):
+        assert a.i1 == b.i0
+
+
+def test_segment_block_at_ring_wraparound_pins_boundary_index():
+    """Segmenting a wrapped ring view must find the step edge at the exact
+    retained-block index, not at a physical-buffer offset."""
+    from repro.attrib import segment_block
+    from repro.stream import FrameRing
+
+    dt = 50e-6
+    ring = FrameRing(4000, 1)  # retains 0.2 s; we push 0.3 s through it
+    rng = np.random.default_rng(3)
+    step_t = 0.22  # lands inside the retained window, after the wrap
+    for k in range(6):  # 6 x 0.05 s appends
+        t = k * 0.05 + np.arange(1000) * dt
+        w = np.where(t < step_t, 80.0, 160.0) + rng.normal(0, 0.5, t.size)
+        w = w[:, None]
+        ring.append(t, np.full_like(w, 12.0), w / 12.0, w)
+    assert ring.head > ring.capacity  # wrapped for sure
+    block = ring.latest()
+    seg = segment_block(block)
+    _assert_contiguous(seg, len(block))
+    assert len(seg) == 2
+    expected_idx = int(np.searchsorted(block.times_s, step_t))
+    assert abs(seg.segments[0].i1 - expected_idx) <= 2  # pinned to the index
+    assert seg.segments[0].mean_w == pytest.approx(80.0, abs=1.0)
+    assert seg.segments[1].mean_w == pytest.approx(160.0, abs=1.0)
+
+
+def test_segment_all_flat_trace_is_single_full_span_segment():
+    dt = 50e-6
+    t = np.arange(4000) * dt
+    w = np.full(t.size, 123.0)  # exactly flat: zero noise floor
+    seg = segment_trace(t, w)
+    assert len(seg) == 1
+    assert seg.boundaries_s.size == 0
+    s = seg.segments[0]
+    assert (s.i0, s.i1) == (0, t.size)  # boundary indices pinned
+    assert s.mean_w == pytest.approx(123.0)
+    assert s.peak_w == pytest.approx(123.0)
+    assert s.energy_j == pytest.approx(123.0 * t[-1], rel=1e-6)
+
+
+def test_segment_degenerate_tiny_inputs():
+    # empty
+    seg0 = segment_trace(np.array([]), np.array([]))
+    assert len(seg0) == 0 and seg0.boundaries_s.size == 0
+    # single sample: one zero-length, zero-energy segment at that index
+    seg1 = segment_trace(np.array([1.0]), np.array([50.0]))
+    assert len(seg1) == 1
+    assert (seg1.segments[0].i0, seg1.segments[0].i1) == (0, 1)
+    assert seg1.segments[0].energy_j == 0.0
+    assert seg1.segments[0].duration_s == 0.0
+    # below the 4-sample floor: still a single contiguous segment
+    seg3 = segment_trace(np.array([0.0, 1e-3, 2e-3]), np.array([5.0, 99.0, 5.0]))
+    assert len(seg3) == 1
+    assert (seg3.segments[0].i0, seg3.segments[0].i1) == (0, 3)
+
+
+def test_segment_single_sample_spike_keeps_contiguous_cover():
+    """A one-sample spike (shorter than min_seg_s) must not fragment the
+    segmentation or break index contiguity."""
+    dt = 50e-6
+    t = np.arange(2000) * dt
+    w = np.full(t.size, 70.0)
+    w[900] = 400.0  # isolated single-sample spike
+    seg = segment_trace(t, w)
+    _assert_contiguous(seg, t.size)
+    # the spike is too short to stand as its own >= min_seg_s segment
+    assert all(len(s) >= 2 for s in seg.segments)
+    assert seg.total_energy_j == pytest.approx(np.trapezoid(w, t), rel=1e-3)
+
+
+def test_segment_cap_clipped_plateau_pins_edges():
+    """A ramp clipped flat at a power cap: edges at the exact clip indices."""
+    dt = 50e-6
+    n = 6000
+    t = np.arange(n) * dt
+    cap = 150.0
+    ramp = 60.0 + 220.0 * t / t[-1]  # would peak at 280 W uncapped
+    rng = np.random.default_rng(9)
+    w = np.minimum(ramp, cap) + rng.normal(0, 0.4, n)
+    seg = segment_trace(t, w)
+    _assert_contiguous(seg, n)
+    clip_idx = int(np.searchsorted(ramp, cap))
+    # one detected boundary lands on the clip onset (within smoothing slack)
+    idxs = [s.i0 for s in seg.segments[1:]]
+    assert min(abs(i - clip_idx) for i in idxs) <= 40  # 2 ms at 20 kHz
+    # the plateau segment itself is flat at the cap
+    plateau = seg.segments[-1]
+    assert plateau.mean_w == pytest.approx(cap, abs=1.0)
+    assert plateau.i1 == n
+    # the clipped region is NOT merged into the ramp: boundary strictly
+    # after the ramp start and well before the end
+    assert 0 < clip_idx < n
+
+
+def test_attribute_spans_entirely_outside_trace_are_skipped():
+    t = np.arange(1000) * 50e-6
+    w = np.full(t.size, 100.0)
+    led = attribute(t, w, [KernelSpan("past", -1.0, -0.5),
+                           KernelSpan("future", 10.0, 11.0),
+                           KernelSpan("ok", 0.0, 0.02)])
+    assert led.skipped_spans == 2
+    assert set(led.entries) == {"ok"}
+    assert led.entries["ok"].energy_j == pytest.approx(100.0 * 0.02, rel=5e-3)

@@ -1,0 +1,518 @@
+"""Tests for the closed-loop energy governor + energy-SLO scheduler."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.power import DEFAULT_LADDER, V5E, DvfsLadder, phases_for_step
+from repro.sched import (
+    EnergyPricer,
+    EnergySloScheduler,
+    GovernorConfig,
+    OperatingGrid,
+    PiController,
+    PowerCapGovernor,
+    Request,
+    SampledPowerReader,
+    SchedContext,
+    VirtualPlant,
+    compare_policies,
+    decode_cost_of_batch,
+    get_policy,
+    settle_time,
+    time_over_cap,
+)
+
+N_PARAMS = 40e6
+
+
+def make_grid(chunk=8, batches=(1, 2, 4, 8, 16, 32)):
+    return OperatingGrid(
+        decode_cost_of_batch(2.0 * N_PARAMS, 2.0 * N_PARAMS, tokens_per_slot_step=chunk),
+        n_layers=4,
+        batches=batches,
+        tokens_per_slot_step=chunk,
+    )
+
+
+# ------------------------------------------------------------------- ladder
+def test_dvfs_ladder_sorted_clamped_and_nearest():
+    lad = DvfsLadder(scales=(1.0, 0.5, 0.75))
+    assert lad.scales == (0.5, 0.75, 1.0)
+    assert lad.clamp(-3) == 0 and lad.clamp(99) == len(lad) - 1
+    assert lad.state(len(lad) + 5).scale == 1.0
+    assert lad.nearest(0.70) == 1
+    with pytest.raises(ValueError):
+        DvfsLadder(scales=())
+    with pytest.raises(ValueError):
+        DvfsLadder(scales=(0.0, 1.0))
+
+
+def test_dvfs_ladder_states_monotone_power_factor():
+    pf = [s.power_factor for s in DEFAULT_LADDER.states()]
+    assert all(b > a for a, b in zip(pf, pf[1:]))
+
+
+# --------------------------------------------------------------------- grid
+def test_grid_has_idle_floor_and_unbounded_top():
+    grid = make_grid()
+    assert grid.idle.batch == 0
+    assert grid.idle.watts == pytest.approx(V5E.p_static)
+    top = grid.best_under(math.inf)
+    assert top.tokens_per_s == max(p.tokens_per_s for p in grid.points)
+    assert grid.best_under(V5E.p_static) is grid.idle
+
+
+def test_grid_best_under_monotone_in_budget():
+    grid = make_grid()
+    budgets = np.linspace(V5E.p_static, grid.max_watts + 10.0, 40)
+    last_tps = -1.0
+    for b in budgets:
+        p = grid.best_under(float(b))
+        assert p.watts <= b + 1e-9
+        assert p.tokens_per_s >= last_tps - 1e-9
+        last_tps = p.tokens_per_s
+
+
+def test_grid_respects_max_batch_and_demand_zero():
+    grid = make_grid()
+    p = grid.best_under(math.inf, max_batch=4)
+    assert 0 < p.batch <= 4
+    assert grid.best_under(math.inf, max_batch=0) is grid.idle
+
+
+def test_grid_next_above_and_below_walk_the_frontier():
+    grid = make_grid()
+    # climb from idle: strictly increasing watts AND tokens/s, ends at top
+    pt = grid.idle
+    seen = 0
+    while True:
+        up = grid.next_above(pt)
+        if up is None:
+            break
+        assert up.watts > pt.watts and up.tokens_per_s > pt.tokens_per_s
+        pt, seen = up, seen + 1
+    assert pt.tokens_per_s == grid.best_under(math.inf).tokens_per_s
+    assert seen >= 3
+    # one rung down from the top is strictly cheaper
+    down = grid.next_below(pt)
+    assert down is not None and down.watts < pt.watts
+    assert grid.next_below(grid.idle) is None
+
+
+def test_grid_power_of_batch_increases_with_batch():
+    grid = make_grid()
+    assert grid.power_of_batch(32) > grid.power_of_batch(1) > V5E.p_static
+
+
+# ----------------------------------------------------------------------- pi
+def test_pi_integrator_clamps_at_bounds():
+    pi = PiController(kp=1.0, ki=10.0, i_lo=-5.0, i_hi=5.0)
+    for _ in range(1000):
+        pi.update(100.0, 0.01)
+    assert pi.integral == pytest.approx(5.0)
+    for _ in range(1000):
+        pi.update(-100.0, 0.01)
+    assert pi.integral == pytest.approx(-5.0)
+
+
+def test_pi_conditional_antiwindup_freezes_into_saturation():
+    pi = PiController(kp=0.0, ki=10.0, i_lo=-50.0, i_hi=50.0)
+    pi.update(1.0, 0.1)
+    frozen = pi.integral
+    # pinned at full throttle and still asking for more: freeze
+    pi.update(1.0, 0.1, saturated_hi=True)
+    assert pi.integral == frozen
+    # error reversing direction integrates even while saturated
+    pi.update(-1.0, 0.1, saturated_hi=True)
+    assert pi.integral < frozen
+
+
+def test_sampled_reader_holds_between_updates():
+    calls = []
+
+    def read(now):
+        calls.append(now)
+        return float(len(calls))
+
+    r = SampledPowerReader(read, rate_hz=10.0)
+    assert r(0.0) == 1.0
+    assert r(0.05) == 1.0  # held: next refresh not due until 0.1
+    assert r(0.099) == 1.0
+    assert r(0.1) == 2.0
+    assert len(calls) == 2
+    with pytest.raises(ValueError):
+        SampledPowerReader(read, rate_hz=0.0)
+
+
+# ------------------------------------------------------------------ metrics
+def test_time_over_cap_and_settle_metrics_on_synthetic_log():
+    log = [(0.0, 100.0), (1.0, 250.0), (1.5, 180.0), (3.0, 230.0), (3.5, 190.0)]
+    cap = 200.0
+    # over cap on [1.0, 1.5) and [3.0, 3.5) out of [0, 4): 1.0 / 4.0
+    assert time_over_cap(log, cap, 0.0, 4.0, tol=0.0) == pytest.approx(0.25)
+    # with a 30% band nothing is over
+    assert time_over_cap(log, cap, 0.0, 4.0, tol=0.30) == 0.0
+    # last excursion after the step at t=1 ends at 3.5
+    assert settle_time(log, cap, 1.0, 4.0, tol=0.0) == pytest.approx(2.5)
+    # never over after 3.6
+    assert settle_time(log, cap, 3.6, 4.0, tol=0.0) == 0.0
+    # still over at run end counts as the full remainder
+    assert settle_time(log[:4], cap, 3.0, 4.0, tol=0.0) == pytest.approx(1.0)
+
+
+# ------------------------------------------------------- governor, unit-ish
+def _run_loop(grid, cap_w, rate_hz=None, duration=0.4, t_step=0.12, seed=1,
+              biases=(1.12, 0.94), calibrate_samples=4000):
+    plant = VirtualPlant(
+        grid, n_devices=len(biases), biases=list(biases), seed=seed,
+        calibrate_samples=calibrate_samples,
+    )
+    cfg = GovernorConfig(cap_w=cap_w, kp=0.15, ki=80.0)
+    reader = None
+    if rate_hz is not None:
+        reader = SampledPowerReader(
+            lambda now: plant.fleet.window_power_w(cfg.window_s), rate_hz
+        )
+    gov = PowerCapGovernor(plant, cfg, read_power=reader)
+    gov.run(duration, demand_of_t=lambda t: 0 if t < t_step else 32)
+    toc = time_over_cap(plant.log, cap_w, 0.0, duration, tol=0.02)
+    settle = settle_time(plant.log, cap_w, t_step, duration, tol=0.02)
+    return plant, gov, toc, settle
+
+
+def test_governor_holds_cap_after_load_step():
+    grid = make_grid()
+    cap = 0.72 * 2 * grid.max_watts
+    plant, gov, toc, settle = _run_loop(grid, cap)
+    try:
+        assert toc < 0.05, f"time over cap {toc:.1%}"
+        assert settle < 0.100, f"settle {settle * 1e3:.0f} ms"
+        # converged somewhere useful: above idle, at/below the band ceiling
+        assert 2 * V5E.p_static < plant.true_fleet_w <= cap * 1.02
+        assert plant.point.batch > 0
+    finally:
+        plant.close()
+
+
+def test_governor_does_not_oscillate_at_steady_state():
+    grid = make_grid()
+    cap = 0.72 * 2 * grid.max_watts
+    plant, gov, toc, settle = _run_loop(grid, cap)
+    try:
+        # no actuation churn after the loop settles (+ one dwell of slack)
+        t_quiet = 0.12 + settle + 2 * gov.cfg.min_dwell_s
+        late_switches = [s for s in gov.history if s.time_s > t_quiet and s.switched]
+        assert len(late_switches) <= 1, [s.time_s for s in late_switches]
+    finally:
+        plant.close()
+
+
+def test_governor_parks_at_idle_when_demand_drops():
+    grid = make_grid()
+    cap = 0.72 * 2 * grid.max_watts
+    plant = VirtualPlant(grid, n_devices=2, biases=[1.0, 1.0], seed=3,
+                         calibrate_samples=0)
+    gov = PowerCapGovernor(plant, GovernorConfig(cap_w=cap, kp=0.15, ki=80.0))
+    try:
+        gov.run(0.35, demand_of_t=lambda t: 32 if t < 0.2 else 0)
+        assert plant.point is grid.idle
+        assert plant.true_fleet_w == pytest.approx(2 * V5E.p_static)
+    finally:
+        plant.close()
+
+
+def test_governor_builtin_rate_telemetry_violates_cap():
+    grid = make_grid()
+    cap = 0.72 * 2 * grid.max_watts
+    plant, gov, toc, settle = _run_loop(grid, cap, rate_hz=10.0)
+    try:
+        # the same controller on 10 Hz sample-and-hold demonstrably fails
+        assert toc > 0.05 or settle > 0.100, (toc, settle)
+    finally:
+        plant.close()
+
+
+def test_governor_faster_telemetry_is_never_worse():
+    grid = make_grid()
+    cap = 0.72 * 2 * grid.max_watts
+    p20, _, toc20, settle20 = _run_loop(grid, cap)
+    p10, _, toc10, settle10 = _run_loop(grid, cap, rate_hz=10.0)
+    p20.close()
+    p10.close()
+    assert toc20 <= toc10 + 1e-9
+    assert settle20 <= settle10 + 1e-9
+
+
+def test_virtual_plant_bias_and_log_bookkeeping():
+    grid = make_grid()
+    plant = VirtualPlant(grid, n_devices=2, biases=[1.2, 0.8], seed=0,
+                         calibrate_samples=0)
+    try:
+        top = grid.best_under(math.inf)
+        plant.apply(top, 1.0)
+        w = plant.true_device_watts(top)
+        dyn = top.watts - V5E.p_static
+        assert w[0] == pytest.approx(V5E.p_static + 1.2 * dyn)
+        assert w[1] == pytest.approx(V5E.p_static + 0.8 * dyn)
+        assert plant.log[-1] == (1.0, pytest.approx(sum(w)))
+        with pytest.raises(ValueError):
+            VirtualPlant(grid, n_devices=3, biases=[1.0], calibrate_samples=0)
+    finally:
+        plant.close()
+
+
+# ------------------------------------------------------------------- pricer
+def test_pricer_from_phases_and_correction_converges():
+    phases = phases_for_step(
+        decode_cost_of_batch(2.0 * N_PARAMS, 2.0 * N_PARAMS)(4), n_layers=4
+    )
+    pricer = EnergyPricer.from_phases(phases, V5E, tokens_per_step=4)
+    step_j = sum(p.power(V5E) * p.duration_s for p in phases)
+    assert pricer.price_tokens(4) == pytest.approx(step_j)
+    # reality runs 30% hot: the EWMA walks the correction toward 1.3
+    for _ in range(40):
+        pricer.update(tokens=4, measured_j=1.3 * step_j)
+    assert pricer.correction == pytest.approx(1.3, rel=1e-3)
+    assert pricer.price_tokens(4) == pytest.approx(1.3 * step_j, rel=1e-3)
+
+
+def test_pricer_from_ledger_and_signatures():
+    from repro.attrib import EnergyLedger, KernelSpan, build_library
+
+    ledger = EnergyLedger()
+    ledger.add_occurrence("decode", energy_j=2.0, duration_s=1.0, peak_w=3.0)
+    p = EnergyPricer.from_ledger(ledger, tokens=100)
+    assert p.j_per_token == pytest.approx(0.02)
+
+    # per-kernel signatures: two kernels whose mean_w x duration sum to the
+    # step energy
+    t = np.linspace(0.0, 1.0, 2001)
+    w = np.where(t < 0.4, 100.0, 50.0)
+    lib = build_library(t, w, [KernelSpan("a", 0.0, 0.4), KernelSpan("b", 0.4, 1.0)])
+    p2 = EnergyPricer.from_signatures(lib, tokens_per_step=10)
+    expected = (100.0 * 0.4 + 50.0 * 0.6) / 10.0
+    assert p2.j_per_token == pytest.approx(expected, rel=0.02)
+    with pytest.raises(ValueError):
+        EnergyPricer.from_ledger(ledger, tokens=0)
+
+
+# ---------------------------------------------------------------- scheduler
+def _fill(sched, n=8, gen=10, clients=2):
+    for rid in range(n):
+        sched.submit(Request(rid=rid, client=f"c{rid % clients}", gen_len=gen))
+
+
+def test_scheduler_accounting_sums_to_wave_ledgers():
+    sched = EnergySloScheduler(
+        EnergyPricer(j_per_token=0.5), get_policy("throughput-max"), max_batch=3
+    )
+    _fill(sched, n=8, gen=10)
+    measured = [7.31, 6.02, 5.555]
+    k = 0
+    while True:
+        wave = sched.next_wave()
+        if wave is None:
+            break
+        sched.complete_wave(sched.waves[-1].index, 10)
+        sched.reconcile(sched.waves[-1].index, measured[k])
+        k += 1
+    assert k == 3
+    rows = sched.report_rows()
+    # SLO invariant: per-request measured J sums exactly to the ledger totals
+    assert sum(r["measured_j"] for r in rows) == pytest.approx(sum(measured), abs=1e-12)
+    assert sum(sched.client_energy_j.values()) == pytest.approx(sum(measured), abs=1e-12)
+    per_wave = [sum(r["measured_j"] for r in rows if r["rid"] in w.rids)
+                for w in sched.waves]
+    for got, want in zip(per_wave, measured):
+        assert got == pytest.approx(want, abs=1e-12)
+    assert all(r["finished"] for r in rows)
+    assert sched.unreconciled() == []
+
+
+def test_scheduler_budget_admission_and_rejection():
+    # budget covers exactly 4 of 8 identical requests
+    sched = EnergySloScheduler(
+        EnergyPricer(j_per_token=1.0), get_policy("throughput-max"),
+        max_batch=2, budget_j=4.0 * 10.0,
+    )
+    _fill(sched, n=8, gen=10)
+    served = []
+    while True:
+        wave = sched.next_wave()
+        if wave is None:
+            break
+        served.extend(r.rid for r in wave)
+        sched.complete_wave(sched.waves[-1].index, 10)
+        sched.reconcile(sched.waves[-1].index, 10.0 * len(wave))
+    assert len(served) == 4
+    assert len(sched.rejected) == 4
+    assert sched.spent_j == pytest.approx(40.0)
+    assert sched.remaining_budget_j == pytest.approx(0.0)
+
+
+def test_scheduler_reconcile_lags_and_double_reconcile_raises():
+    sched = EnergySloScheduler(
+        EnergyPricer(j_per_token=0.1), get_policy("throughput-max"), max_batch=4
+    )
+    _fill(sched, n=8, gen=5)
+    w0 = sched.next_wave()
+    w1 = sched.next_wave()
+    assert w0 is not None and w1 is not None
+    sched.complete_wave(0, 5)
+    sched.complete_wave(1, 5)
+    assert sched.unreconciled() == [0, 1]
+    sched.reconcile(1, 2.0)  # out of order is fine
+    sched.reconcile(0, 3.0)
+    with pytest.raises(ValueError):
+        sched.reconcile(0, 1.0)
+    assert sched.spent_j == pytest.approx(5.0)
+
+
+def test_scheduler_reconcile_feeds_pricer_correction():
+    pricer = EnergyPricer(j_per_token=1.0, alpha=1.0)  # no smoothing
+    sched = EnergySloScheduler(pricer, get_policy("throughput-max"), max_batch=4)
+    _fill(sched, n=4, gen=10)
+    sched.next_wave()
+    sched.complete_wave(0, 10)
+    sched.reconcile(0, measured_j=60.0)  # 40 tokens predicted at 40 J
+    assert pricer.correction == pytest.approx(1.5)
+    # the *next* admission is re-priced with the correction
+    sched.submit(Request(rid=99, gen_len=10))
+    assert sched.queue[-1].predicted_j == pytest.approx(15.0)
+
+
+# ----------------------------------------------------------------- policies
+def test_policy_registry_and_unknown_name():
+    for name in ("throughput-max", "cap-strict", "energy-fair"):
+        assert get_policy(name).name == name
+    with pytest.raises(ValueError):
+        get_policy("nope")
+
+
+def test_cap_strict_limits_batch_to_cap():
+    pol = get_policy("cap-strict")
+    ctx = SchedContext(
+        max_batch=8, remaining_budget_j=math.inf, cap_w=150.0,
+        power_of_batch=lambda b: 80.0 + 15.0 * b,
+    )
+    # 80 + 15b <= 150 -> b <= 4
+    assert pol.batch_limit([], ctx) == 4
+    # cap below batch-1 power still admits one slot (progress guarantee)
+    ctx2 = SchedContext(
+        max_batch=8, remaining_budget_j=math.inf, cap_w=50.0,
+        power_of_batch=lambda b: 80.0 + 15.0 * b,
+    )
+    assert pol.batch_limit([], ctx2) == 1
+    # no power model: no limiting
+    ctx3 = SchedContext(max_batch=8, remaining_budget_j=math.inf)
+    assert pol.batch_limit([], ctx3) == 8
+
+
+def test_energy_fair_orders_starved_client_first():
+    pol = get_policy("energy-fair")
+    queue = [
+        Request(rid=0, client="hog", gen_len=1),
+        Request(rid=1, client="hog", gen_len=1),
+        Request(rid=2, client="starved", gen_len=1),
+    ]
+    ctx = SchedContext(
+        max_batch=2, remaining_budget_j=math.inf,
+        client_energy_j={"hog": 100.0, "starved": 1.0},
+    )
+    order = pol.order(queue, ctx)
+    assert order[0] == 2  # the starved client's request leads
+    assert sorted(order) == [0, 1, 2]
+
+
+def test_policy_ranking_stable_across_seeds():
+    cap = 150.0
+    spreads_tm, spreads_ef = [], []
+    for seed in (0, 1, 2):
+        scores = compare_policies(
+            n_requests=48, n_clients=3, max_batch=8, cap_w=cap,
+            budget_frac=0.5, seed=seed,
+        )
+        tm, cs, ef = (
+            scores["throughput-max"], scores["cap-strict"], scores["energy-fair"]
+        )
+        # structural, per-seed: batch-limited cap-strict never out-serves
+        assert tm.tokens_per_s >= cs.tokens_per_s - 1e-9
+        # cap-strict never schedules a wave modelled over the cap
+        assert cs.peak_wave_w <= cap + 1e-9
+        assert tm.peak_wave_w > cap  # the baseline does
+        assert all(s.waves > 0 for s in (tm, cs, ef))
+        spreads_tm.append(tm.fairness_spread_j)
+        spreads_ef.append(ef.fairness_spread_j)
+    # fairness is statistical, not per-draw (a FIFO arrival order can be
+    # accidentally balanced): over the seed ensemble, energy-fair spreads
+    # the scarce budget across clients far more evenly than FIFO
+    assert sum(spreads_ef) < 0.6 * sum(spreads_tm), (spreads_ef, spreads_tm)
+
+
+def test_complete_wave_clamps_credit_at_gen_len():
+    sched = EnergySloScheduler(
+        EnergyPricer(j_per_token=1.0), get_policy("throughput-max"), max_batch=2
+    )
+    sched.submit(Request(rid=0, client="a", gen_len=4))
+    sched.submit(Request(rid=1, client="b", gen_len=16))
+    wave = sched.next_wave()
+    assert len(wave) == 2
+    sched.complete_wave(0, 16)  # ragged: decoded to the longest request
+    w = sched.waves[0]
+    assert w.request_tokens == [4, 16]  # short request NOT over-credited
+    assert w.tokens == 20
+    assert w.decoded_tokens == 32  # 2 slots x 16 steps actually ran
+    sched.reconcile(0, 10.0)
+    rows = {r["rid"]: r for r in sched.report_rows()}
+    assert rows[0]["tokens"] == 4 and rows[1]["tokens"] == 16
+    # energy split follows the clamped token shares, summing exactly
+    assert rows[0]["measured_j"] == pytest.approx(10.0 * 4 / 20)
+    assert rows[1]["measured_j"] == pytest.approx(10.0 * 16 / 20)
+    # pricer ratio uses the decoded (padded) tokens: 10 J / 32 tokens
+    assert sched.pricer.correction < 1.0
+
+
+def test_release_wave_settles_commitment_without_pricer_update():
+    pricer = EnergyPricer(j_per_token=1.0, alpha=1.0)
+    sched = EnergySloScheduler(
+        pricer, get_policy("throughput-max"), max_batch=2, budget_j=100.0
+    )
+    _fill(sched, n=2, gen=10)
+    sched.next_wave()
+    sched.complete_wave(0, 10)
+    assert sched.committed_j == pytest.approx(20.0)
+    sched.release_wave(0)  # e.g. ring evicted the span: unmeasurable
+    assert sched.committed_j == pytest.approx(0.0)
+    assert sched.spent_j == pytest.approx(20.0)  # charged at prediction
+    assert sched.waves[0].released
+    assert pricer.n_updates == 0  # a guess must not train the pricer
+    assert sum(r.measured_j for r in sched.finished) == pytest.approx(20.0)
+    with pytest.raises(ValueError):
+        sched.release_wave(0)
+
+
+def test_next_wave_keeps_queue_when_blocked_by_commitments():
+    # budget fits both requests, but only one wave can be in flight at once
+    sched = EnergySloScheduler(
+        EnergyPricer(j_per_token=1.0), get_policy("throughput-max"),
+        max_batch=1, budget_j=15.0,
+    )
+    _fill(sched, n=2, gen=10, clients=1)
+    w0 = sched.next_wave()
+    assert w0 is not None
+    # in-flight commitment (10 J) blocks the second request (10 J > 5 left)
+    assert sched.next_wave() is None
+    assert len(sched.queue) == 1  # NOT rejected: it fits once wave 0 settles
+    assert sched.rejected == []
+    sched.complete_wave(0, 10)
+    sched.reconcile(0, 4.0)  # ran cheaper than predicted
+    w1 = sched.next_wave()  # commitment released: admissible now
+    assert w1 is not None and w1[0].rid == 1
+    # truly hopeless requests (over the spent-adjusted budget alone) DO go
+    sched.complete_wave(1, 10)
+    sched.reconcile(1, 4.0)  # spent 8 of 15; correction EWMA is now < 1
+    hopeless_gen = int(10.0 / sched.pricer.price_tokens(1)) + 1
+    sched.submit(Request(rid=9, client="c0", gen_len=hopeless_gen))
+    assert sched.next_wave() is None
+    assert [r.rid for r in sched.rejected] == [9]
