@@ -19,11 +19,17 @@ the governor's own 2 % hysteresis.  Exits nonzero when the 20 kHz loop
 misses its targets or the 10 Hz loop *stops failing* (both mean the
 model drifted), so CI runs ``--smoke`` as a regression gate.
 
-    PYTHONPATH=src python -m benchmarks.governor_cap [--smoke]
+``--chaos`` runs the conformance smoke instead: one device's transport
+disconnects and reconnects mid-run (`repro.faultlab`).  Gates: the fleet
+cap holds through the cycle (time-over-cap < 5 % on quorum-rescaled
+telemetry) and the fleet is healthy again within 200 ms of reconnect.
+
+    PYTHONPATH=src python -m benchmarks.governor_cap [--smoke] [--chaos]
 """
 from __future__ import annotations
 
 import argparse
+import math
 import sys
 
 import numpy as np
@@ -144,9 +150,91 @@ def run(duration_s: float, seed: int, n_devices: int) -> int:
     return 0
 
 
+CHAOS_TOC_LIMIT = 0.05  # max fraction of time over cap through the cycle
+CHAOS_RECOVERY_LIMIT_S = 0.200  # max time to reacquire after reconnect
+
+
+def run_chaos(duration_s: float, seed: int, n_devices: int) -> int:
+    """Conformance smoke: disconnect→reconnect one device mid-run.
+
+    The governor runs on quorum-rescaled fleet telemetry
+    (`FleetMonitor.fleet_power`); losing one transport must neither blow
+    the cap (the survivors' rescaled estimate keeps the loop closed) nor
+    stay degraded after the link returns.
+    """
+    from repro.faultlab import Disconnect, Scenario, inject
+
+    grid = build_grid()
+    cap_w = 0.72 * n_devices * grid.max_watts
+    t_dc = 0.4 * duration_s
+    t_rc = 0.6 * duration_s
+    plant = VirtualPlant(grid, n_devices=n_devices, seed=seed)
+    cfg = GovernorConfig(cap_w=cap_w, kp=0.15, ki=80.0)
+    victim = plant.fleet.names[0]
+    inject(
+        plant.fleet,
+        Scenario(faults=(Disconnect(t_dc, t_rc, devices=(victim,)),), seed=seed),
+    )
+    gov = PowerCapGovernor(plant, cfg)
+    print(f"chaos: {n_devices} devices, cap {cap_w:.0f} W, {victim} "
+          f"disconnected {t_dc * 1e3:.0f}-{t_rc * 1e3:.0f} ms of "
+          f"{duration_s * 1e3:.0f} ms")
+
+    t = 0.0
+    t_recovered = None
+    degraded_ticks = 0
+    while t < duration_s - 1e-12:
+        plant.set_demand(MAX_BATCH)
+        gov.step(t)
+        health = plant.fleet.device_health()
+        if not health[victim].healthy and t >= t_dc:
+            degraded_ticks += 1
+            t_recovered = None
+        elif t >= t_rc and t_recovered is None and health[victim].healthy:
+            t_recovered = t
+        plant.advance(cfg.dt_s)
+        t += cfg.dt_s
+
+    toc = time_over_cap(plant.log, cap_w, 0.0, duration_s, tol=BAND_TOL)
+    recovery = (t_recovered - t_rc) if t_recovered is not None else math.inf
+    stale_ticks = gov.n_stale_ticks
+    plant.close()
+
+    print(f"== chaos: time-over-cap {toc * 100.0:.1f}%  "
+          f"recovery {recovery * 1e3:.1f} ms  degraded ticks {degraded_ticks}  "
+          f"stale ticks {stale_ticks}")
+    emit("governor_chaos_time_over_cap_pct", toc * 100.0,
+         f"1-device disconnect, cap {cap_w:.0f} W")
+    emit("governor_chaos_recovery_ms", recovery * 1e3, "after reconnect")
+
+    failures: list[str] = []
+    if toc > CHAOS_TOC_LIMIT:
+        failures.append(
+            f"time-over-cap {toc:.1%} > {CHAOS_TOC_LIMIT:.0%} through the "
+            "disconnect cycle")
+    if recovery > CHAOS_RECOVERY_LIMIT_S:
+        failures.append(
+            f"recovery {recovery * 1e3:.0f} ms > "
+            f"{CHAOS_RECOVERY_LIMIT_S * 1e3:.0f} ms after reconnect")
+    if degraded_ticks == 0:
+        failures.append(
+            "the disconnect was never visible in device health — the chaos "
+            "experiment no longer degrades anything")
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}")
+        return 1
+    print(f"OK: cap held through disconnect→reconnect (over-cap {toc:.1%} < "
+          f"{CHAOS_TOC_LIMIT:.0%}), fleet reacquired in "
+          f"{recovery * 1e3:.0f} ms < {CHAOS_RECOVERY_LIMIT_S * 1e3:.0f} ms")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    ap.add_argument("--chaos", action="store_true",
+                    help="disconnect/reconnect conformance smoke")
     ap.add_argument("--duration", type=float, default=None,
                     help="simulated seconds per loop")
     ap.add_argument("--devices", type=int, default=None)
@@ -156,6 +244,8 @@ def main(argv=None) -> int:
         0.6 if args.smoke else 2.0)
     devices = args.devices if args.devices is not None else (
         2 if args.smoke else 4)
+    if args.chaos:
+        return run_chaos(duration, args.seed, devices)
     return run(duration, args.seed, devices)
 
 

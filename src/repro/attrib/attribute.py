@@ -56,6 +56,10 @@ class LedgerEntry:
     energy_j: float = 0.0
     duration_s: float = 0.0
     peak_w: float = 0.0
+    #: span time actually backed by samples (gaps in the trace excluded);
+    #: ``energy_j`` is extrapolated across gaps, and ``coverage_frac``
+    #: is the explicit uncertainty of that extrapolation
+    covered_s: float = 0.0
 
     @property
     def avg_w(self) -> float:
@@ -64,6 +68,15 @@ class LedgerEntry:
     @property
     def j_per_occurrence(self) -> float:
         return self.energy_j / self.count if self.count else 0.0
+
+    @property
+    def coverage_frac(self) -> float:
+        """Fraction of the attributed time that samples actually covered."""
+        return (
+            min(self.covered_s / self.duration_s, 1.0)
+            if self.duration_s > 0
+            else 1.0
+        )
 
 
 @dataclass
@@ -90,14 +103,27 @@ class EnergyLedger:
         """Entries sorted by energy, biggest consumer first."""
         return sorted(self.entries.values(), key=lambda e: -e.energy_j)
 
+    @property
+    def coverage_frac(self) -> float:
+        """Sample coverage over all attributed time (1.0 = gap-free)."""
+        dur = sum(e.duration_s for e in self.entries.values())
+        cov = sum(e.covered_s for e in self.entries.values())
+        return min(cov / dur, 1.0) if dur > 0 else 1.0
+
     def add_occurrence(
-        self, name: str, energy_j: float, duration_s: float, peak_w: float
+        self,
+        name: str,
+        energy_j: float,
+        duration_s: float,
+        peak_w: float,
+        covered_s: float | None = None,
     ) -> None:
         e = self.entries.setdefault(name, LedgerEntry(name))
         e.count += 1
         e.energy_j += energy_j
         e.duration_s += duration_s
         e.peak_w = max(e.peak_w, peak_w)
+        e.covered_s += duration_s if covered_s is None else covered_s
 
     def absorb(self, other: "EnergyLedger") -> "EnergyLedger":
         """Merge another ledger in place (multi-device / multi-window)."""
@@ -108,6 +134,7 @@ class EnergyLedger:
             mine.energy_j += e.energy_j
             mine.duration_s += e.duration_s
             mine.peak_w = max(mine.peak_w, e.peak_w)
+            mine.covered_s += e.covered_s
         self.trace_energy_j += other.trace_energy_j
         self.skipped_spans += other.skipped_spans
         if other.entries or other.trace_energy_j:
@@ -194,6 +221,7 @@ def attribute(
     watts: np.ndarray,
     spans: Sequence[KernelSpan],
     min_coverage: float = 0.0,
+    gap_factor: float = 3.0,
 ) -> EnergyLedger:
     """Integrate a 1-D power series over each span; aggregate by name.
 
@@ -202,10 +230,16 @@ def attribute(
     Span edges are quantised to sample boundaries (≤ one 50 µs frame of
     slack at 20 kHz).
 
-    ``min_coverage`` guards against rings that evicted part of a span:
-    spans whose retained-sample count is below that fraction of the
-    expected count are dropped and tallied in ``ledger.skipped_spans``
-    (silent undercounting is how marker arithmetic used to lie).
+    Gap-aware: inter-sample steps longer than ``gap_factor`` × the median
+    frame interval are *delivery gaps* (dropouts, disconnects), not data.
+    Energy is integrated over the covered segments only and extrapolated
+    across the gaps by ``1 / coverage_frac``, with the coverage recorded
+    per entry — a gap is surfaced as uncertainty, never silently
+    under-counted as zero watts nor bridged as fake samples.
+
+    ``min_coverage`` guards against spans too hollow to extrapolate
+    (ring evicted the head, the gap swallowed the whole span): those are
+    dropped and tallied in ``ledger.skipped_spans``.
     """
     t = np.asarray(times_s, dtype=np.float64)
     w = np.asarray(watts, dtype=np.float64)
@@ -214,22 +248,40 @@ def attribute(
         ledger.skipped_spans = len(spans)
         return ledger
     cumE = cumulative_energy(t, w)
-    dt_est = float(np.median(np.diff(t)))
+    dts = np.diff(t)
+    dt_est = float(np.median(dts))
+    gap_thresh = gap_factor * dt_est
+    bad = dts > gap_thresh
+    # segment-level prefixes: energy and gap time over covered steps only
+    seg_e = 0.5 * (w[1:] + w[:-1]) * dts
+    cum_e_cov = np.concatenate([[0.0], np.cumsum(np.where(bad, 0.0, seg_e))])
+    cum_gap = np.concatenate([[0.0], np.cumsum(np.where(bad, dts, 0.0))])
     lo = np.searchsorted(t, [s.t0_s for s in spans], side="left")
     hi = np.searchsorted(t, [s.t1_s for s in spans], side="left")
     ledger.trace_energy_j = float(cumE[-1])
     ledger.t0_s, ledger.t1_s = float(t[0]), float(t[-1])
     for span, a, b in zip(spans, lo, hi):
         n = int(b - a)
-        expected = span.duration_s / dt_est if dt_est > 0 else 0.0
-        if n < 2 or (expected > 0 and n / expected < min_coverage):
+        dur = span.duration_s
+        if n < 2 or dur <= 0:
             ledger.skipped_spans += 1
             continue
+        # uncovered time: interior gaps plus edge gaps beyond one frame
+        # (edge slack of ≤ dt_est is quantisation, not a gap)
+        gap_s = float(cum_gap[b - 1] - cum_gap[a])
+        gap_s += max(float(t[a]) - span.t0_s - dt_est, 0.0)
+        gap_s += max(span.t1_s - float(t[b - 1]) - dt_est, 0.0)
+        coverage = min(max(1.0 - gap_s / dur, 0.0), 1.0)
+        if coverage <= 0.0 or coverage < min_coverage:
+            ledger.skipped_spans += 1
+            continue
+        e_cov = float(cum_e_cov[b - 1] - cum_e_cov[a])
         ledger.add_occurrence(
             span.name,
-            energy_j=float(cumE[b - 1] - cumE[a]),
-            duration_s=span.duration_s,
+            energy_j=e_cov / coverage,
+            duration_s=dur,
             peak_w=float(w[a:b].max()),
+            covered_s=coverage * dur,
         )
     return ledger
 
@@ -239,10 +291,13 @@ def attribute_block(
     spans: Sequence[KernelSpan],
     pair: int | None = None,
     min_coverage: float = 0.0,
+    gap_factor: float = 3.0,
 ) -> EnergyLedger:
     """`attribute` over a `FrameRing` view (pair=None sums across pairs)."""
     w = block.total_watts if pair is None else block.watts[:, pair]
-    return attribute(block.times_s, w, spans, min_coverage=min_coverage)
+    return attribute(
+        block.times_s, w, spans, min_coverage=min_coverage, gap_factor=gap_factor
+    )
 
 
 def refine_spans(

@@ -108,6 +108,8 @@ class PowerSensor:
         self._dump_owns = False
         self._dump_every = 1
         self._frame_count = 0
+        self._dropped_bytes = 0  # resync-discarded garbage bytes
+        self._dropped_packets = 0  # decoded packets discarded as malformed
         self._device_time_us: float = 0.0
         self._last_ts10: int | None = None
         self._energy = np.zeros(MAX_PAIRS)
@@ -118,6 +120,7 @@ class PowerSensor:
         self._n_samples = 0
         self._thread: threading.Thread | None = None
         self._thread_stop = threading.Event()
+        self._thread_error: BaseException | None = None
         self.ring = FrameRing(ring_capacity, MAX_PAIRS)
 
         # ---- connect handshake: version + config download ----
@@ -236,9 +239,58 @@ class PowerSensor:
             buf = self._residual + self.device.read()
             ids, vals, marks, consumed = protocol.decode_packets(buf)
             self._residual = buf[consumed:]
+            # bytes consumed without yielding packets were resync discards:
+            # count them instead of silently swallowing the corruption
+            junk = consumed - 2 * int(ids.size)
+            if junk > 0:
+                self._dropped_bytes += junk
             if ids.size == 0:
                 return 0
-            return self._process(ids, vals, marks)
+            # A batch may end mid-frame (tiny transport reads split packets
+            # across polls).  Data packets stranded *before* the next poll's
+            # first timestamp used to be discarded; instead, hold the
+            # trailing incomplete frame back (re-encoded into the residual)
+            # so the next poll completes it.  Full-frame polls — the steady
+            # state — take the `tail >= expected` branch and pay nothing.
+            is_ts = protocol.is_timestamp(ids, marks)
+            ts_pos = np.flatnonzero(is_ts)
+            if ts_pos.size:
+                last_ts = int(ts_pos[-1])
+                tail = ids.size - 1 - last_ts
+                expected = int(self._ch_enabled.sum())
+                # a disabled ch0 still carries markers as inserted bare
+                # sensor-0 packets (right after the timestamp), making
+                # those frames one packet longer than the enabled count
+                if not self._ch_enabled[0] and np.any(ids[last_ts + 1 :] == 0):
+                    expected += 1
+                if tail < expected:
+                    self._residual = (
+                        protocol.encode_packets(
+                            ids[last_ts:], vals[last_ts:], marks[last_ts:]
+                        )
+                        + self._residual
+                    )
+                    ids, vals, marks, is_ts = (
+                        ids[:last_ts], vals[:last_ts], marks[:last_ts], is_ts[:last_ts],
+                    )
+                    if ids.size == 0:
+                        return 0
+            return self._process(ids, vals, marks, is_ts)
+
+    @property
+    def dropped_bytes(self) -> int:
+        """Garbage bytes discarded while resynchronising the packet stream."""
+        return self._dropped_bytes
+
+    @property
+    def dropped_frames(self) -> int:
+        """Malformed frames discarded by the receiver (never silent).
+
+        Counts packet-equivalents lost to byte-level resync plus decoded
+        packets the frame assembler had to throw away (e.g. data packets
+        with no preceding timestamp after a corruption or reconnect).
+        """
+        return self._dropped_packets + (self._dropped_bytes + 1) // 2
 
     def _convert_regular(self, ids, vals, marks, per, n_frames):
         """Reshape-based conversion for a frame-regular batch: no packet
@@ -276,6 +328,10 @@ class PowerSensor:
         frame_of = np.searchsorted(ts_idx, np.flatnonzero(data_mask)) - 1
         ok = frame_of >= 0
         if not ok.all():
+            # data packets with no preceding timestamp (corruption ate the
+            # frame header, or a reconnect started mid-frame): discard and
+            # count, never silently absorb
+            self._dropped_packets += int((~ok).sum())
             d_ids, d_vals, d_marks, frame_of = (
                 d_ids[ok], d_vals[ok], d_marks[ok], frame_of[ok],
             )
@@ -321,8 +377,9 @@ class PowerSensor:
             return False
         return bool((ids.reshape(-1, per)[:, 1:] == ids[1:per]).all())
 
-    def _process(self, ids, vals, marks) -> int:
-        is_ts = protocol.is_timestamp(ids, marks)
+    def _process(self, ids, vals, marks, is_ts=None) -> int:
+        if is_ts is None:
+            is_ts = protocol.is_timestamp(ids, marks)
         regular = self._frames_regular(ids, is_ts)
         if regular:
             per = 1 + int(self._ch_enabled.sum())
@@ -331,6 +388,9 @@ class PowerSensor:
         else:
             ts_idx = np.flatnonzero(is_ts)
             if ts_idx.size == 0:
+                # a whole batch with no timestamp (corruption ate it):
+                # discarded, but counted — never silent
+                self._dropped_packets += int(ids.size)
                 return 0
             n_frames = ts_idx.size
             ts_vals = vals[ts_idx]
@@ -345,6 +405,21 @@ class PowerSensor:
             d0 = (ts_vals[0] - self._last_ts10) % 1024
             deltas = np.concatenate([[d0], np.diff(ts_vals) % 1024])
             times = self._device_time_us + np.cumsum(deltas)
+        # The 10-bit counter wraps every 1.024 ms, so any delivery gap
+        # longer than that (dropout, stall, disconnect→reconnect) loses
+        # whole wraps and the reconstructed clock silently falls behind.
+        # Re-anchor to the transport's arrival clock — the host-side time
+        # a real driver would stamp each read with — whenever the batch
+        # lags it by one wrap or more.  Only when the transport was
+        # *drained*, though: a lag with bytes still pending is backlog
+        # (delayed delivery, e.g. size-capped reads), where every frame is
+        # present and the wrap arithmetic is already correct — re-stamping
+        # those to arrival time would fabricate gaps out of latency.
+        arrival_s = getattr(self.device, "t_s", None)
+        if arrival_s is not None and not getattr(self.device, "pending_bytes", 0):
+            wraps = int(np.floor((arrival_s * 1e6 - times[-1]) / 1024.0 + 0.5))
+            if wraps > 0:
+                times = times + wraps * 1024.0
         self._last_ts10 = int(ts_vals[-1])
         self._device_time_us = float(times[-1])
 
@@ -402,7 +477,15 @@ class PowerSensor:
                 inst_v, inst_i = newest.volts[-1], newest.amps[-1]
                 watts = newest.watts[-1]
             else:
+                # nothing decoded yet: report the arrival clock (what the
+                # wrap correction will anchor the first frames to), not the
+                # 10-bit reconstruction's zero — otherwise the first
+                # interval after a direct-drain (calibration) spans time
+                # that was never streamed
                 t_s = self._device_time_us / 1e6
+                dev_now = getattr(self.device, "t_s", None)
+                if dev_now is not None:
+                    t_s = max(t_s, float(dev_now))
                 inst_v, inst_i = self._inst_v, self._inst_i
                 watts = inst_v * inst_i
             return State(
@@ -446,25 +529,60 @@ class PowerSensor:
         if self._thread is not None:
             return
         self._thread_stop.clear()
+        self._thread_error = None
 
         def _run() -> None:
             import time as _time
 
-            while not self._thread_stop.is_set():
-                if real_time_factor > 0:
-                    self.device.advance(tick_s * real_time_factor)
-                self.poll()
-                _time.sleep(tick_s if real_time_factor > 0 else 0.001)
+            try:
+                while not self._thread_stop.is_set():
+                    if real_time_factor > 0:
+                        self.device.advance(tick_s * real_time_factor)
+                    self.poll()
+                    _time.sleep(tick_s if real_time_factor > 0 else 0.001)
+            except BaseException as exc:  # receiver died mid-poll: surface it
+                self._thread_error = exc
 
         self._thread = threading.Thread(target=_run, daemon=True)
         self._thread.start()
 
-    def stop_thread(self) -> None:
+    @property
+    def thread_error(self) -> BaseException | None:
+        """The exception that killed the receiver thread, if any."""
+        return self._thread_error
+
+    @property
+    def receiver_ok(self) -> bool:
+        """False when a started receiver thread died or failed to join.
+
+        A dead poller means the ring stops advancing while reads keep
+        answering from frozen data — consumers (`FleetMonitor` health)
+        must treat this as a lost device, not a quiet one.
+        """
+        if self._thread_error is not None:
+            return False
+        t = self._thread
+        return t is None or t.is_alive()
+
+    def stop_thread(self, timeout_s: float = 5.0) -> BaseException | None:
+        """Stop the receiver thread; returns its terminal error, if any.
+
+        Joins with a timeout: a receiver wedged inside a poll is detached
+        (it is a daemon) and surfaced as a `TimeoutError` instead of
+        hanging the caller forever.  A receiver that died mid-poll has its
+        exception returned (and kept on `thread_error`) rather than being
+        silently discarded with the thread handle.
+        """
         if self._thread is None:
-            return
+            return self._thread_error
         self._thread_stop.set()
-        self._thread.join()
+        self._thread.join(timeout_s)
+        if self._thread.is_alive():
+            self._thread_error = TimeoutError(
+                f"receiver thread did not join within {timeout_s} s"
+            )
         self._thread = None
+        return self._thread_error
 
     def close(self) -> None:
         self.stop_thread()

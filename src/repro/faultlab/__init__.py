@@ -1,0 +1,55 @@
+"""`repro.faultlab` — transport-level fault injection + chaos conformance.
+
+The paper's headline claims are robustness ones; this package is how the
+reproduction earns them.  It degrades the byte link between the virtual
+firmware and the host library — the layer real interference attacks —
+with deterministic, seedable, composable fault windows, and scores any
+sensor stack against the injected ground truth:
+
+* `faults` — the primitives: `Dropout`, `Disconnect`, `Stall`,
+  `Corruption`, `ClockDrift`, `PartialReads`;
+* `scenario` — the DSL: `Scenario(faults=..., schedule=...)`,
+  `periodic()` schedules, and `shipped_scenarios()`, the conformance set;
+* `transport` — `FaultyTransport` (the injector) + `FaultLedger` (the
+  ground-truth record of what was injected), and `inject()` to wrap a
+  live fleet in place;
+* `harness` — `ChaosRun`: clean pass vs faulted pass over the same
+  seeded fleet, `ChaosReport.check()` enforcing the conformance bound
+  (energy deviation ≤ injected dropout fraction + 1 %, no NaNs, no
+  negative joules).
+
+The degradation *handling* lives with the consumers: `stream.FleetMonitor`
+(health states, quorum power, holdover), `sched.PowerCapGovernor` (stale
+telemetry as a safety event) and `attrib.attribute` (per-span coverage).
+"""
+from .faults import (
+    ClockDrift,
+    Corruption,
+    Disconnect,
+    Dropout,
+    Fault,
+    PartialReads,
+    Stall,
+)
+from .harness import ChaosReport, ChaosRun, DeviceOutcome
+from .scenario import Scenario, periodic, shipped_scenarios
+from .transport import FaultLedger, FaultyTransport, inject
+
+__all__ = [
+    "ClockDrift",
+    "Corruption",
+    "Disconnect",
+    "Dropout",
+    "Fault",
+    "PartialReads",
+    "Stall",
+    "ChaosReport",
+    "ChaosRun",
+    "DeviceOutcome",
+    "Scenario",
+    "periodic",
+    "shipped_scenarios",
+    "FaultLedger",
+    "FaultyTransport",
+    "inject",
+]

@@ -1,0 +1,129 @@
+"""Transport-level fault primitives for the chaos lab.
+
+Each fault is a frozen, declarative description of one degradation of a
+device's byte link, active over a half-open window ``[t0_s, t1_s)`` of
+*true* (transport) time and optionally scoped to named devices.  The
+injection mechanics live in `repro.faultlab.transport.FaultyTransport`;
+these objects only say *what* goes wrong and *when*, which is what makes
+scenarios composable and replayable.
+
+Fault taxonomy (what each models on real hardware):
+
+* :class:`Dropout` — bytes produced by the device during the window never
+  reach the host (USB FIFO overrun, EMI burst on the link): sample
+  dropouts when short, sustained gaps when long;
+* :class:`Disconnect` — the link itself is down: reads return nothing,
+  produced bytes are lost *and* host commands (markers!) are dropped —
+  a full unplug→replug cycle;
+* :class:`Stall` — delivery freezes but nothing is lost: bytes buffer up
+  and arrive in one burst when the stall ends (a hung USB poll);
+* :class:`Corruption` — per-byte bit flips / zeroing / deletions at a
+  seeded rate (signal integrity faults; deletions also misalign the
+  2-byte packet framing, exercising resync);
+* :class:`ClockDrift` — the device clock runs at ``factor`` × true time
+  (crystal tolerance, thermal drift): inter-device skew;
+* :class:`PartialReads` — every host read returns at most ``max_chunk``
+  bytes (tiny USB transfers), splitting packets across reads.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import ClassVar
+
+
+@dataclass(frozen=True)
+class Fault:
+    """One degradation window on a device's transport."""
+
+    t0_s: float
+    t1_s: float
+    #: device names this fault applies to; None = the whole fleet
+    devices: tuple[str, ...] | None = None
+
+    kind: ClassVar[str] = "fault"
+
+    def __post_init__(self) -> None:
+        if self.t1_s < self.t0_s:
+            raise ValueError(f"{self.kind}: t1_s {self.t1_s} < t0_s {self.t0_s}")
+        if self.devices is not None:
+            object.__setattr__(self, "devices", tuple(self.devices))
+
+    def active(self, t_s: float) -> bool:
+        return self.t0_s <= t_s < self.t1_s
+
+    def applies_to(self, name: str) -> bool:
+        return self.devices is None or name in self.devices
+
+    @property
+    def duration_s(self) -> float:
+        return self.t1_s - self.t0_s
+
+
+@dataclass(frozen=True)
+class Dropout(Fault):
+    """Bytes produced during the window are silently discarded."""
+
+    kind: ClassVar[str] = "dropout"
+
+
+@dataclass(frozen=True)
+class Disconnect(Fault):
+    """Link down: produced bytes lost, reads empty, host writes dropped."""
+
+    kind: ClassVar[str] = "disconnect"
+
+
+@dataclass(frozen=True)
+class Stall(Fault):
+    """Delivery freezes; buffered bytes arrive in a burst at ``t1_s``."""
+
+    kind: ClassVar[str] = "stall"
+
+
+@dataclass(frozen=True)
+class Corruption(Fault):
+    """Per-byte corruption at a seeded rate while active.
+
+    ``mode``: ``"bitflip"`` XORs one random bit, ``"zero"`` clears the
+    byte, ``"drop"`` deletes it (misaligning the 2-byte packet framing).
+    """
+
+    kind: ClassVar[str] = "corruption"
+
+    rate: float = 0.01
+    mode: str = "bitflip"
+
+    def __post_init__(self) -> None:
+        super().__post_init__()
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError("corruption rate must be in [0, 1]")
+        if self.mode not in ("bitflip", "zero", "drop"):
+            raise ValueError(f"unknown corruption mode {self.mode!r}")
+
+
+@dataclass(frozen=True)
+class ClockDrift(Fault):
+    """Device clock advances at ``factor`` × true time while active."""
+
+    kind: ClassVar[str] = "drift"
+
+    factor: float = 1.0
+
+    def __post_init__(self) -> None:
+        super().__post_init__()
+        if self.factor <= 0:
+            raise ValueError("drift factor must be positive")
+
+
+@dataclass(frozen=True)
+class PartialReads(Fault):
+    """Every host read returns at most ``max_chunk`` bytes while active."""
+
+    kind: ClassVar[str] = "partial-reads"
+
+    max_chunk: int = 3
+
+    def __post_init__(self) -> None:
+        super().__post_init__()
+        if self.max_chunk < 1:
+            raise ValueError("max_chunk must be >= 1")

@@ -1,0 +1,236 @@
+"""ChaosRun: replay a scenario against a sensor stack and score it.
+
+The harness runs the *same* deterministic virtual fleet twice — once
+clean, once with the scenario injected at the transport layer — so the
+clean pass is the energy ground truth and the injector's
+:class:`~repro.faultlab.transport.FaultLedger` is the degradation ground
+truth.  ``ChaosReport.check()`` encodes the conformance contract every
+shipped scenario must satisfy:
+
+* reported per-device and fleet energy within
+  ``(injected dropout fraction + tol)`` of the clean-pass truth (with an
+  explicit allowance for corrupted and still-buffered bytes — nothing is
+  silently absorbed into the bound);
+* no NaNs, no negative joules;
+* every injected delivery gap visible to consumers (the degradation
+  tests assert on `FleetMonitor` health and `attrib` coverage on top).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from .scenario import Scenario
+from .transport import FaultLedger, FaultyTransport, inject
+
+
+@dataclass(frozen=True)
+class DeviceOutcome:
+    """One device's clean-vs-faulted comparison."""
+
+    name: str
+    true_energy_j: float
+    reported_energy_j: float
+    dropped_frames: int
+    delivered_frac: float
+
+    @property
+    def deviation_frac(self) -> float:
+        """|reported − truth| as a fraction of the truth."""
+        if self.true_energy_j <= 0:
+            return abs(self.reported_energy_j)
+        return abs(self.reported_energy_j - self.true_energy_j) / self.true_energy_j
+
+
+@dataclass
+class ChaosReport:
+    """Everything a conformance test needs from one chaos run."""
+
+    scenario: Scenario
+    duration_s: float
+    devices: dict[str, DeviceOutcome]
+    ledgers: dict[str, FaultLedger]
+    transports: dict[str, FaultyTransport]
+    #: the faulted fleet, still open for post-run inspection (health,
+    #: rings, markers); callers own closing it via ``close()``
+    fleet: object = None
+    stale_readings: int = 0
+    min_quorum_frac: float = 1.0
+
+    @property
+    def fleet_true_energy_j(self) -> float:
+        return sum(d.true_energy_j for d in self.devices.values())
+
+    @property
+    def fleet_reported_energy_j(self) -> float:
+        return sum(d.reported_energy_j for d in self.devices.values())
+
+    def energy_bound_frac(self, name: str, tol: float = 0.01) -> float:
+        """The conformance bound for one device: dropout + explicit slack.
+
+        ``dropped_frac`` is the injected ground truth; corrupted bytes can
+        each poison a couple of frames *and* bias one sample's watts, and
+        bytes still buffered in the transport (stall past run end) are
+        delayed rather than lost — both get explicit allowances instead of
+        being silently absorbed.
+        """
+        led = self.ledgers[name]
+        denom = max(led.delivered_bytes, 1)
+        corr_allow = 10.0 * led.corrupted_bytes / denom
+        pend_allow = self.transports[name].pending_bytes / denom
+        return led.dropped_frac + tol + corr_allow + pend_allow
+
+    def check(self, tol: float = 0.01) -> list[str]:
+        """Conformance violations (empty list = the scenario was survived)."""
+        errs: list[str] = []
+        for name, d in self.devices.items():
+            if not math.isfinite(d.reported_energy_j):
+                errs.append(f"{name}: non-finite reported energy")
+                continue
+            if d.reported_energy_j < -1e-9:
+                errs.append(f"{name}: negative joules ({d.reported_energy_j:.3g})")
+            bound = self.energy_bound_frac(name, tol)
+            if d.deviation_frac > bound:
+                errs.append(
+                    f"{name}: energy deviation {d.deviation_frac:.3%} exceeds "
+                    f"ledger bound {bound:.3%} (true {d.true_energy_j:.3f} J, "
+                    f"reported {d.reported_energy_j:.3f} J)"
+                )
+        if self.fleet_true_energy_j > 0:
+            fleet_dev = abs(
+                self.fleet_reported_energy_j - self.fleet_true_energy_j
+            ) / self.fleet_true_energy_j
+            fleet_bound = max(
+                self.energy_bound_frac(n, tol) for n in self.devices
+            )
+            if fleet_dev > fleet_bound:
+                errs.append(
+                    f"fleet: energy deviation {fleet_dev:.3%} exceeds {fleet_bound:.3%}"
+                )
+        return errs
+
+    def close(self) -> None:
+        if self.fleet is not None:
+            self.fleet.close()
+            self.fleet = None
+
+
+class ChaosRun:
+    """Replay one scenario against a virtual fleet and collect ground truth.
+
+    ``load_factory(i)`` builds device ``i``'s DUT load; both passes build
+    identical fleets from the same seeds, so the clean pass *is* the
+    ground-truth energy for the faulted pass.
+    """
+
+    def __init__(
+        self,
+        scenario: Scenario,
+        load_factory: Callable[[int], object] | None = None,
+        n_devices: int = 2,
+        module: str = "pcie8pin-20a",
+        seed: int = 0,
+        window_s: float = 0.02,
+        ring_capacity: int = 1 << 16,
+    ):
+        self.scenario = scenario
+        self.n_devices = int(n_devices)
+        self.module = module
+        self.seed = int(seed)
+        self.window_s = float(window_s)
+        self.ring_capacity = int(ring_capacity)
+        if load_factory is None:
+            from repro.core import ConstantLoad
+
+            load_factory = lambda i: ConstantLoad(12.0, 3.0 + 0.5 * i)  # noqa: E731
+        self.load_factory = load_factory
+
+    def _build_fleet(self):
+        from repro.stream import make_virtual_fleet
+
+        return make_virtual_fleet(
+            [self.load_factory(i) for i in range(self.n_devices)],
+            module=self.module,
+            seed=self.seed,
+            window_s=self.window_s,
+            ring_capacity=self.ring_capacity,
+        )
+
+    def run(
+        self,
+        duration_s: float,
+        chunk_s: float = 0.002,
+        on_tick: Callable[[float, object], None] | None = None,
+        mark_every_s: float = 0.0,
+    ) -> ChaosReport:
+        """Clean pass then faulted pass; returns the comparison report.
+
+        ``on_tick(t, fleet)`` is called after every faulted-pass chunk
+        (health sampling, governor steps, ...); ``mark_every_s > 0``
+        injects periodic ``"C"`` markers on every device in both passes
+        (the marker-survives-corruption regression reads them back).
+        """
+        true_energy = self._run_pass(duration_s, chunk_s, mark_every_s)
+
+        fleet = self._build_fleet()
+        transports = inject(fleet, self.scenario)
+        stale_readings = 0
+        min_quorum = 1.0
+
+        def tick(t: float, fl) -> None:
+            nonlocal stale_readings, min_quorum
+            reading = fl.fleet_power(poll=False)
+            if reading.stale:
+                stale_readings += 1
+            min_quorum = min(min_quorum, reading.quorum_frac)
+            if on_tick is not None:
+                on_tick(t, fl)
+
+        reported = self._drive(fleet, duration_s, chunk_s, tick, mark_every_s)
+        devices = {
+            name: DeviceOutcome(
+                name=name,
+                true_energy_j=true_energy[name],
+                reported_energy_j=reported[name],
+                dropped_frames=fleet[name].dropped_frames,
+                delivered_frac=transports[name].ledger.delivered_frac,
+            )
+            for name in fleet.names
+        }
+        return ChaosReport(
+            scenario=self.scenario,
+            duration_s=duration_s,
+            devices=devices,
+            ledgers={n: tr.ledger for n, tr in transports.items()},
+            transports=transports,
+            fleet=fleet,
+            stale_readings=stale_readings,
+            min_quorum_frac=min_quorum,
+        )
+
+    def _run_pass(self, duration_s, chunk_s, mark_every_s):
+        """The clean (ground-truth) pass: same fleet, no faults, no ticks."""
+        fleet = self._build_fleet()
+        try:
+            return self._drive(fleet, duration_s, chunk_s, None, mark_every_s)
+        finally:
+            fleet.close()
+
+    @staticmethod
+    def _drive(fleet, duration_s, chunk_s, on_tick, mark_every_s) -> dict[str, float]:
+        t = 0.0
+        next_mark = 0.0 if mark_every_s > 0 else math.inf
+        while t < duration_s - 1e-12:
+            if t >= next_mark - 1e-12:
+                fleet.mark_all("C")
+                next_mark += mark_every_s
+            h = min(chunk_s, duration_s - t)
+            fleet.advance(h)
+            t += h
+            if on_tick is not None:
+                on_tick(t, fleet)
+        fleet.poll_all()
+        return {name: fleet[name].read().total_joules for name in fleet.names}

@@ -1,0 +1,151 @@
+"""Scenario DSL: deterministic, seedable compositions of fault windows.
+
+A :class:`Scenario` is a declarative bundle of `repro.faultlab.faults`
+primitives plus an optional generated ``schedule`` (e.g. periodic sample
+dropouts).  Scenarios are pure data — replaying one against a fleet is
+`repro.faultlab.harness.ChaosRun`'s job — so the same scenario can be
+thrown at any sensor stack and the injected ground truth compared against
+what the stack reports.
+
+``shipped_scenarios()`` enumerates the conformance set every release must
+survive (the chaos test tier and ``benchmarks/governor_cap.py --chaos``
+iterate over it).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Sequence
+
+from .faults import (
+    ClockDrift,
+    Corruption,
+    Disconnect,
+    Dropout,
+    Fault,
+    PartialReads,
+    Stall,
+)
+
+
+def periodic(
+    make: Callable[[float], Fault],
+    period_s: float,
+    n: int,
+    start_s: float = 0.0,
+) -> tuple[Fault, ...]:
+    """``n`` copies of a fault, one per ``period_s``, from ``start_s``.
+
+    ``make`` receives each window's start time and returns the fault —
+    e.g. ``periodic(lambda t: Dropout(t, t + 2e-3), 0.05, 5, 0.1)`` is
+    five 2 ms sample dropouts, 50 ms apart, starting at 100 ms.
+    """
+    if period_s <= 0:
+        raise ValueError("period_s must be positive")
+    return tuple(make(start_s + k * period_s) for k in range(int(n)))
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """A named, seedable composition of fault windows."""
+
+    faults: tuple[Fault, ...] = ()
+    #: generated faults (e.g. from :func:`periodic`) — kept separate so a
+    #: scenario reads as "these one-off events plus this schedule"
+    schedule: tuple[Fault, ...] = ()
+    name: str = "scenario"
+    #: seeds the per-device corruption RNG streams in the transport
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "faults", tuple(self.faults))
+        object.__setattr__(self, "schedule", tuple(self.schedule))
+
+    @property
+    def all_faults(self) -> tuple[Fault, ...]:
+        return self.faults + self.schedule
+
+    def faults_for(self, device: str) -> tuple[Fault, ...]:
+        """The subset of faults that applies to one named device."""
+        return tuple(f for f in self.all_faults if f.applies_to(device))
+
+    @property
+    def end_s(self) -> float:
+        """When the last fault window closes (0.0 for an empty scenario)."""
+        return max((f.t1_s for f in self.all_faults), default=0.0)
+
+    def scaled(self, factor: float) -> "Scenario":
+        """The same scenario with every window time scaled by ``factor``."""
+        import dataclasses
+
+        def scale(f: Fault) -> Fault:
+            return dataclasses.replace(
+                f, t0_s=f.t0_s * factor, t1_s=f.t1_s * factor
+            )
+
+        return Scenario(
+            faults=tuple(scale(f) for f in self.faults),
+            schedule=tuple(scale(f) for f in self.schedule),
+            name=self.name,
+            seed=self.seed,
+        )
+
+
+def shipped_scenarios(duration_s: float = 0.4) -> dict[str, Scenario]:
+    """The conformance scenario set, sized to a ``duration_s`` run.
+
+    Every scenario here must satisfy the chaos conformance bound: the
+    stack's reported fleet energy stays within (injected dropout fraction
+    + 1 %) of the injected ground truth, every gap is surfaced (coverage /
+    staleness flags), and nothing NaNs or goes negative.
+    """
+    d = float(duration_s)
+    return {
+        "clean": Scenario(name="clean", seed=1),
+        "dropout-burst": Scenario(
+            faults=(Dropout(0.30 * d, 0.45 * d),),
+            name="dropout-burst",
+            seed=2,
+        ),
+        "sample-dropouts": Scenario(
+            schedule=periodic(
+                lambda t: Dropout(t, t + 0.004 * d), 0.08 * d, 6, 0.2 * d
+            ),
+            name="sample-dropouts",
+            seed=3,
+        ),
+        "stall-burst": Scenario(
+            faults=(Stall(0.35 * d, 0.55 * d),),
+            name="stall-burst",
+            seed=4,
+        ),
+        "disconnect-cycle": Scenario(
+            faults=(Disconnect(0.40 * d, 0.60 * d, devices=("dev0",)),),
+            name="disconnect-cycle",
+            seed=5,
+        ),
+        "partial-reads": Scenario(
+            faults=(PartialReads(0.10 * d, 0.90 * d, max_chunk=3),),
+            name="partial-reads",
+            seed=6,
+        ),
+        "corruption-light": Scenario(
+            faults=(Corruption(0.20 * d, 0.80 * d, rate=5e-4),),
+            name="corruption-light",
+            seed=7,
+        ),
+        "drift-skew": Scenario(
+            faults=(ClockDrift(0.10 * d, 0.90 * d, factor=0.9, devices=("dev0",)),),
+            name="drift-skew",
+            seed=8,
+        ),
+        "kitchen-sink": Scenario(
+            faults=(
+                Dropout(0.20 * d, 0.26 * d),
+                Stall(0.40 * d, 0.48 * d, devices=("dev0",)),
+                Disconnect(0.60 * d, 0.72 * d, devices=("dev1",)),
+                PartialReads(0.0, d, max_chunk=5),
+            ),
+            name="kitchen-sink",
+            seed=9,
+        ),
+    }

@@ -1,0 +1,260 @@
+"""FaultyTransport: the byte-level fault injector, plus its ground truth.
+
+Wraps any device with the `VirtualDevice` surface (``write`` / ``read`` /
+``advance`` / ``t_s``) and applies the active faults of a scenario to the
+byte stream *between* the firmware and the host library — the same layer
+a flaky USB cable attacks.  Every injection is recorded in a
+:class:`FaultLedger`, the ground truth the chaos conformance tests
+compare the stack's reports against.
+
+Timebase contract: the transport owns **true time** (``t_s``).  The
+wrapped device's clock may drift away from it (`ClockDrift`), which is
+exactly the skew the host's arrival-clock wrap correction has to absorb.
+``advance`` splits every step at fault-window boundaries so each
+sub-step sees a constant active-fault set.
+
+Fault windows are **relative to the injection epoch** — the device's
+clock when the transport wrapped it — so ``Dropout(0.25, 0.35)`` always
+means "0.25 s into the chaos run", regardless of how much simulated time
+(connect handshake, calibration) the stack burned beforehand.  The
+ledger records spans on the same relative timeline.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+from .faults import (
+    ClockDrift,
+    Corruption,
+    Disconnect,
+    Dropout,
+    Fault,
+    PartialReads,
+    Stall,
+)
+
+_EPS = 1e-12
+
+
+def _merge_span(spans: list[tuple[float, float]], t0: float, t1: float) -> None:
+    """Append [t0, t1) to a span list, coalescing with the last span."""
+    if t1 <= t0:
+        return
+    if spans and t0 <= spans[-1][1] + _EPS:
+        spans[-1] = (spans[-1][0], max(spans[-1][1], t1))
+    else:
+        spans.append((t0, t1))
+
+
+@dataclass
+class FaultLedger:
+    """Ground truth of everything injected into one device's transport."""
+
+    device: str
+    #: true seconds observed while the wrapped device was streaming
+    total_s: float = 0.0
+    #: device-clock seconds' worth of produced bytes actually delivered
+    #: (drift scales production, so this is Σ step · drift over delivering
+    #: steps — ``delivered_frac`` is the expected received-data fraction)
+    delivered_s: float = 0.0
+    delivered_bytes: int = 0
+    corrupted_bytes: int = 0
+    deleted_bytes: int = 0
+    lost_writes: int = 0
+    dropped_spans: list[tuple[float, float]] = field(default_factory=list)
+    stall_spans: list[tuple[float, float]] = field(default_factory=list)
+    disconnect_spans: list[tuple[float, float]] = field(default_factory=list)
+    drift_spans: list[tuple[float, float, float]] = field(default_factory=list)
+
+    @property
+    def dropped_s(self) -> float:
+        return sum(b - a for a, b in self.dropped_spans)
+
+    @property
+    def delivered_frac(self) -> float:
+        """Expected fraction of true-time data the host should have seen."""
+        return self.delivered_s / self.total_s if self.total_s > 0 else 1.0
+
+    @property
+    def dropped_frac(self) -> float:
+        return 1.0 - self.delivered_frac
+
+    def gap_spans(self) -> list[tuple[float, float]]:
+        """All injected delivery gaps (dropouts + disconnects), merged."""
+        out: list[tuple[float, float]] = []
+        for a, b in sorted(self.dropped_spans + self.disconnect_spans):
+            _merge_span(out, a, b)
+        return out
+
+
+class FaultyTransport:
+    """Apply a scenario's faults to one device's byte link.
+
+    Drop-in for the wrapped device everywhere the host library looks:
+    ``write``/``read``/``advance``/``t_s`` plus a ``firmware``
+    pass-through for consumers (plant actuation, calibration) that reach
+    into the virtual hardware.
+    """
+
+    def __init__(
+        self,
+        device,
+        faults: Sequence[Fault],
+        name: str = "dev",
+        seed: int = 0,
+    ):
+        self.inner = device
+        self.name = name
+        self.faults = [f for f in faults if f.applies_to(name)]
+        self.rng = np.random.default_rng(seed)
+        self.ledger = FaultLedger(device=name)
+        #: injection epoch: fault windows count from here, not from boot
+        self.epoch_s = float(getattr(device, "t_s", 0.0))
+        self._t_s = self.epoch_s
+        self._buf = bytearray()
+        # fault-window edges (relative time), for sub-stepping advance()
+        self._edges = sorted(
+            {f.t0_s for f in self.faults} | {f.t1_s for f in self.faults}
+        )
+
+    # ------------------------------------------------------------ passthrough
+    @property
+    def t_s(self) -> float:
+        """True (host-side) time — the arrival clock the host anchors to."""
+        return self._t_s
+
+    @property
+    def rel_t_s(self) -> float:
+        """Time since injection — the scenario's timeline."""
+        return self._t_s - self.epoch_s
+
+    @property
+    def firmware(self):
+        return self.inner.firmware
+
+    @property
+    def pending_bytes(self) -> int:
+        """Bytes produced and retained but not yet read by the host."""
+        return len(self._buf)
+
+    # ------------------------------------------------------------ fault query
+    def _active(self, kind: type, t_s: float) -> list[Fault]:
+        return [f for f in self.faults if isinstance(f, kind) and f.active(t_s)]
+
+    # ------------------------------------------------------------ host surface
+    def write(self, data: bytes) -> None:
+        if self._active(Disconnect, self.rel_t_s):
+            self.ledger.lost_writes += 1
+            return
+        self.inner.write(data)
+
+    def read(self, max_bytes: int | None = None) -> bytes:
+        t = self.rel_t_s
+        if self._active(Disconnect, t) or self._active(Stall, t):
+            return b""
+        for f in self._active(PartialReads, t):
+            cap = f.max_chunk
+            max_bytes = cap if max_bytes is None else min(max_bytes, cap)
+        if max_bytes is None or max_bytes >= len(self._buf):
+            out = bytes(self._buf)
+            self._buf.clear()
+            return out
+        out = bytes(self._buf[:max_bytes])
+        del self._buf[:max_bytes]
+        return out
+
+    def advance(self, dt_s: float) -> None:
+        """Advance true time, sub-stepping at fault-window boundaries."""
+        end = self.rel_t_s + dt_s
+        while self.rel_t_s < end - _EPS:
+            nxt = end
+            for e in self._edges:
+                if e > self.rel_t_s + _EPS:
+                    nxt = min(nxt, e)
+                    break
+            self._step(nxt - self.rel_t_s)
+
+    # ------------------------------------------------------------ the injector
+    def _step(self, h: float) -> None:
+        t = self.rel_t_s
+        tm = t + 0.5 * h  # faults are constant over the sub-step
+        led = self.ledger
+        drift = 1.0
+        for f in self._active(ClockDrift, tm):
+            drift *= f.factor
+            led.drift_spans.append((t, t + h, f.factor))
+        self.inner.advance(h * drift)
+        produced = self.inner.read()
+        streaming = getattr(getattr(self.inner, "firmware", None), "streaming", True)
+        if streaming:
+            led.total_s += h
+        self._t_s = self.epoch_s + t + h
+
+        if self._active(Disconnect, tm):
+            _merge_span(led.disconnect_spans, t, t + h)
+            if produced:
+                _merge_span(led.dropped_spans, t, t + h)
+            return
+        if self._active(Dropout, tm):
+            if produced:
+                _merge_span(led.dropped_spans, t, t + h)
+            return
+        if self._active(Stall, tm):
+            _merge_span(led.stall_spans, t, t + h)
+            # delivery is blocked in read(); production continues unharmed
+        data = produced
+        for f in self._active(Corruption, tm):
+            data = self._corrupt(data, f)
+        if data:
+            if streaming:
+                led.delivered_s += h * drift
+            led.delivered_bytes += len(data)
+            self._buf.extend(data)
+        elif streaming and not produced:
+            # device produced nothing this step (stopped stream / sub-frame
+            # step): nothing was droppable, count the time as delivered
+            led.delivered_s += h * drift
+
+    def _corrupt(self, data: bytes, f: Corruption) -> bytes:
+        if not data or f.rate <= 0:
+            return data
+        arr = np.frombuffer(data, dtype=np.uint8).copy()
+        hit = np.flatnonzero(self.rng.random(arr.size) < f.rate)
+        if hit.size == 0:
+            return data
+        if f.mode == "bitflip":
+            bits = self.rng.integers(0, 8, size=hit.size)
+            arr[hit] ^= (1 << bits).astype(np.uint8)
+            self.ledger.corrupted_bytes += int(hit.size)
+        elif f.mode == "zero":
+            arr[hit] = 0
+            self.ledger.corrupted_bytes += int(hit.size)
+        else:  # drop: delete the bytes, misaligning the framing
+            arr = np.delete(arr, hit)
+            self.ledger.deleted_bytes += int(hit.size)
+            self.ledger.corrupted_bytes += int(hit.size)
+        return arr.tobytes()
+
+
+def inject(fleet, scenario, seed: int | None = None) -> dict[str, FaultyTransport]:
+    """Wrap every sensor's device in a fleet with the scenario's faults.
+
+    Swaps each ``PowerSensor.device`` for a `FaultyTransport` in place —
+    after the connect handshake, so scenarios degrade the *stream*, not
+    the EEPROM download — and returns the transports by device name for
+    ledger access.
+    """
+    seed = scenario.seed if seed is None else seed
+    transports: dict[str, FaultyTransport] = {}
+    for i, name in enumerate(fleet.names):
+        ps = fleet[name]
+        tr = FaultyTransport(
+            ps.device, scenario.faults_for(name), name=name, seed=seed * 7919 + i
+        )
+        ps.device = tr
+        transports[name] = tr
+    return transports

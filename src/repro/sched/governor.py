@@ -16,10 +16,13 @@ Pieces:
   conditional anti-windup (integration freezes while the actuator is
   pinned at either end of the grid);
 * :class:`PowerCapGovernor` — the loop: poll fleet power from the ring
-  buffers (`FleetMonitor.window_power_w`, windowed over the per-frame
+  buffers (`FleetMonitor.fleet_power`, windowed over the per-frame
   totals the ring maintains), PI-correct a fleet power budget, pick the
   highest-throughput operating point that fits, with hysteresis + minimum
-  dwell so quantised actuation cannot chatter;
+  dwell so quantised actuation cannot chatter; a *stale* fleet reading
+  (quorum lost, holdover — see `repro.stream.fleet`) is a safety event:
+  integrator frozen, plant shed to a conservative rung, recovery blanked
+  like a switch transient once telemetry reacquires;
 * :class:`VirtualPlant` — N virtual PowerSensor3 devices playing the
   selected operating point through the full firmware/host chain, with a
   per-device efficiency bias the governor does *not* know (that model
@@ -378,6 +381,11 @@ class GovernorConfig:
     min_dwell_s: float = 0.0  # 0 = auto (2·window + tick)
     #: integrator clamp as a fraction of the cap (anti-windup bound)
     integral_span_frac: float = 0.3
+    #: stale-telemetry safety rung: while the fleet reading is flagged
+    #: stale (quorum lost, holdover) the governor sheds to the highest
+    #: rung predicted to fit this fraction of the cap and freezes there —
+    #: flying blind at full throttle is how caps get blown silently
+    stale_shed_frac: float = 0.6
 
     def __post_init__(self) -> None:
         if self.cap_w <= 0:
@@ -397,6 +405,8 @@ class GovernorStatus:
     budget_w: float
     point: OperatingPoint
     switched: bool
+    #: this tick ran on a stale fleet reading (safety event, not control)
+    stale: bool = False
 
 
 class PowerCapGovernor:
@@ -417,12 +427,16 @@ class PowerCapGovernor:
     ):
         self.plant = plant
         self.cfg = config
+        # the fleet derives 'now' from its own device clocks — the loop's
+        # t and the devices' absolute clocks need not share an epoch
         self.read_power = read_power or (
-            lambda now_s: plant.fleet.window_power_w(config.window_s)
+            lambda now_s: plant.fleet.fleet_power(config.window_s)
         )
         span = config.integral_span_frac * config.cap_w
         self.pi = PiController(config.kp, config.ki, -span, span)
         self._last_switch_s = -math.inf
+        self._was_stale = False
+        self.n_stale_ticks = 0
         #: EWMA of measured/modelled fleet power, the live model-bias
         #: estimate; updated only from *fresh* windows (see step())
         self._rho = 1.0
@@ -432,9 +446,42 @@ class PowerCapGovernor:
     def step(self, now_s: float) -> GovernorStatus:
         cfg = self.cfg
         plant = self.plant
-        measured = self.read_power(now_s)
-        err = cfg.cap_w - measured
+        reading = self.read_power(now_s)
+        # readers may return a bare float (legacy / sampled readers) or a
+        # FleetPowerReading carrying quorum + staleness flags
+        stale = bool(getattr(reading, "stale", False))
+        measured = float(getattr(reading, "power_w", reading))
         n = plant.n_devices
+        if stale:
+            # ---- safety event: telemetry lost or below quorum ----
+            # Control on a held/extrapolated number is how caps get blown
+            # while looking fine, so: freeze the integrator and the bias
+            # estimate (no update at all), shed to a conservative rung
+            # predicted to fit stale_shed_frac of the cap, and hold until
+            # the fleet reading is trustworthy again.
+            self._was_stale = True
+            self.n_stale_ticks += 1
+            safe = plant.grid.best_under(
+                cfg.stale_shed_frac * cfg.cap_w / max(n, 1),
+                max_batch=plant.demand_batch,
+            )
+            switched = False
+            if safe.watts < plant.point.watts - 1e-9:
+                plant.apply(safe, now_s)
+                self._last_switch_s = now_s
+                self.n_switches += 1
+                switched = True
+            status = GovernorStatus(
+                now_s, measured, cfg.cap_w, plant.point, switched, stale=True
+            )
+            self.history.append(status)
+            return status
+        if self._was_stale:
+            # reacquisition: the telemetry window is refilling with the
+            # shed rung's power — blank like a post-switch transient
+            self._was_stale = False
+            self._last_switch_s = now_s
+        err = cfg.cap_w - measured
         # the telemetry window lags a switch by one window length: reads
         # taken before it refreshes mix the old point's power in.  Blank
         # the integrator and the bias estimate until the window is fresh,

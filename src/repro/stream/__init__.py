@@ -10,7 +10,11 @@ feeding live consumers:
   vectorised windowed aggregation (mean/peak/percentile/EWMA/energy);
 * `FleetMonitor` — owns N `PowerSensor`s, polls them round-robin or via
   per-device threads, and serves per-device + aggregate snapshots and
-  marker-aligned interval queries.
+  marker-aligned interval queries.  Degradation-aware: per-device health
+  states (healthy / stale / lost), quorum-rescaled `fleet_power` with
+  holdover semantics and an explicit staleness flag — see the
+  degraded-telemetry table in `repro.stream.fleet`'s docstring and the
+  fault-injection lab in `repro.faultlab` that exercises it.
 """
 from .aggregate import (
     WindowStats,
@@ -20,9 +24,11 @@ from .aggregate import (
     windowed_mean_at,
 )
 from .fleet import (
+    DeviceHealth,
     DeviceSnapshot,
     FleetAggregate,
     FleetMonitor,
+    FleetPowerReading,
     FleetSnapshot,
     IntervalStats,
     make_virtual_fleet,
@@ -35,9 +41,11 @@ __all__ = [
     "sliding_mean",
     "window_stats",
     "windowed_mean_at",
+    "DeviceHealth",
     "DeviceSnapshot",
     "FleetAggregate",
     "FleetMonitor",
+    "FleetPowerReading",
     "FleetSnapshot",
     "IntervalStats",
     "make_virtual_fleet",

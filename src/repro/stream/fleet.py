@@ -18,12 +18,34 @@ segmentation of ring views, marker-aligned energy ledgers, power
 signatures — see `repro.attrib` (`segment_block` / `attribute_block`
 consume the same `FrameBlock`s that `interval()` reads).
 
+Degraded-telemetry semantics (the contract `repro.faultlab` tests):
+
+=========  ==============================  =================================
+state      entered when                    effect on fleet queries
+=========  ==============================  =================================
+healthy    frames younger than             contributes its windowed power
+           ``stale_after_s``
+stale      no frames for                   excluded from `fleet_power`; the
+           ``stale_after_s``               healthy sum is rescaled by the
+                                           known fleet fraction (quorum)
+lost       no frames for ``lost_after_s``  excluded, and counted against
+           *or* its receiver thread died   ``min_quorum_frac``
+=========  ==============================  =================================
+
+When *no* device is healthy, `fleet_power` holds the last good reading
+for up to ``holdover_s`` (``holdover=True``); the reading is flagged
+``stale`` whenever quorum drops below ``min_quorum_frac``, and consumers
+(the power-cap governor) must treat a stale reading as a safety event,
+not a number.
+
 This module deliberately avoids importing `repro.core` at module scope —
 `repro.core.host` imports `repro.stream.ring`, and keeping this side lazy
 keeps the package import-cycle free.
 """
 from __future__ import annotations
 
+import math
+import warnings
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, Iterable, Mapping
 
@@ -63,6 +85,46 @@ class FleetSnapshot:
 
 
 @dataclass(frozen=True)
+class DeviceHealth:
+    """One device's telemetry liveness at a point in time."""
+
+    name: str
+    state: str  # 'healthy' | 'stale' | 'lost'
+    staleness_s: float  # now − newest retained frame time
+    last_frame_s: float
+    receiver_alive: bool  # False when a started poller thread died
+    dropped_frames: int
+
+    @property
+    def healthy(self) -> bool:
+        return self.state == "healthy"
+
+
+@dataclass(frozen=True)
+class FleetPowerReading:
+    """Quorum-aware fleet power: a number plus how much to trust it.
+
+    ``power_w`` is the healthy-device sum rescaled by the known fleet
+    fraction (``n_total / n_healthy``); ``raw_power_w`` is the unscaled
+    healthy sum.  ``stale`` means the estimate must not be trusted for
+    control (quorum below ``min_quorum_frac``, or no healthy device at
+    all); ``holdover`` means ``power_w`` is the *last good* reading, held
+    because nothing fresh exists.  ``data_age_s`` is the age of the data
+    behind ``power_w`` (0 for a live reading).
+    """
+
+    power_w: float
+    raw_power_w: float
+    n_healthy: int
+    n_total: int
+    quorum_frac: float
+    stale: bool
+    holdover: bool
+    time_s: float
+    data_age_s: float = 0.0
+
+
+@dataclass(frozen=True)
 class IntervalStats:
     """Marker-aligned interval query result for one device."""
 
@@ -93,10 +155,28 @@ class FleetMonitor:
         sensors: Mapping[str, "PowerSensor"] | None = None,
         window_s: float = 1.0,
         pct: float = 95.0,
+        stale_after_s: float | None = None,
+        lost_after_s: float | None = None,
+        min_quorum_frac: float = 0.5,
+        holdover_s: float | None = None,
     ):
         self._sensors: dict[str, PowerSensor] = {}
         self.window_s = float(window_s)
         self.pct = float(pct)
+        # degraded-telemetry thresholds (see the module docstring table)
+        self.stale_after_s = (
+            max(2.0 * self.window_s, 0.005)
+            if stale_after_s is None
+            else float(stale_after_s)
+        )
+        self.lost_after_s = (
+            10.0 * self.stale_after_s if lost_after_s is None else float(lost_after_s)
+        )
+        self.min_quorum_frac = float(min_quorum_frac)
+        self.holdover_s = (
+            5.0 * self.stale_after_s if holdover_s is None else float(holdover_s)
+        )
+        self._last_good: tuple[float, float] | None = None  # (time, power_w)
         self._rr = 0  # round-robin cursor
         if sensors:
             for name, ps in sensors.items():
@@ -139,9 +219,26 @@ class FleetMonitor:
         for ps in self._sensors.values():
             ps.start_thread(real_time_factor=real_time_factor, tick_s=tick_s)
 
-    def stop_threads(self) -> None:
-        for ps in self._sensors.values():
-            ps.stop_thread()
+    def stop_threads(self, timeout_s: float = 5.0) -> dict[str, BaseException]:
+        """Stop every receiver thread, joining each with a timeout.
+
+        Returns ``{device: error}`` for every receiver that died mid-poll
+        or refused to join — a dead poller previously vanished here while
+        `window_power_w` kept serving its frozen ring forever.  The errors
+        are also warned so unchecked callers still get a signal.
+        """
+        errors: dict[str, BaseException] = {}
+        for name, ps in self._sensors.items():
+            try:
+                err = ps.stop_thread(timeout_s=timeout_s)
+            except TypeError:  # duck-typed sensor without the timeout param
+                err = ps.stop_thread()
+            if err is not None:
+                errors[name] = err
+        if errors:
+            detail = "; ".join(f"{n}: {e!r}" for n, e in errors.items())
+            warnings.warn(f"fleet receiver thread(s) failed — {detail}", RuntimeWarning)
+        return errors
 
     # ------------------------------------------------------------ sim helpers
     def advance(self, dt_s: float) -> None:
@@ -256,6 +353,114 @@ class FleetMonitor:
     def read_all(self) -> dict[str, "State"]:
         return {name: ps.read() for name, ps in self._sensors.items()}
 
+    # ------------------------------------------------------------ health
+    def _now_s(self) -> float:
+        """The fleet's 'now': the newest clock any device can vouch for."""
+        best = 0.0
+        for ps in self._sensors.values():
+            t = getattr(ps.device, "t_s", None)
+            best = max(best, ps.ring.last_time_s if t is None else float(t))
+        return best
+
+    def device_health(self, now_s: float | None = None) -> dict[str, DeviceHealth]:
+        """Per-device health states (see the module docstring table)."""
+        now = self._now_s() if now_s is None else float(now_s)
+        out: dict[str, DeviceHealth] = {}
+        for name, ps in self._sensors.items():
+            last = ps.ring.last_time_s if len(ps.ring) else 0.0
+            staleness = max(now - last, 0.0) if len(ps.ring) else (
+                now if now > 0 else 0.0
+            )
+            alive = bool(getattr(ps, "receiver_ok", True))
+            if not alive or staleness > self.lost_after_s:
+                state = "lost"
+            elif staleness > self.stale_after_s:
+                state = "stale"
+            else:
+                state = "healthy"
+            out[name] = DeviceHealth(
+                name=name,
+                state=state,
+                staleness_s=staleness,
+                last_frame_s=last,
+                receiver_alive=alive,
+                dropped_frames=int(getattr(ps, "dropped_frames", 0)),
+            )
+        return out
+
+    def fleet_power(
+        self,
+        window_s: float | None = None,
+        poll: bool = True,
+        now_s: float | None = None,
+    ) -> FleetPowerReading:
+        """Quorum-based fleet power with explicit staleness semantics.
+
+        Healthy devices contribute their trailing-window ring power; the
+        sum is rescaled by the known fleet fraction so a partial quorum
+        still estimates *fleet* watts.  Stale/lost devices are excluded —
+        their rings only hold the past — instead of silently freezing the
+        total.  With no healthy device at all the last good reading is
+        held for ``holdover_s`` (``holdover=True``); any reading whose
+        quorum is below ``min_quorum_frac`` is flagged ``stale``.
+        """
+        window_s = self.window_s if window_s is None else float(window_s)
+        if poll:
+            for ps in self._sensors.values():
+                ps.poll()
+        now = self._now_s() if now_s is None else float(now_s)
+        health = self.device_health(now)
+        n_total = len(self._sensors)
+        healthy = [n for n, h in health.items() if h.healthy]
+        quorum = len(healthy) / n_total if n_total else 0.0
+        if healthy:
+            raw = sum(
+                self._locked_ring_read(
+                    self._sensors[n], lambda ps=self._sensors[n]: ps.ring.tail_mean_watts(window_s)
+                )
+                for n in healthy
+            )
+            power = raw * n_total / len(healthy)
+            stale = quorum < self.min_quorum_frac
+            if not stale:
+                self._last_good = (now, power)
+            return FleetPowerReading(
+                power_w=power,
+                raw_power_w=raw,
+                n_healthy=len(healthy),
+                n_total=n_total,
+                quorum_frac=quorum,
+                stale=stale,
+                holdover=False,
+                time_s=now,
+            )
+        # nothing healthy: holdover semantics, always flagged stale
+        if self._last_good is not None:
+            t_good, p_good = self._last_good
+            age = max(now - t_good, 0.0)
+            return FleetPowerReading(
+                power_w=p_good,
+                raw_power_w=0.0,
+                n_healthy=0,
+                n_total=n_total,
+                quorum_frac=0.0,
+                stale=True,
+                holdover=age <= self.holdover_s,
+                time_s=now,
+                data_age_s=age,
+            )
+        return FleetPowerReading(
+            power_w=0.0,
+            raw_power_w=0.0,
+            n_healthy=0,
+            n_total=n_total,
+            quorum_frac=0.0,
+            stale=True,
+            holdover=False,
+            time_s=now,
+            data_age_s=math.inf,
+        )
+
     def window_power_w(self, window_s: float | None = None, poll: bool = True) -> float:
         """Fleet-summed trailing-window mean power — the governor's fast hook.
 
@@ -263,8 +468,13 @@ class FleetMonitor:
         each device answers from its ring's maintained per-frame totals
         (`FrameRing.tail_mean_watts`), so a control loop can poll it every
         millisecond without competing with the 20 kHz receive path.
+
+        Quorum-based since the fault-injection lab landed: stale and lost
+        devices are excluded and the healthy sum is rescaled by the known
+        fleet fraction — callers that need the staleness/holdover flags
+        use `fleet_power` (this is its ``power_w`` field).
         """
-        return sum(self.device_window_power_w(window_s, poll=poll).values())
+        return self.fleet_power(window_s, poll=poll).power_w
 
     def device_window_power_w(
         self, window_s: float | None = None, poll: bool = True
@@ -313,11 +523,16 @@ def make_virtual_fleet(
     seed: int = 0,
     window_s: float = 1.0,
     ring_capacity: int = 1 << 16,
+    **monitor_kwargs,
 ) -> FleetMonitor:
-    """Build a FleetMonitor over virtual devices, one per load."""
+    """Build a FleetMonitor over virtual devices, one per load.
+
+    Extra keyword arguments (``stale_after_s``, ``min_quorum_frac``, ...)
+    are forwarded to the `FleetMonitor`.
+    """
     from repro.core import PowerSensor, make_device
 
-    fleet = FleetMonitor(window_s=window_s)
+    fleet = FleetMonitor(window_s=window_s, **monitor_kwargs)
     for i, load in enumerate(loads):
         dev = make_device([module], load, seed=seed * 1009 + i)
         fleet.add(f"dev{i}", PowerSensor(dev, ring_capacity=ring_capacity))

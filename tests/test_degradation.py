@@ -1,0 +1,299 @@
+"""Chaos test tier, part 2: the stack *surviving* injected degradation.
+
+Covers the consumers of the ring under faults: `FleetMonitor` health
+states / quorum power / holdover, receiver-thread death surfacing,
+`PowerCapGovernor` stale-telemetry safety, `attrib.attribute` gap
+coverage, and the host's `dropped_frames` accounting.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.attrib import KernelSpan, attribute
+from repro.core import ConstantLoad, PowerSensor, make_device
+from repro.faultlab import Disconnect, Dropout, Scenario, inject
+from repro.sched import (
+    GovernorConfig,
+    OperatingGrid,
+    PowerCapGovernor,
+    VirtualPlant,
+    decode_cost_of_batch,
+    time_over_cap,
+)
+from repro.stream import make_virtual_fleet
+
+
+def _fleet(n=2, window_s=0.02, **kw):
+    return make_virtual_fleet(
+        [ConstantLoad(12.0, 2.0 + i) for i in range(n)], window_s=window_s, **kw
+    )
+
+
+# ----------------------------------------------------------- health states
+def test_health_transitions_through_disconnect():
+    fleet = _fleet(2, lost_after_s=0.15)
+    sc = Scenario(faults=(Disconnect(0.1, 0.4, devices=("dev0",)),))
+    inject(fleet, sc)
+    states = {"dev0": [], "dev1": []}
+    t = 0.0
+    while t < 0.6 - 1e-12:
+        fleet.advance(0.01)
+        t += 0.01
+        h = fleet.device_health()
+        for n in states:
+            states[n].append(h[n].state)
+    seen0 = set(states["dev0"])
+    # the disconnected device walks healthy -> stale -> lost -> healthy
+    assert {"healthy", "stale", "lost"} <= seen0
+    assert states["dev0"][-1] == "healthy"  # reacquired after reconnect
+    assert set(states["dev1"]) == {"healthy"}
+    fleet.close()
+
+
+def test_quorum_rescaled_fleet_power():
+    fleet = _fleet(4)
+    fleet.run_for(0.2)
+    full = fleet.fleet_power()
+    assert full.n_healthy == 4 and not full.stale and full.quorum_frac == 1.0
+    sc = Scenario(faults=(Disconnect(0.0, 10.0, devices=("dev2",)),))
+    inject(fleet, sc)
+    fleet.run_for(0.3)
+    part = fleet.fleet_power()
+    assert part.n_healthy == 3
+    assert part.quorum_frac == pytest.approx(0.75)
+    assert not part.stale  # above the 0.5 quorum floor
+    assert not part.holdover
+    # rescaled by the known fleet fraction: still a *fleet* estimate.
+    # loads are 2/3/4/5 A at 12 V; missing dev2 (4 A = 1/4 of 168 W) makes
+    # the unscaled healthy sum err by ~17 %, the rescaled one by ~5 %
+    assert part.power_w == pytest.approx(full.power_w, rel=0.08)
+    assert part.raw_power_w < 0.8 * full.power_w
+    fleet.close()
+
+
+def test_holdover_and_staleness_flags_when_all_lost():
+    fleet = _fleet(2, window_s=0.02)
+    fleet.run_for(0.2)
+    good = fleet.fleet_power()
+    assert not good.stale
+    sc = Scenario(faults=(Disconnect(0.0, 10.0),))  # everything, forever
+    inject(fleet, sc)
+    fleet.run_for(2 * fleet.stale_after_s)
+    held = fleet.fleet_power()
+    assert held.stale and held.holdover and held.n_healthy == 0
+    assert held.power_w == pytest.approx(good.power_w, rel=0.05)
+    assert held.data_age_s > 0
+    # beyond the holdover window the reading stays flagged, holdover ends
+    fleet.run_for(fleet.holdover_s + fleet.stale_after_s)
+    dead = fleet.fleet_power()
+    assert dead.stale and not dead.holdover
+    fleet.close()
+
+
+def test_min_quorum_frac_marks_reading_stale():
+    fleet = _fleet(2, min_quorum_frac=0.8)
+    fleet.run_for(0.1)
+    sc = Scenario(faults=(Disconnect(0.0, 10.0, devices=("dev0",)),))
+    inject(fleet, sc)
+    fleet.run_for(0.2)
+    r = fleet.fleet_power()
+    assert r.n_healthy == 1
+    assert r.stale  # 0.5 quorum < 0.8 floor: not trustworthy for control
+    fleet.close()
+
+
+# ------------------------------------------------- receiver-thread lifecycle
+def test_dead_poller_thread_is_surfaced_not_frozen():
+    fleet = _fleet(2)
+    fleet.run_for(0.05)
+    boom = RuntimeError("receiver exploded mid-poll")
+
+    def bad_poll():
+        raise boom
+
+    fleet["dev0"].poll = bad_poll
+    fleet.start_threads()
+    deadline = time.time() + 5.0
+    while fleet["dev0"].receiver_ok and time.time() < deadline:
+        time.sleep(0.005)
+    assert not fleet["dev0"].receiver_ok
+    assert fleet["dev0"].thread_error is boom
+    # the dead receiver shows up as a lost device, so quorum power no
+    # longer serves its frozen ring as live fleet data
+    h = fleet.device_health()
+    assert h["dev0"].state == "lost"
+    assert not h["dev0"].receiver_alive
+    r = fleet.fleet_power(poll=False)
+    assert r.n_healthy == 1
+    with pytest.warns(RuntimeWarning, match="dev0"):
+        errors = fleet.stop_threads()
+    assert errors == {"dev0": boom}
+    del fleet["dev0"].__dict__["poll"]  # restore for clean close
+    fleet["dev0"]._thread_error = None  # acknowledged; close() quietly
+    fleet.close()
+
+
+def test_stop_threads_joins_with_timeout():
+    fleet = _fleet(1)
+    ps = fleet["dev0"]
+    # a wedged receiver: ignores the stop event entirely
+    ps._thread_stop.clear()
+    ps._thread = threading.Thread(target=lambda: time.sleep(30.0), daemon=True)
+    ps._thread.start()
+    errors = None
+    with pytest.warns(RuntimeWarning):
+        errors = fleet.stop_threads(timeout_s=0.05)
+    assert isinstance(errors["dev0"], TimeoutError)
+    assert not ps.receiver_ok  # the timeout stays surfaced
+    ps._thread_error = None  # clear for close()
+    fleet.close()
+
+
+def test_stop_thread_returns_none_on_clean_shutdown():
+    fleet = _fleet(1)
+    fleet.start_threads()
+    time.sleep(0.05)
+    assert fleet["dev0"].receiver_ok
+    assert fleet.stop_threads() == {}
+    assert fleet["dev0"].receiver_ok
+    fleet.close()
+
+
+# --------------------------------------------------------- governor safety
+def _grid():
+    cost = decode_cost_of_batch(2.0 * 40e6, 2.0 * 40e6, tokens_per_slot_step=8)
+    return OperatingGrid(
+        cost, n_layers=4, batches=(1, 2, 4, 8, 16, 32), tokens_per_slot_step=8
+    )
+
+
+def test_governor_treats_stale_telemetry_as_safety_event():
+    grid = _grid()
+    plant = VirtualPlant(grid, n_devices=2, seed=0)
+    cap_w = 0.72 * 2 * grid.max_watts
+    cfg = GovernorConfig(cap_w=cap_w, kp=0.15, ki=80.0)
+    # the whole fleet disappears mid-run, then comes back
+    inject(plant.fleet, Scenario(faults=(Disconnect(0.25, 0.35),), seed=1))
+    gov = PowerCapGovernor(plant, cfg)
+    gov.run(0.6, demand_of_t=lambda t: 32)
+
+    stale = [s for s in gov.history if s.stale]
+    assert stale, "full-fleet disconnect never flagged stale"
+    # shed to the conservative rung and hold: never above the safety
+    # fraction of the cap while flying blind
+    n = plant.n_devices
+    assert all(s.point.watts * n <= cfg.stale_shed_frac * cap_w + 1e-6 for s in stale)
+    # integrator frozen while stale: the PI budget does not wind
+    budgets = {round(s.budget_w, 6) for s in stale}
+    assert len(budgets) == 1
+    # the cap held through the whole disconnect -> reconnect cycle
+    assert time_over_cap(plant.log, cap_w, 0.0, 0.6, tol=0.02) < 0.05
+    # recovery: a fresh (non-stale) reading within 200 ms of reconnect
+    rec = [s for s in gov.history if s.time_s >= 0.35 and not s.stale]
+    assert rec and rec[0].time_s - 0.35 < 0.2
+    # and the plant climbs back toward the cap afterwards
+    late = [s for s in gov.history if s.time_s > 0.5]
+    assert np.mean([s.point.watts * n for s in late]) > 0.8 * cap_w
+    plant.close()
+
+
+def test_governor_partial_quorum_keeps_the_cap():
+    """One device lost of two: quorum telemetry must still hold the band."""
+    grid = _grid()
+    plant = VirtualPlant(grid, n_devices=2, seed=3)
+    cap_w = 0.72 * 2 * grid.max_watts
+    cfg = GovernorConfig(cap_w=cap_w, kp=0.15, ki=80.0)
+    inject(
+        plant.fleet,
+        Scenario(faults=(Disconnect(0.2, 0.35, devices=(plant.fleet.names[0],)),)),
+    )
+    gov = PowerCapGovernor(plant, cfg)
+    gov.run(0.6, demand_of_t=lambda t: 32)
+    assert time_over_cap(plant.log, cap_w, 0.0, 0.6, tol=0.02) < 0.05
+    plant.close()
+
+
+# ------------------------------------------------------------ attrib gaps
+def _gapped_trace(w0=100.0, dur=1.0, gap0=0.4, gap1=0.6, dt=1e-3):
+    t = np.arange(0.0, dur, dt)
+    keep = (t < gap0) | (t >= gap1)
+    return t[keep], np.full(keep.sum(), w0)
+
+
+def test_attribute_surfaces_gap_as_coverage():
+    t, w = _gapped_trace()
+    led = attribute(t, w, [KernelSpan("k", 0.0, 1.0)])
+    e = led.entries["k"]
+    # the 0.2 s gap is surfaced, not silently under-counted as 0 W
+    assert e.coverage_frac == pytest.approx(0.8, abs=0.01)
+    assert led.coverage_frac == pytest.approx(0.8, abs=0.01)
+    # and energy is extrapolated across it: ~100 J, not ~80 J
+    assert e.energy_j == pytest.approx(100.0, rel=0.02)
+
+
+def test_attribute_gapless_span_is_fully_covered():
+    t = np.arange(0.0, 1.0, 1e-3)
+    w = np.full(t.size, 50.0)
+    led = attribute(t, w, [KernelSpan("k", 0.1, 0.9)])
+    e = led.entries["k"]
+    assert e.coverage_frac == pytest.approx(1.0, abs=1e-6)
+    assert e.energy_j == pytest.approx(40.0, rel=0.01)
+
+
+def test_attribute_min_coverage_drops_hollow_spans():
+    t, w = _gapped_trace(gap0=0.41, gap1=0.59)
+    # span living almost entirely inside the gap
+    led = attribute(
+        t, w, [KernelSpan("hollow", 0.42, 0.58)], min_coverage=0.5
+    )
+    assert led.skipped_spans == 1
+    assert "hollow" not in led.entries
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.floats(min_value=0.05, max_value=0.6),
+    st.floats(min_value=0.02, max_value=0.3),
+)
+def test_attribute_gap_extrapolation_property(gap_start, gap_width):
+    """Any single gap: coverage ≈ 1 − gap/dur and energy within 3 %."""
+    t, w = _gapped_trace(gap0=gap_start, gap1=min(gap_start + gap_width, 0.95))
+    width = min(gap_start + gap_width, 0.95) - gap_start
+    led = attribute(t, w, [KernelSpan("k", 0.0, 1.0)])
+    e = led.entries["k"]
+    assert e.coverage_frac == pytest.approx(1.0 - width, abs=0.02)
+    assert e.energy_j == pytest.approx(100.0, rel=0.03)
+    assert np.isfinite(e.energy_j) and e.energy_j >= 0
+
+
+def test_chaos_run_attribution_coverage_end_to_end():
+    """Dropout over a live sensor: the marker span's coverage reports it."""
+    from repro.attrib import attribute_block, marker_spans
+    from repro.faultlab import ChaosRun
+
+    sc = Scenario(faults=(Dropout(0.08, 0.12),), seed=5)
+    rep = ChaosRun(sc, n_devices=1, seed=6).run(0.2, mark_every_s=0.05)
+    try:
+        ps = rep.fleet["dev0"]
+        spans = marker_spans(ps.markers, "C")
+        led = attribute_block(ps.ring.latest(), spans)
+        # the gap lands in span C1 (0.05-0.10) and C2 (0.10-0.15)
+        assert led.coverage_frac < 0.95
+        hit = [e for e in led.entries.values() if e.coverage_frac < 0.9]
+        assert hit, "no span surfaced the injected dropout"
+        assert all(np.isfinite(e.energy_j) and e.energy_j >= 0 for e in led.entries.values())
+    finally:
+        rep.close()
+
+
+# ----------------------------------------------------- dropped-frame counts
+def test_clean_stream_drops_nothing():
+    dev = make_device(["pcie8pin-20a"], ConstantLoad(12.0, 3.0), seed=1)
+    ps = PowerSensor(dev)
+    ps.run_for(0.3)
+    assert ps.dropped_frames == 0
+    assert ps.dropped_bytes == 0

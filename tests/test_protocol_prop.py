@@ -148,3 +148,127 @@ def test_pure_orphan_stream_decodes_nothing(seconds):
     dids, dvals, dmarks, consumed = protocol.decode_packets(buf)
     assert len(dids) == 0
     assert consumed == len(buf)
+
+
+# ---------------------------------------------------------------------------
+# host-level dropped-frame accounting: the receiver counts what it discards
+# ---------------------------------------------------------------------------
+class _ScriptedDevice:
+    """Minimal device stub: answers the connect handshake, then streams
+    whatever bytes the test feeds it (so garbage can be injected at exact
+    byte offsets, which a real firmware emulator never produces)."""
+
+    def __init__(self, n_enabled=2):
+        self._out = bytearray()
+        self._n_enabled = n_enabled
+        self.t_s = 0.0
+
+    def write(self, data: bytes) -> None:
+        i = 0
+        while i < len(data):
+            c = data[i : i + 1]
+            if c == protocol.CMD_VERSION:
+                self._out += b"scripted\0"
+                i += 1
+            elif c == protocol.CMD_READ_CONFIG:
+                sid = data[i + 1]
+                self._out += protocol.SensorConfigBlock(
+                    name=f"ch{sid}",
+                    type_code=sid % 2,
+                    enabled=sid < self._n_enabled,
+                    vref=3.3,
+                    sensitivity=1.0,
+                ).pack()
+                i += 2
+            elif c == protocol.CMD_MARKER:
+                i += 2
+            else:  # start/stop stream etc.: no reply
+                i += 1
+
+    def read(self, max_bytes=None) -> bytes:
+        out = bytes(self._out)
+        self._out.clear()
+        return out
+
+    def advance(self, dt_s: float) -> None:
+        self.t_s += dt_s
+
+    def feed(self, raw: bytes) -> None:
+        self._out += raw
+
+
+def _frame_stream(n_frames, n_enabled=2):
+    """A clean [ts, ch0, ch1, ...] packet stream, 50 µs frame spacing."""
+    ids, vals, marks = [], [], []
+    for k in range(n_frames):
+        ids.append(protocol.TIMESTAMP_SENSOR_ID)
+        vals.append((25 + 50 * k) % 1024)
+        marks.append(1)
+        for ch in range(n_enabled):
+            ids.append(ch)
+            vals.append(500 + ch)
+            marks.append(0)
+    return protocol.encode_packets(
+        np.array(ids), np.array(vals), np.array(marks)
+    )
+
+
+def _host(n_enabled=2):
+    from repro.core.host import PowerSensor
+
+    return PowerSensor(_ScriptedDevice(n_enabled))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 12), st.integers(0, 31), st.integers(1, 5))
+def test_clean_chunked_stream_never_counts_drops(n_frames, split_seed, chunk):
+    """However a clean stream is split across reads, nothing is 'dropped'."""
+    ps = _host()
+    raw = _frame_stream(n_frames)
+    i = 0
+    while i < len(raw):
+        n = 1 + (split_seed + i) % (2 * chunk)
+        ps.device.feed(raw[i : i + n])
+        i += n
+        ps.poll()
+    ps.poll()
+    assert ps.dropped_frames == 0
+    assert ps.dropped_bytes == 0
+    # and every complete frame eventually landed (the trailing frame may be
+    # held back awaiting its successor's timestamp)
+    assert ps.ring.head >= n_frames - 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 12), st.integers(0, 15), st.integers(1, 6))
+def test_orphan_garbage_increments_dropped_frames(n_frames, pos_seed, n_garbage):
+    """Injected orphan bytes are discarded AND counted, never silent."""
+    ps = _host()
+    raw = _frame_stream(n_frames)
+    cut = 2 * (pos_seed % (len(raw) // 2 + 1))
+    ps.device.feed(raw[:cut] + bytes([0x55] * n_garbage) + raw[cut:])
+    ps.poll()
+    ps.poll()
+    assert ps.dropped_bytes == n_garbage
+    assert ps.dropped_frames == (n_garbage + 1) // 2
+    # the real frames all survive resync (minus the held-back tail)
+    assert ps.ring.head >= n_frames - 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(3, 12), st.integers(1, 4))
+def test_headless_data_packets_are_counted(n_frames, n_eaten):
+    """Frames whose timestamp was eaten lose their data packets — counted."""
+    ps = _host()
+    raw = _frame_stream(n_frames)
+    # delete the first n_eaten timestamps' 2-byte packets (frame = 3 packets)
+    arr = bytearray(raw)
+    for k in range(n_eaten):
+        ts_at = k * 6 - 2 * k  # each prior deletion shifts by 2
+        del arr[ts_at : ts_at + 2]
+    ps.device.feed(bytes(arr))
+    ps.poll()
+    ps.poll()
+    # 2 data packets per eaten timestamp arrive with no frame to join
+    assert ps.dropped_frames >= n_eaten
+    assert ps.ring.head >= n_frames - n_eaten - 1
