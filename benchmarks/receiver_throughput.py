@@ -11,7 +11,15 @@ through
 * ``vectorised`` — the current `PowerSensor` receiver (fused affine
   conversion, ring-buffer append, batched %-format dump).
 
-    PYTHONPATH=src python -m benchmarks.receiver_throughput [seconds] [--smoke]
+``--replay`` additionally records the vectorised session into a
+`repro.replay` trace archive and replays it at max speed through a fresh
+receiver, gating that replay sustains **at least the live decoded
+frames/s figure** — the archive path must never become the slow way to
+consume a session.  (Replay carries no dump sink, so it has headroom
+over the dump-enabled live figure by construction; losing the gate means
+the replay transport itself regressed.)
+
+    PYTHONPATH=src python -m benchmarks.receiver_throughput [seconds] [--smoke] [--replay]
 """
 from __future__ import annotations
 
@@ -49,7 +57,9 @@ def _record_stream(seconds: float, chunk_s: float = 0.5):
         ConstantLoad(12.0, 4.0),
         seed=0,
     )
-    ps = PowerSensor(dev)  # performs the handshake; stream starts
+    # ring sized to retain the whole run: --replay archives it afterwards
+    capacity = 1 << max(int(seconds * 20_000 + 1024) - 1, 1).bit_length()
+    ps = PowerSensor(dev, ring_capacity=capacity)  # handshake; stream starts
     chunks = []
     remaining = seconds
     while remaining > 1e-12:
@@ -159,7 +169,27 @@ def _run_vectorised(ps, chunks) -> tuple[float, int, float]:
     return t.dt, frames, float(ps._energy.sum())
 
 
-def run(seconds: float = 10.0) -> None:
+def _run_replay(ps, frames_per_poll: int = 10_000) -> tuple[float, int, float]:
+    """Archive the live session, then max-speed replay through a fresh
+    receiver.  Chunks are pre-encoded (`preload`) so the timed region is
+    the receiver path alone — decode, frame assembly, conversion, ring —
+    exactly what the live figure times."""
+    from repro.replay import SessionRecorder, replay_sensor
+
+    rec = SessionRecorder(ps, include_history=True)
+    rec.capture()
+    trace = rec.finalize().devices["dev0"]
+    rps = replay_sensor(trace, chunk_frames=frames_per_poll)
+    rps.device.preload()
+    frames = 0
+    with timer() as t:
+        while not rps.device.exhausted:
+            frames += rps.poll()
+    energy = float(rps._energy.sum())
+    return t.dt, frames, energy
+
+
+def run(seconds: float = 10.0, replay: bool = False) -> int:
     ps, chunks = _record_stream(seconds)
     stream_bytes = sum(len(c) for c in chunks)
     dt_new, frames_new, e_new = _run_vectorised(ps, chunks)
@@ -176,11 +206,34 @@ def run(seconds: float = 10.0) -> None:
         f"legacy {fps_old:,.0f} -> vectorised {fps_new:,.0f} frames/s "
         f"({fps_new/fps_old:.1f}x)"
     )
+    if not replay:
+        return 0
+    dt_rep, frames_rep, e_rep = _run_replay(ps)
+    assert frames_rep == frames_new, (frames_rep, frames_new)
+    assert abs(e_rep - e_new) <= 1e-9 * abs(e_new), (e_rep, e_new)
+    fps_rep = frames_rep / dt_rep
+    emit("receiver_replay", dt_rep / frames_rep * 1e6, f"{fps_rep:.0f} frames/s")
+    print(
+        f"# replay: {fps_rep:,.0f} frames/s through the real receiver "
+        f"({fps_rep/fps_new:.2f}x the live figure)"
+    )
+    if fps_rep < fps_new:
+        print(
+            f"FAIL: max-speed replay ({fps_rep:,.0f} frames/s) is slower than "
+            f"the live receiver ({fps_new:,.0f} frames/s) — replay must not "
+            f"become the slow path"
+        )
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
+    import sys
+
     ap = argparse.ArgumentParser()
     ap.add_argument("seconds", nargs="?", type=float, default=10.0)
     ap.add_argument("--smoke", action="store_true", help="CI-sized run (1 s)")
+    ap.add_argument("--replay", action="store_true",
+                    help="gate max-speed archive replay >= the live figure")
     args = ap.parse_args()
-    run(1.0 if args.smoke else args.seconds)
+    sys.exit(run(1.0 if args.smoke else args.seconds, replay=args.replay))

@@ -29,7 +29,7 @@ from repro.stream.textio import format_dump_block
 
 from . import protocol
 from .firmware import FRAME_US, N_CHANNELS, VirtualDevice
-from .protocol import ADC_MAX, CMD_MARKER, CMD_READ_CONFIG, CMD_START_STREAM, CMD_STOP_STREAM, CMD_VERSION, CMD_WRITE_CONFIG, CONFIG_BLOCK_SIZE, SensorConfigBlock
+from .protocol import CMD_MARKER, CMD_READ_CONFIG, CMD_START_STREAM, CMD_STOP_STREAM, CMD_VERSION, CMD_WRITE_CONFIG, CONFIG_BLOCK_SIZE, SensorConfigBlock
 
 MAX_PAIRS = N_CHANNELS // 2
 
@@ -141,30 +141,22 @@ class PowerSensor:
         `raw_to_physical` is affine in the ADC code for both channel types;
         flattening it to ``phys = a·code + b`` lets the receiver convert a
         whole poll batch with one fused multiply-add over all channels.
+        The tables come from `protocol.conversion_tables`, shared with the
+        trace archive so record→replay reproduces the exact floats.
         """
-        self._lin_a = np.zeros(N_CHANNELS)
-        self._lin_b = np.zeros(N_CHANNELS)
-        self._ch_enabled = np.zeros(N_CHANNELS, dtype=bool)
-        self._ch_is_volt = np.zeros(N_CHANNELS, dtype=bool)
+        self._lin_a, self._lin_b, self._ch_enabled, self._ch_is_volt = (
+            protocol.conversion_tables(self.configs)
+        )
         # pairs with an enabled voltage/current channel: only these may hold
         # a last-observed value — disabled pairs must read 0, not a stale hold
         self._pair_has_v = np.zeros(MAX_PAIRS, dtype=bool)
         self._pair_has_i = np.zeros(MAX_PAIRS, dtype=bool)
         for sid, blk in enumerate(self.configs):
-            self._ch_enabled[sid] = blk.enabled
-            self._ch_is_volt[sid] = blk.type_code != 0
             if blk.enabled:
                 if blk.type_code != 0:
                     self._pair_has_v[sid // 2] = True
                 else:
                     self._pair_has_i[sid // 2] = True
-            self._lin_a[sid] = blk.vref / ADC_MAX / blk.sensitivity * blk.gain_cal
-            if blk.type_code == 0:
-                self._lin_b[sid] = (
-                    -blk.vref / 2.0 / blk.sensitivity - blk.offset_cal
-                ) * blk.gain_cal
-            else:
-                self._lin_b[sid] = -blk.offset_cal * blk.gain_cal
 
     # ------------------------------------------------------------ config access
     def _read_cstring(self) -> str:
@@ -180,7 +172,11 @@ class PowerSensor:
 
     def set_config(self, sid: int, block: SensorConfigBlock) -> None:
         self.device.write(CMD_WRITE_CONFIG + bytes([sid]) + block.pack())
-        self.configs[sid] = block
+        # mirror what the EEPROM actually stores: the packed block holds
+        # 32-bit floats, so keep the round-tripped values — otherwise the
+        # host converts with precision a config re-download (or a trace
+        # archive, which stores the packed blocks) could never reproduce
+        self.configs[sid] = SensorConfigBlock.unpack(block.pack())
         self._refresh_conversion()
 
     # ------------------------------------------------------------ streaming
@@ -196,6 +192,18 @@ class PowerSensor:
         with self._lock:
             self._pending_marker_chars.append(char[0])
         self.device.write(CMD_MARKER + char[:1].encode())
+
+    def expect_markers(self, chars) -> None:
+        """Queue marker chars for marker bits already in the stream.
+
+        The transport seam for replay: a `repro.replay.ReplayDevice` serves
+        a byte stream whose sensor-0 marker bits were recorded live, so no
+        `mark()` call precedes them — seeding the pending-char queue here
+        lets the receiver pair each replayed marker bit with its original
+        char instead of ``"?"``.
+        """
+        with self._lock:
+            self._pending_marker_chars.extend(c[0] for c in chars)
 
     # ------------------------------------------------------------ dump file
     def set_dump_file(self, path_or_file, every: int = 1) -> None:

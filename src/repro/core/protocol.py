@@ -115,6 +115,35 @@ class SensorConfigBlock:
         return (volts - self.offset_cal) * self.gain_cal
 
 
+def conversion_tables(
+    configs: "list[SensorConfigBlock]",
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Flatten `raw_to_physical` to per-channel affine ``phys = a·code + b``.
+
+    Returns ``(lin_a, lin_b, enabled, is_volt)`` over the 8 channels.  This
+    is THE conversion the host receiver applies (one fused multiply-add per
+    batch) — the trace archive uses the same tables to invert physical
+    values back to ADC codes, so a recorded frame re-played through the
+    receiver decodes to bit-identical floats.
+    """
+    n = len(configs)
+    lin_a = np.zeros(n)
+    lin_b = np.zeros(n)
+    enabled = np.zeros(n, dtype=bool)
+    is_volt = np.zeros(n, dtype=bool)
+    for sid, blk in enumerate(configs):
+        enabled[sid] = blk.enabled
+        is_volt[sid] = blk.type_code != 0
+        lin_a[sid] = blk.vref / ADC_MAX / blk.sensitivity * blk.gain_cal
+        if blk.type_code == 0:
+            lin_b[sid] = (
+                -blk.vref / 2.0 / blk.sensitivity - blk.offset_cal
+            ) * blk.gain_cal
+        else:
+            lin_b[sid] = -blk.offset_cal * blk.gain_cal
+    return lin_a, lin_b, enabled, is_volt
+
+
 # ---------------------------------------------------------------------------
 # packet encode / decode (vectorised)
 # ---------------------------------------------------------------------------

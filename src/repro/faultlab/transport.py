@@ -21,6 +21,7 @@ ledger records spans on the same relative timeline.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass, field
 from typing import Sequence
@@ -89,6 +90,21 @@ class FaultLedger:
         for a, b in sorted(self.dropped_spans + self.disconnect_spans):
             _merge_span(out, a, b)
         return out
+
+    # ------------------------------------------------------------ archiving
+    def to_json_dict(self) -> dict:
+        """JSON-safe dict for trace archives (`repro.replay.archive`)."""
+        d = dataclasses.asdict(self)
+        for key in ("dropped_spans", "stall_spans", "disconnect_spans", "drift_spans"):
+            d[key] = [list(s) for s in d[key]]
+        return d
+
+    @classmethod
+    def from_json_dict(cls, d: dict) -> "FaultLedger":
+        kw = dict(d)
+        for key in ("dropped_spans", "stall_spans", "disconnect_spans", "drift_spans"):
+            kw[key] = [tuple(s) for s in kw.get(key, [])]
+        return cls(**kw)
 
 
 class FaultyTransport:

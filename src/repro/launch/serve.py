@@ -79,7 +79,12 @@ def main(argv=None):
                     help="total joules budget for admission (0 = unlimited)")
     ap.add_argument("--cap-w", type=float, default=0.0,
                     help="fleet power cap for cap-strict admission (0 = uncapped)")
+    ap.add_argument("--record", default=None, metavar="PATH",
+                    help="record the fleet session to a trace archive "
+                         "(replayable via repro.replay; needs --fleet > 0)")
     args = ap.parse_args(argv)
+    if args.record and args.fleet <= 0:
+        ap.error("--record needs a sensor fleet (--fleet > 0)")
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     run = RunConfig(attn_impl="full", remat="none", lr_chunk=16)
@@ -130,8 +135,17 @@ def main(argv=None):
         ))
 
     fleet = None
+    recorder = None
     if args.fleet > 0:
         fleet = _make_fleet(args.fleet, modelled_watts, args.seed)
+        if args.record:
+            from repro.replay import SessionRecorder
+
+            recorder = SessionRecorder(
+                fleet,
+                meta={"launcher": "serve", "arch": args.arch,
+                      "policy": args.policy, "seed": args.seed},
+            )
 
     done_tokens = 0
     # measured per-wave energy, resolved incrementally (one wave after its
@@ -239,6 +253,10 @@ def main(argv=None):
             t_wave = now
             # this wave's advance flushed the previous wave's closing marker
             _resolve_wave(k - 1)
+            if recorder is not None:
+                # tap the rings once per wave: eviction between taps would
+                # punch (counted) holes in the archive
+                recorder.capture()
     n_waves = len(sched.waves)
     if fleet is not None and n_waves:
         _mark_fleet()  # closing bracket of the last wave
@@ -277,6 +295,10 @@ def main(argv=None):
         if missing:
             print(f"  ({missing} waves not individually attributed: "
                   f"ring history evicted)")
+        if recorder is not None:
+            archive = recorder.save(args.record, extra_meta={"waves": n_waves})
+            print(f"recorded {archive.n_frames} frames / {len(archive)} devices "
+                  f"to {args.record} (replay: repro.replay.ReplayFleet)")
         fleet.close()
 
 

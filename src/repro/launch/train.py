@@ -26,6 +26,39 @@ from repro.power import EnergyTelemetry, StepCost
 from repro.train import FaultInjector, LoopConfig, train
 
 
+def make_recording_attributor(path, telemetry, seed: int = 0, **kwargs):
+    """A `StepAttributor` that also archives its sensor session.
+
+    Taps the attributor's virtual-sensor ring after every step and writes
+    a `repro.replay` trace archive (markers included) on ``finish()`` —
+    so a training run's measured per-kernel energy can be re-attributed
+    offline from the archive instead of re-running the job.
+    """
+    from repro.attrib import StepAttributor
+    from repro.replay import SessionRecorder
+
+    class _RecordingAttributor(StepAttributor):
+        def __init__(self):
+            super().__init__(telemetry, seed=seed, **kwargs)
+            self.recorder = SessionRecorder(
+                self.sensor, name="train", meta={"launcher": "train", "seed": seed}
+            )
+
+        def on_step(self) -> None:
+            super().on_step()
+            self.recorder.capture()
+
+        def finish(self, min_coverage: float = 0.5):
+            # archive before super() closes (and releases) the sensor
+            self.sensor.poll()
+            archive = self.recorder.save(path, extra_meta={"steps": self._steps})
+            print(f"recorded {archive.n_frames} frames to {path} "
+                  f"(replay: repro.replay.replay_sensor)")
+            return super().finish(min_coverage)
+
+    return _RecordingAttributor()
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
@@ -44,6 +77,9 @@ def main(argv=None):
     ap.add_argument("--no-resume", action="store_true")
     ap.add_argument("--mesh", default=None, help="e.g. 2x4 -> (data=2, model=4)")
     ap.add_argument("--history-out", default=None)
+    ap.add_argument("--record", default=None, metavar="PATH",
+                    help="attribute every step through the virtual sensor and "
+                         "record the session to a replayable trace archive")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -86,8 +122,14 @@ def main(argv=None):
         accum_steps=args.accum,
     )
     injector = FaultInjector(args.crash_at) if args.crash_at >= 0 else None
+    attributor = (
+        make_recording_attributor(args.record, telemetry, seed=args.seed)
+        if args.record
+        else None
+    )
     result = train(model, data, opt_cfg, loop_cfg, telemetry=telemetry,
-                   fault_injector=injector, shardings=shardings)
+                   fault_injector=injector, shardings=shardings,
+                   attributor=attributor)
     summary = telemetry.summary()
     print(f"finished at step {result.stopped_at} (preempted={result.preempted})")
     if summary:

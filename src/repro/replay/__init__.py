@@ -1,0 +1,48 @@
+"""`repro.replay` — deterministic trace record/replay + golden corpus.
+
+Turns live 20 kHz sensor sessions into replayable artifacts:
+
+* `archive`  — versioned npz trace archives (`TraceArchive` /
+  `DeviceTrace`): ADC codes + integer-µs times + markers + config /
+  calibration blocks + optional faultlab `FaultLedger`, with loud
+  `ArchiveError` validation — never garbage frames;
+* `recorder` — `SessionRecorder`: taps `PowerSensor` / `FleetMonitor`
+  ring buffers incrementally without perturbing the receive path;
+* `replay`   — `ReplayDevice` (the `VirtualDevice` transport surface
+  over an archive, played through the *real* host receiver at wall-clock
+  or max speed), `replay_sensor`, and `ReplayFleet` (a reconstructed
+  `FleetMonitor` session);
+* `golden`   — the golden-corpus harness: shipped scenarios recorded
+  once, metrics checked against committed tolerance manifests
+  (`tools/regen_goldens.py` regenerates them).
+
+The round-trip contract (enforced by the replay test tier and the
+golden CI job): record → archive → replay reproduces per-kernel
+attributed energy and fleet window power within 1e-9 relative for clean
+*and* chaos sessions.
+"""
+from .archive import (
+    ARCHIVE_VERSION,
+    ArchiveError,
+    DeviceTrace,
+    TraceArchive,
+    encode_device,
+    load_bytes,
+    save_bytes,
+)
+from .recorder import SessionRecorder
+from .replay import ReplayDevice, ReplayFleet, replay_sensor
+
+__all__ = [
+    "ARCHIVE_VERSION",
+    "ArchiveError",
+    "DeviceTrace",
+    "TraceArchive",
+    "encode_device",
+    "load_bytes",
+    "save_bytes",
+    "SessionRecorder",
+    "ReplayDevice",
+    "ReplayFleet",
+    "replay_sensor",
+]

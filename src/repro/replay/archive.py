@@ -1,0 +1,433 @@
+"""Versioned binary trace archive: `FrameRing` contents, captured for keeps.
+
+An archive is an npz container (``np.savez_compressed``) holding one
+:class:`DeviceTrace` per recorded device plus a JSON header.  The design
+goal is **bit-identical replay**: a recorded 20 kHz session must play back
+through the *real* host receiver (`repro.replay.replay.ReplayDevice`) and
+decode to exactly the floats the live run produced.  Two choices make
+that possible:
+
+* frames are stored as **10-bit ADC codes**, not physical floats.  Every
+  value the receiver ever puts in a ring is ``a·code + b`` for an integer
+  code and the per-channel affine tables of `protocol.conversion_tables`
+  (forward-filled frames repeat the previous code) — so the inversion
+  ``code = round((phys − b) / a)`` is exact, and re-applying the identical
+  multiply-add on decode *or* on replay-through-the-receiver reproduces
+  the float bit for bit.  Values that do not invert exactly (possible
+  only for synthetic rings that never went through the receiver) are
+  clamped to the nearest code and counted loudly in ``n_quantised``;
+* frame times are stored as **integer microseconds** — exactly the
+  device-timestamp reconstruction the receiver computes — so the replay
+  transport can re-emit the original 10-bit timestamp chain and the
+  receiver's wrap arithmetic (including its arrival-clock re-anchoring
+  across delivery gaps) lands every frame back on its recorded time.
+
+The header is versioned; anything short of a fully consistent archive —
+truncated file, corrupted member, unknown version, out-of-range codes,
+non-monotonic times, markers pointing at missing frames — raises
+:class:`ArchiveError` instead of yielding garbage frames.
+
+Sensor config blocks (which carry the calibration tables: ``offset_cal``
+/ ``gain_cal`` per channel) and the firmware version string ride along
+per device, so replay rebuilds the exact conversion the live host used.
+A `repro.faultlab` :class:`~repro.faultlab.transport.FaultLedger` is
+embedded per device when the recorded transport carried one.
+"""
+from __future__ import annotations
+
+import io
+import json
+import zipfile
+import zlib
+from dataclasses import dataclass, field
+from struct import error as struct_error
+
+#: every low-level failure mode of reading a damaged npz member
+_READ_ERRORS = (
+    OSError,
+    ValueError,
+    EOFError,
+    zipfile.BadZipFile,
+    zlib.error,
+    struct_error,
+)
+
+import numpy as np
+
+from repro.core.protocol import (
+    ADC_MAX,
+    CONFIG_BLOCK_SIZE,
+    SensorConfigBlock,
+    conversion_tables,
+)
+from repro.stream.ring import FrameBlock
+
+ARCHIVE_MAGIC = "ps3-trace"
+ARCHIVE_VERSION = 1
+
+#: pairs per device — mirrors `repro.core.host.MAX_PAIRS` without importing
+#: the host (the archive layer must stay import-light for tools)
+N_CHANNELS = 8
+MAX_PAIRS = N_CHANNELS // 2
+
+
+class ArchiveError(ValueError):
+    """A trace archive could not be read/validated.  Always loud, never
+    silently-degraded frames; carries the archive version when known."""
+
+    def __init__(self, message: str, version: int | None = None):
+        if version is not None:
+            message = f"{message} (archive version {version})"
+        super().__init__(message)
+        self.version = version
+
+
+@dataclass
+class DeviceTrace:
+    """One device's recorded session: frames, markers, config, ledger."""
+
+    name: str
+    configs: list[SensorConfigBlock]
+    fw_version: str
+    times_us: np.ndarray  # (n,) int64, the receiver's reconstructed clock
+    codes: np.ndarray  # (n, n_enabled) uint16 ADC codes, one column per channel
+    channel_ids: np.ndarray  # (n_enabled,) int64 sensor ids of the columns
+    marker_chars: str = ""
+    marker_times_us: np.ndarray = field(default_factory=lambda: np.empty(0, np.int64))
+    seq0: int = 0  # ring sequence number of the first recorded frame
+    lost_frames: int = 0  # frames evicted between recorder captures
+    n_quantised: int = 0  # values that did not invert to a code exactly
+    n_time_quantised: int = 0  # times that were not integer microseconds
+    dropped_markers: int = 0  # marker events outside the recorded span
+    fault_ledger: object | None = None  # repro.faultlab FaultLedger, if any
+
+    def __len__(self) -> int:
+        return int(self.times_us.size)
+
+    @property
+    def times_s(self) -> np.ndarray:
+        # identical arithmetic to the receiver's `times / 1e6`
+        return self.times_us / 1e6
+
+    @property
+    def markers(self) -> list[tuple[str, float]]:
+        """The `PowerSensor.markers` view of the recorded marker stream."""
+        t = self.marker_times_us / 1e6
+        return list(zip(self.marker_chars, t.tolist()))
+
+    @property
+    def marker_frames(self) -> np.ndarray:
+        """Frame index each marker bit rode on (validated at load time)."""
+        return np.searchsorted(self.times_us, self.marker_times_us)
+
+    def decode(self) -> FrameBlock:
+        """Vectorised decode to a chronological `FrameBlock` (copies).
+
+        Applies the exact receiver conversion (``codes · a + b`` per
+        channel column) so a decoded archive equals the live ring bit for
+        bit; ``watts`` is recomputed as ``volts · amps``, again matching
+        the receiver.
+        """
+        n = len(self)
+        lin_a, lin_b, _en, is_volt = conversion_tables(self.configs)
+        volts = np.zeros((n, MAX_PAIRS))
+        amps = np.zeros((n, MAX_PAIRS))
+        codes = self.codes.astype(np.int64)
+        for j, sid in enumerate(self.channel_ids.tolist()):
+            col = codes[:, j] * lin_a[sid] + lin_b[sid]
+            (volts if is_volt[sid] else amps)[:, sid >> 1] = col
+        return FrameBlock(
+            seq0=self.seq0,
+            times_s=self.times_s,
+            volts=volts,
+            amps=amps,
+            watts=volts * amps,
+        )
+
+    def to_ring(self, capacity: int | None = None):
+        """Materialise a `FrameRing` holding the whole recorded session."""
+        from repro.stream.ring import FrameRing
+
+        block = self.decode()
+        ring = FrameRing(capacity or max(len(self), 1), MAX_PAIRS)
+        ring.append(block.times_s, block.volts, block.amps, block.watts)
+        return ring
+
+
+def encode_device(
+    name: str,
+    configs: list[SensorConfigBlock],
+    fw_version: str,
+    times_s: np.ndarray,
+    volts: np.ndarray,
+    amps: np.ndarray,
+    markers: list[tuple[str, float]] | None = None,
+    seq0: int = 0,
+    lost_frames: int = 0,
+    fault_ledger: object | None = None,
+) -> DeviceTrace:
+    """Vectorised encode of decoded frames back to codes + integer µs.
+
+    The inverse of the receiver's affine conversion, per enabled channel.
+    Inversions that do not reproduce the input float exactly are clamped
+    to the nearest code and counted (``n_quantised`` / ``n_time_quantised``
+    / ``dropped_markers``) — a lossy encode is always visible, never
+    silent.
+    """
+    times_s = np.asarray(times_s, dtype=np.float64)
+    volts = np.asarray(volts, dtype=np.float64)
+    amps = np.asarray(amps, dtype=np.float64)
+    n = times_s.size
+    lin_a, lin_b, enabled, is_volt = conversion_tables(configs)
+    ch_ids = np.flatnonzero(enabled)
+
+    times_us = np.round(times_s * 1e6).astype(np.int64)
+    n_time_quantised = int(np.count_nonzero(times_us / 1e6 != times_s))
+
+    codes = np.zeros((n, ch_ids.size), dtype=np.uint16)
+    n_quantised = 0
+    for j, sid in enumerate(ch_ids.tolist()):
+        phys = (volts if is_volt[sid] else amps)[:, sid >> 1]
+        a, b = lin_a[sid], lin_b[sid]
+        if a == 0.0:
+            raw = np.zeros(n)
+        else:
+            raw = (phys - b) / a
+        col = np.clip(np.round(raw), 0, ADC_MAX).astype(np.int64)
+        n_quantised += int(np.count_nonzero(col * a + b != phys))
+        codes[:, j] = col.astype(np.uint16)
+
+    mk_chars: list[str] = []
+    mk_times: list[int] = []
+    dropped_markers = 0
+    for c, t in markers or []:
+        t_us = int(round(t * 1e6))
+        i = int(np.searchsorted(times_us, t_us))
+        if i < n and times_us[i] == t_us and (t_us / 1e6) == t:
+            mk_chars.append(c[0])
+            mk_times.append(t_us)
+        else:
+            # marker outside the recorded span (evicted before the first
+            # capture) or off the frame grid: counted, not fabricated
+            dropped_markers += 1
+
+    return DeviceTrace(
+        name=name,
+        configs=list(configs),
+        fw_version=fw_version,
+        times_us=times_us,
+        codes=codes,
+        channel_ids=ch_ids.astype(np.int64),
+        marker_chars="".join(mk_chars),
+        marker_times_us=np.asarray(mk_times, dtype=np.int64),
+        seq0=int(seq0),
+        lost_frames=int(lost_frames),
+        n_quantised=n_quantised,
+        n_time_quantised=n_time_quantised,
+        dropped_markers=dropped_markers,
+        fault_ledger=fault_ledger,
+    )
+
+
+# --------------------------------------------------------------------------
+# the archive container
+# --------------------------------------------------------------------------
+@dataclass
+class TraceArchive:
+    """A multi-device recorded session, save/load-able as one npz file."""
+
+    devices: dict[str, DeviceTrace] = field(default_factory=dict)
+    #: free-form session metadata (monitor window_s, launcher args, ...)
+    meta: dict = field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return len(self.devices)
+
+    @property
+    def n_frames(self) -> int:
+        return sum(len(tr) for tr in self.devices.values())
+
+    def add(self, trace: DeviceTrace) -> None:
+        if trace.name in self.devices:
+            raise ValueError(f"duplicate device {trace.name!r} in archive")
+        self.devices[trace.name] = trace
+
+    # ------------------------------------------------------------------ save
+    def save(self, path_or_file) -> None:
+        header: dict = {
+            "magic": ARCHIVE_MAGIC,
+            "version": ARCHIVE_VERSION,
+            "meta": self.meta,
+            "devices": [],
+        }
+        arrays: dict[str, np.ndarray] = {}
+        for i, (name, tr) in enumerate(self.devices.items()):
+            ledger = tr.fault_ledger
+            header["devices"].append(
+                {
+                    "name": name,
+                    "key": f"d{i}",
+                    "fw_version": tr.fw_version,
+                    "seq0": tr.seq0,
+                    "lost_frames": tr.lost_frames,
+                    "n_quantised": tr.n_quantised,
+                    "n_time_quantised": tr.n_time_quantised,
+                    "dropped_markers": tr.dropped_markers,
+                    "marker_chars": tr.marker_chars,
+                    "fault_ledger": (
+                        ledger.to_json_dict() if ledger is not None else None
+                    ),
+                }
+            )
+            arrays[f"d{i}.times_us"] = tr.times_us
+            arrays[f"d{i}.codes"] = tr.codes
+            arrays[f"d{i}.channel_ids"] = tr.channel_ids
+            arrays[f"d{i}.marker_times_us"] = tr.marker_times_us
+            arrays[f"d{i}.config"] = np.frombuffer(
+                b"".join(blk.pack() for blk in tr.configs), dtype=np.uint8
+            ).reshape(len(tr.configs), CONFIG_BLOCK_SIZE)
+        arrays["header"] = np.asarray(json.dumps(header))
+        np.savez_compressed(path_or_file, **arrays)
+
+    # ------------------------------------------------------------------ load
+    @classmethod
+    def load(cls, path_or_file) -> "TraceArchive":
+        try:
+            data = np.load(path_or_file, allow_pickle=False)
+        except _READ_ERRORS as exc:
+            raise ArchiveError(f"unreadable trace archive: {exc}") from exc
+        if not hasattr(data, "files"):  # a bare .npy array, not an npz
+            raise ArchiveError("not an npz container — not a ps3 trace archive")
+        with data:
+            return cls._from_npz(data)
+
+    @classmethod
+    def _from_npz(cls, data) -> "TraceArchive":
+        if "header" not in data.files:
+            raise ArchiveError("missing archive header — not a ps3 trace archive")
+        try:
+            header = json.loads(str(data["header"][()]))
+        except _READ_ERRORS as exc:
+            raise ArchiveError(f"corrupt archive header: {exc}") from exc
+        if not isinstance(header, dict) or header.get("magic") != ARCHIVE_MAGIC:
+            raise ArchiveError("bad magic — not a ps3 trace archive")
+        version = header.get("version")
+        if version != ARCHIVE_VERSION:
+            raise ArchiveError(
+                f"unsupported trace archive version {version!r} "
+                f"(this reader supports version {ARCHIVE_VERSION})",
+                version=version if isinstance(version, int) else None,
+            )
+        out = cls(meta=dict(header.get("meta", {})))
+        from repro.faultlab.transport import FaultLedger
+
+        for dev in header.get("devices", []):
+            key, name = dev["key"], dev["name"]
+            try:
+                trace = cls._load_device(data, key, dev, FaultLedger)
+            except ArchiveError:
+                raise
+            except KeyError as exc:
+                raise ArchiveError(
+                    f"device {name!r}: missing archive member {exc}", version
+                ) from exc
+            except _READ_ERRORS as exc:
+                raise ArchiveError(
+                    f"device {name!r}: corrupt archive member: {exc}", version
+                ) from exc
+            _validate_trace(trace, version)
+            out.add(trace)
+        return out
+
+    @staticmethod
+    def _load_device(data, key: str, dev: dict, FaultLedger) -> "DeviceTrace":
+        times_us = data[f"{key}.times_us"]
+        codes = data[f"{key}.codes"]
+        channel_ids = data[f"{key}.channel_ids"]
+        marker_times_us = data[f"{key}.marker_times_us"]
+        config_raw = data[f"{key}.config"]
+        name = dev["name"]
+        ledger_d = dev.get("fault_ledger")
+        return DeviceTrace(
+            name=name,
+            configs=[
+                SensorConfigBlock.unpack(row.tobytes()) for row in config_raw
+            ],
+            fw_version=str(dev.get("fw_version", "")),
+            times_us=times_us.astype(np.int64),
+            codes=codes.astype(np.uint16),
+            channel_ids=channel_ids.astype(np.int64),
+            marker_chars=str(dev.get("marker_chars", "")),
+            marker_times_us=marker_times_us.astype(np.int64),
+            seq0=int(dev.get("seq0", 0)),
+            lost_frames=int(dev.get("lost_frames", 0)),
+            n_quantised=int(dev.get("n_quantised", 0)),
+            n_time_quantised=int(dev.get("n_time_quantised", 0)),
+            dropped_markers=int(dev.get("dropped_markers", 0)),
+            fault_ledger=(
+                FaultLedger.from_json_dict(ledger_d)
+                if ledger_d is not None
+                else None
+            ),
+        )
+
+
+def _validate_trace(tr: DeviceTrace, version: int) -> None:
+    """Consistency checks — a corrupt archive fails here, loudly."""
+    n = tr.times_us.size
+    if tr.times_us.ndim != 1 or tr.codes.ndim != 2:
+        raise ArchiveError(f"device {tr.name!r}: malformed frame arrays", version)
+    if tr.codes.shape != (n, tr.channel_ids.size):
+        raise ArchiveError(
+            f"device {tr.name!r}: codes shape {tr.codes.shape} does not match "
+            f"{n} frames × {tr.channel_ids.size} channels",
+            version,
+        )
+    if len(tr.configs) != N_CHANNELS:
+        raise ArchiveError(
+            f"device {tr.name!r}: expected {N_CHANNELS} sensor config blocks, "
+            f"got {len(tr.configs)}",
+            version,
+        )
+    if tr.channel_ids.size and (
+        tr.channel_ids.min() < 0 or tr.channel_ids.max() >= N_CHANNELS
+    ):
+        raise ArchiveError(f"device {tr.name!r}: channel id out of range", version)
+    if np.any(tr.codes > ADC_MAX):
+        raise ArchiveError(
+            f"device {tr.name!r}: ADC code above {ADC_MAX} — corrupt frames",
+            version,
+        )
+    if n > 1 and np.any(np.diff(tr.times_us) <= 0):
+        raise ArchiveError(
+            f"device {tr.name!r}: non-monotonic frame times — corrupt clock",
+            version,
+        )
+    if len(tr.marker_chars) != tr.marker_times_us.size:
+        raise ArchiveError(
+            f"device {tr.name!r}: marker chars/times length mismatch", version
+        )
+    if tr.marker_times_us.size:
+        if n == 0:
+            raise ArchiveError(
+                f"device {tr.name!r}: markers present but no frames recorded",
+                version,
+            )
+        idx = np.searchsorted(tr.times_us, tr.marker_times_us)
+        ok = (idx < n) & (tr.times_us[np.minimum(idx, n - 1)] == tr.marker_times_us)
+        if not bool(np.all(ok)):
+            raise ArchiveError(
+                f"device {tr.name!r}: marker time not on a recorded frame",
+                version,
+            )
+
+
+def save_bytes(archive: TraceArchive) -> bytes:
+    """The archive as npz bytes (tests, in-memory round-trips)."""
+    buf = io.BytesIO()
+    archive.save(buf)
+    return buf.getvalue()
+
+
+def load_bytes(raw: bytes) -> TraceArchive:
+    return TraceArchive.load(io.BytesIO(raw))

@@ -1,0 +1,458 @@
+"""Golden-corpus harness: shipped scenarios, recorded once, gated forever.
+
+Each :class:`GoldenScenario` deterministically records a short live
+session — a clean serve wave, a governor load step, and two fault-lab
+chaos runs — into a trace archive, and defines the metric set that pins
+its behaviour: per-device attributed energy and coverage, per-wave
+marker energies, fleet window power, and the injected `FaultLedger`
+ground truth.  Governor control-quality numbers (time-over-cap, settle
+time, switch count) are **live-only** metrics: they score the actuation
+log, which a sensor archive cannot reproduce, so they are pinned at
+regeneration time and re-checked whenever the corpus is regenerated.
+
+The committed corpus (``tests/goldens/``) is mini — every archive plus
+the tolerance manifest must stay under :data:`MAX_CORPUS_BYTES` total —
+and is enforced two ways:
+
+* the ``replay`` test tier replays each committed archive through the
+  real receiver and asserts every (non-live-only) metric against the
+  committed tolerance manifest;
+* ``tools/regen_goldens.py --check`` re-records every scenario live and
+  fails when the fresh session drifts outside the manifest tolerances —
+  stale goldens fail CI instead of rotting.
+
+`write_goldens` additionally enforces the subsystem's round-trip
+invariant at regeneration time: live metrics and replayed metrics must
+agree within :data:`ROUNDTRIP_RTOL` for every scenario, chaos included.
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Callable
+
+from .archive import TraceArchive
+from .recorder import SessionRecorder
+from .replay import ReplayFleet
+
+MANIFEST_NAME = "manifest.json"
+MANIFEST_VERSION = 1
+#: the whole committed corpus (archives + manifest) must stay mini
+MAX_CORPUS_BYTES = 200_000
+#: live ↔ replay agreement required of every scenario at regen time
+ROUNDTRIP_RTOL = 1e-9
+
+
+class GoldenError(RuntimeError):
+    """A golden archive/manifest is missing, malformed, or stale."""
+
+
+# --------------------------------------------------------------------------
+# metrics
+# --------------------------------------------------------------------------
+def session_metrics(
+    monitor,
+    wave_char: str | None = None,
+    window_s: float = 0.05,
+    since: dict[str, float] | None = None,
+) -> dict[str, float]:
+    """The sensor-derived metric set, computable live *or* on replay.
+
+    Everything here reads the same ring/markers surface on both sides of
+    the round trip: whole-span attributed energy (gap-aware, so chaos
+    coverage shows up as a pinned number), per-wave marker energies,
+    trailing-window power, and the fleet windowed sum.  ``since`` clips
+    each device's span to the recorded start (`archive_since`) so live
+    rings holding pre-recording history (calibration) score the same
+    frames the archive holds.
+    """
+    from repro.attrib import KernelSpan, attribute_block, marker_spans
+
+    out: dict[str, float] = {}
+    for name in monitor.names:
+        ps = monitor[name]
+        t0 = (since or {}).get(name)
+        read = (
+            (lambda ps=ps: ps.ring.latest())
+            if t0 is None
+            else (lambda ps=ps, t0=t0: ps.ring.window(t0, math.inf))
+        )
+        block = monitor._locked_ring_read(ps, read)
+        out[f"{name}.n_frames"] = float(len(block))
+        if len(block) >= 2:
+            led = attribute_block(
+                block,
+                [KernelSpan("session", float(block.times_s[0]), float(block.times_s[-1]))],
+            )
+            ent = led.entries.get("session")
+            if ent is not None:
+                out[f"{name}.energy_j"] = ent.energy_j
+                out[f"{name}.coverage"] = ent.coverage_frac
+                out[f"{name}.peak_w"] = ent.peak_w
+            out[f"{name}.tail_mean_w"] = monitor._locked_ring_read(
+                ps, lambda ps=ps: ps.ring.tail_mean_watts(window_s)
+            )
+            if wave_char is not None:
+                waves = attribute_block(block, marker_spans(ps.markers, wave_char))
+                for wave_name, went in sorted(waves.entries.items()):
+                    out[f"{name}.{wave_name}_j"] = went.energy_j
+    out["fleet.window_power_w"] = monitor.window_power_w(window_s, poll=False)
+    return out
+
+
+def archive_since(archive: TraceArchive) -> dict[str, float]:
+    """Per-device recorded-span start times, for `session_metrics`."""
+    return {
+        name: float(tr.times_s[0])
+        for name, tr in archive.devices.items()
+        if len(tr)
+    }
+
+
+def ledger_metrics(archive: TraceArchive) -> dict[str, float]:
+    """Injected ground truth pinned from the archived `FaultLedger`s."""
+    out: dict[str, float] = {}
+    for name, tr in archive.devices.items():
+        led = tr.fault_ledger
+        if led is None:
+            continue
+        out[f"{name}.delivered_frac"] = led.delivered_frac
+        out[f"{name}.dropped_s"] = led.dropped_s
+        out[f"{name}.corrupted_bytes"] = float(led.corrupted_bytes)
+        out[f"{name}.lost_writes"] = float(led.lost_writes)
+    return out
+
+
+# --------------------------------------------------------------------------
+# the shipped scenarios
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class GoldenScenario:
+    name: str
+    description: str
+    wave_char: str | None
+    window_s: float
+    record: Callable[[], tuple[TraceArchive, dict[str, float]]]
+
+
+def _record_serve_wave() -> tuple[TraceArchive, dict[str, float]]:
+    """A clean serving session: 6 marker-bracketed request waves."""
+    from repro.core import ConstantLoad, SquareWaveLoad
+    from repro.stream import make_virtual_fleet
+
+    fleet = make_virtual_fleet(
+        [
+            ConstantLoad(12.0, 3.2),
+            SquareWaveLoad(amps_lo=2.0, amps_hi=6.5, freq_hz=120.0),
+        ],
+        window_s=0.05,
+        seed=101,
+        ring_capacity=1 << 13,
+    )
+    rec = SessionRecorder(fleet)
+    for _ in range(6):
+        fleet.mark_all("W")
+        fleet.run_for(0.025, chunk_s=0.005)
+        rec.capture()
+    fleet.mark_all("W")  # closing bracket of the last wave
+    fleet.run_for(0.005, chunk_s=0.005)
+    archive = rec.finalize(extra_meta={"scenario": "serve-wave"})
+    metrics = session_metrics(fleet, "W", 0.05)
+    fleet.close()
+    return archive, metrics
+
+
+def _record_governor_step() -> tuple[TraceArchive, dict[str, float]]:
+    """A power-cap governor riding out a load step on a calibrated plant."""
+    from repro.sched import (
+        GovernorConfig,
+        OperatingGrid,
+        PowerCapGovernor,
+        VirtualPlant,
+        decode_cost_of_batch,
+        settle_time,
+        time_over_cap,
+    )
+
+    cost = decode_cost_of_batch(2.0 * 20e6, 2.0 * 20e6, tokens_per_slot_step=4)
+    grid = OperatingGrid(cost, n_layers=2, batches=(1, 2, 4, 8), tokens_per_slot_step=4)
+    plant = VirtualPlant(grid, n_devices=2, seed=31, calibrate_samples=2000)
+    cap_w = 0.72 * 2 * grid.max_watts
+    cfg = GovernorConfig(cap_w=cap_w, kp=0.15, ki=80.0)
+    rec = SessionRecorder(plant.fleet)
+    gov = PowerCapGovernor(plant, cfg)
+    duration_s, t_step_s = 0.2, 0.06
+    gov.run(duration_s, demand_of_t=lambda t: 0 if t < t_step_s else 8)
+    archive = rec.finalize(
+        extra_meta={"scenario": "governor-step", "cap_w": cap_w}
+    )
+    metrics = session_metrics(plant.fleet, None, 0.005, since=archive_since(archive))
+    # live-only: the plant's ground-truth actuation log does not replay
+    metrics["live.time_over_cap"] = time_over_cap(
+        plant.log, cap_w, 0.0, duration_s, tol=0.02
+    )
+    metrics["live.settle_s"] = settle_time(
+        plant.log, cap_w, t_step_s, duration_s, tol=0.02
+    )
+    metrics["live.n_switches"] = float(gov.n_switches)
+    plant.close()
+    return archive, metrics
+
+
+def _record_chaos(scenario_key: str, seed: int):
+    """One fault-lab scenario injected into a recorded 2-device fleet."""
+    from repro.core import ConstantLoad
+    from repro.faultlab import inject, shipped_scenarios
+    from repro.stream import make_virtual_fleet
+
+    scen = shipped_scenarios(0.3)[scenario_key]
+    fleet = make_virtual_fleet(
+        [ConstantLoad(12.0, 3.0), ConstantLoad(12.0, 4.2)],
+        window_s=0.02,
+        seed=seed,
+        ring_capacity=1 << 14,
+    )
+    inject(fleet, scen)
+    rec = SessionRecorder(fleet)
+    t, next_mark = 0.0, 0.0
+    while t < 0.3 - 1e-12:
+        if t >= next_mark - 1e-12:
+            fleet.mark_all("C")
+            next_mark += 0.05
+        fleet.advance(0.002)
+        t += 0.002
+        rec.capture()
+    fleet.poll_all()
+    archive = rec.finalize(extra_meta={"scenario": scenario_key})
+    metrics = session_metrics(fleet, "C", 0.02)
+    metrics.update(ledger_metrics(archive))
+    fleet.close()
+    return archive, metrics
+
+
+SCENARIOS: dict[str, GoldenScenario] = {
+    "serve-wave": GoldenScenario(
+        name="serve-wave",
+        description="clean serving session, 6 marker-bracketed waves",
+        wave_char="W",
+        window_s=0.05,
+        record=_record_serve_wave,
+    ),
+    "governor-step": GoldenScenario(
+        name="governor-step",
+        description="power-cap governor load step on a calibrated plant",
+        wave_char=None,
+        window_s=0.005,
+        record=_record_governor_step,
+    ),
+    "chaos-dropout": GoldenScenario(
+        name="chaos-dropout",
+        description="faultlab dropout-burst with periodic markers",
+        wave_char="C",
+        window_s=0.02,
+        record=lambda: _record_chaos("dropout-burst", 71),
+    ),
+    "chaos-disconnect": GoldenScenario(
+        name="chaos-disconnect",
+        description="faultlab disconnect-cycle with periodic markers",
+        wave_char="C",
+        window_s=0.02,
+        record=lambda: _record_chaos("disconnect-cycle", 72),
+    ),
+}
+
+
+# --------------------------------------------------------------------------
+# replay / check / write
+# --------------------------------------------------------------------------
+def replay_session_metrics(
+    scenario: GoldenScenario, archive: TraceArchive
+) -> dict[str, float]:
+    """Max-speed replay through the real receiver → the same metric set."""
+    fleet = ReplayFleet(archive, window_s=scenario.window_s)
+    try:
+        fleet.drain()
+        metrics = session_metrics(
+            fleet.monitor,
+            scenario.wave_char,
+            scenario.window_s,
+            since=archive_since(archive),
+        )
+    finally:
+        fleet.close()
+    metrics.update(ledger_metrics(archive))
+    return metrics
+
+
+def _tolerance(key: str) -> tuple[float, float]:
+    """(rtol, atol) for one manifest metric.
+
+    Sensor/ledger metrics replay deterministically — 1e-9 relative is
+    the round-trip contract.  Live-only governor numbers are threshold
+    metrics (a settle time jumps by whole control ticks), so they get
+    physical tolerances instead.
+    """
+    if key.startswith("live."):
+        atol = {
+            "live.time_over_cap": 0.01,
+            "live.settle_s": 2e-3,
+            "live.n_switches": 1.0,
+        }.get(key, 1e-6)
+        return 1e-6, atol
+    return ROUNDTRIP_RTOL, 1e-12
+
+
+def _within(value: float, expected: float, rtol: float, atol: float) -> bool:
+    if math.isnan(value) or math.isnan(expected):
+        return False
+    return abs(value - expected) <= atol + rtol * abs(expected)
+
+
+def write_goldens(out_dir, names=None) -> dict:
+    """Record every scenario, verify the round trip, commit the corpus.
+
+    Raises :class:`GoldenError` if any scenario's live and replayed
+    metrics disagree beyond :data:`ROUNDTRIP_RTOL`, or if the resulting
+    corpus exceeds :data:`MAX_CORPUS_BYTES`.
+    """
+    out_dir = Path(out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    # partial regeneration merges into the committed manifest — a
+    # --scenario run must never drop the other scenarios' pins
+    if (out_dir / MANIFEST_NAME).exists():
+        manifest = load_manifest(out_dir)
+    else:
+        manifest = {"version": MANIFEST_VERSION, "scenarios": {}}
+    for name in names or SCENARIOS:
+        scenario = SCENARIOS[name]
+        archive, live = scenario.record()
+        replayed = replay_session_metrics(scenario, archive)
+        for key, rep_v in replayed.items():
+            live_v = live.get(key)
+            if live_v is not None and not _within(
+                rep_v, live_v, ROUNDTRIP_RTOL, 1e-12
+            ):
+                raise GoldenError(
+                    f"{name}: round-trip violation on {key}: "
+                    f"live {live_v!r} vs replay {rep_v!r}"
+                )
+        archive_name = f"{name}.npz"
+        archive.save(out_dir / archive_name)
+        metrics = dict(replayed)
+        metrics.update({k: v for k, v in live.items() if k.startswith("live.")})
+        manifest["scenarios"][name] = {
+            "archive": archive_name,
+            "description": scenario.description,
+            "metrics": {
+                k: {"value": v, "rtol": _tolerance(k)[0], "atol": _tolerance(k)[1]}
+                for k, v in sorted(metrics.items())
+            },
+        }
+    (out_dir / MANIFEST_NAME).write_text(json.dumps(manifest, indent=1) + "\n")
+    total = corpus_bytes(out_dir)
+    if total > MAX_CORPUS_BYTES:
+        raise GoldenError(
+            f"golden corpus is {total} bytes — exceeds the "
+            f"{MAX_CORPUS_BYTES}-byte mini-corpus budget"
+        )
+    return manifest
+
+
+def corpus_bytes(golden_dir) -> int:
+    golden_dir = Path(golden_dir)
+    return sum(
+        p.stat().st_size
+        for p in list(golden_dir.glob("*.npz")) + [golden_dir / MANIFEST_NAME]
+        if p.exists()
+    )
+
+
+def load_manifest(golden_dir) -> dict:
+    path = Path(golden_dir) / MANIFEST_NAME
+    if not path.exists():
+        raise GoldenError(f"no golden manifest at {path}")
+    manifest = json.loads(path.read_text())
+    if manifest.get("version") != MANIFEST_VERSION:
+        raise GoldenError(
+            f"unsupported golden manifest version {manifest.get('version')!r}"
+        )
+    return manifest
+
+
+def _compare(
+    name: str, got: dict[str, float], entry: dict, skip_live: bool
+) -> list[str]:
+    errors = []
+    for key, spec in entry["metrics"].items():
+        if skip_live and key.startswith("live."):
+            continue
+        if key not in got:
+            errors.append(f"{name}: metric {key} missing from session")
+            continue
+        if not _within(got[key], spec["value"], spec["rtol"], spec["atol"]):
+            errors.append(
+                f"{name}: {key} = {got[key]!r}, manifest pins "
+                f"{spec['value']!r} (rtol {spec['rtol']:g}, atol {spec['atol']:g})"
+            )
+    extra = {
+        k
+        for k in got
+        if k not in entry["metrics"] and not (skip_live and k.startswith("live."))
+    }
+    for key in sorted(extra):
+        errors.append(f"{name}: unpinned metric {key} — regenerate the manifest")
+    return errors
+
+
+def check_goldens(golden_dir, names=None, rerecord: bool = False) -> list[str]:
+    """Verify the committed corpus; returns a list of violations.
+
+    Always: replay every committed archive through the real receiver and
+    compare against the manifest.  With ``rerecord=True`` (the
+    ``regen_goldens.py --check`` mode) each scenario is also re-recorded
+    live and compared — catching goldens gone stale relative to the code
+    that produced them, live-only governor metrics included.
+    """
+    golden_dir = Path(golden_dir)
+    manifest = load_manifest(golden_dir)
+    errors: list[str] = []
+    wanted = set(names) if names is not None else None
+    for name, entry in manifest["scenarios"].items():
+        if wanted is not None and name not in wanted:
+            continue
+        scenario = SCENARIOS.get(name)
+        if scenario is None:
+            errors.append(f"{name}: manifest names an unknown scenario")
+            continue
+        path = golden_dir / entry["archive"]
+        if not path.exists():
+            errors.append(f"{name}: missing golden archive {path.name}")
+            continue
+        archive = TraceArchive.load(path)
+        replayed = replay_session_metrics(scenario, archive)
+        errors.extend(_compare(f"{name} (replay)", replayed, entry, skip_live=True))
+        if rerecord:
+            fresh_archive, fresh_live = scenario.record()
+            fresh = replay_session_metrics(scenario, fresh_archive)
+            fresh.update(
+                {k: v for k, v in fresh_live.items() if k.startswith("live.")}
+            )
+            errors.extend(
+                _compare(f"{name} (re-record)", fresh, entry, skip_live=False)
+            )
+    missing = set(names or SCENARIOS) - set(manifest["scenarios"])
+    for name in sorted(missing):
+        errors.append(f"{name}: scenario not in the committed manifest")
+    total = corpus_bytes(golden_dir)
+    if total > MAX_CORPUS_BYTES:
+        errors.append(
+            f"golden corpus is {total} bytes > {MAX_CORPUS_BYTES}-byte budget"
+        )
+    return errors
+
+
+def default_golden_dir() -> Path:
+    """``tests/goldens`` relative to the repo root this package lives in."""
+    return Path(__file__).resolve().parents[3] / "tests" / "goldens"

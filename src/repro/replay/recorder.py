@@ -1,0 +1,143 @@
+"""SessionRecorder: tap live ring buffers into a trace archive.
+
+The recorder sits entirely on the consumer side of the 20 kHz pipeline:
+it never touches the transport, never adds work to `PowerSensor.poll`,
+and reads rings the same way every other consumer does — incremental
+``ring.since(seq)`` blocks taken under the receiver lock.  ``capture()``
+is called opportunistically (per request wave in `launch.serve`, per
+step in `launch.train`, per drive chunk in the golden harness); anything
+the ring evicted between captures is counted in ``lost_frames`` rather
+than silently missing from the archive.
+
+``finalize()`` encodes everything captured so far into a
+:class:`~repro.replay.archive.TraceArchive` — codes + integer-µs times
+via the shared conversion tables, the marker stream, each device's
+config blocks (calibration included) and firmware version, and the
+transport's `FaultLedger` when the device was wrapped by the fault
+injector.
+"""
+from __future__ import annotations
+
+from typing import Mapping
+
+import numpy as np
+
+from .archive import TraceArchive, encode_device
+
+
+class _DeviceTap:
+    """Incremental capture state for one sensor's ring."""
+
+    def __init__(self, sensor, include_history: bool):
+        self.sensor = sensor
+        ring = sensor.ring
+        self.seq = ring.head - len(ring) if include_history else ring.head
+        self.seq0: int | None = None
+        self.lost_frames = 0
+        self.blocks: list = []
+        self.n_frames = 0
+
+    def capture(self) -> int:
+        ring = self.sensor.ring
+        lock = getattr(self.sensor, "_lock", None)
+        if lock is not None:
+            with lock:
+                block = ring.since(self.seq)
+        else:
+            block = ring.since(self.seq)
+        if len(block) == 0:
+            return 0
+        if block.seq0 > self.seq:
+            # the ring evicted frames between captures: loud, not missing
+            self.lost_frames += block.seq0 - self.seq
+        if self.seq0 is None:
+            self.seq0 = block.seq0
+        self.seq = block.seq0 + len(block)
+        self.blocks.append(block)
+        self.n_frames += len(block)
+        return len(block)
+
+
+class SessionRecorder:
+    """Record one or many `PowerSensor` sessions into a `TraceArchive`.
+
+    ``source`` may be a `repro.stream.FleetMonitor`, a mapping of
+    ``name -> PowerSensor``, or a single `PowerSensor` (recorded under
+    ``name``).  By default recording starts at the *current* ring head —
+    pass ``include_history=True`` to also archive whatever the rings
+    still retain from before the recorder attached.
+    """
+
+    def __init__(
+        self,
+        source,
+        name: str = "dev0",
+        include_history: bool = False,
+        meta: dict | None = None,
+    ):
+        self.meta = dict(meta or {})
+        sensors: Mapping[str, object]
+        if hasattr(source, "names") and hasattr(source, "__getitem__"):
+            sensors = {n: source[n] for n in source.names}
+            self.meta.setdefault("window_s", float(getattr(source, "window_s", 1.0)))
+        elif isinstance(source, Mapping):
+            sensors = dict(source)
+        else:
+            sensors = {name: source}
+        if not sensors:
+            raise ValueError("nothing to record: empty source")
+        self._taps = {n: _DeviceTap(ps, include_history) for n, ps in sensors.items()}
+
+    @property
+    def frames_recorded(self) -> int:
+        return sum(t.n_frames for t in self._taps.values())
+
+    @property
+    def lost_frames(self) -> int:
+        return sum(t.lost_frames for t in self._taps.values())
+
+    def capture(self) -> int:
+        """Copy every device's new ring frames; returns frames captured."""
+        return sum(tap.capture() for tap in self._taps.values())
+
+    def finalize(self, extra_meta: dict | None = None) -> TraceArchive:
+        """One last capture, then encode the whole session to an archive."""
+        self.capture()
+        archive = TraceArchive(meta={**self.meta, **(extra_meta or {})})
+        for dev_name, tap in self._taps.items():
+            ps = tap.sensor
+            if tap.blocks:
+                times_s = np.concatenate([b.times_s for b in tap.blocks])
+                volts = np.concatenate([b.volts for b in tap.blocks])
+                amps = np.concatenate([b.amps for b in tap.blocks])
+            else:
+                n_pairs = ps.ring.n_pairs
+                times_s = np.empty(0)
+                volts = np.empty((0, n_pairs))
+                amps = np.empty((0, n_pairs))
+            t0 = times_s[0] if times_s.size else np.inf
+            t1 = times_s[-1] if times_s.size else -np.inf
+            markers = [(c, t) for c, t in ps.markers if t0 <= t <= t1]
+            n_outside = len(ps.markers) - len(markers)
+            ledger = getattr(ps.device, "ledger", None)
+            trace = encode_device(
+                name=dev_name,
+                configs=list(ps.configs),
+                fw_version=getattr(ps, "version", ""),
+                times_s=times_s,
+                volts=volts,
+                amps=amps,
+                markers=markers,
+                seq0=tap.seq0 or 0,
+                lost_frames=tap.lost_frames,
+                fault_ledger=ledger,
+            )
+            trace.dropped_markers += n_outside
+            archive.add(trace)
+        return archive
+
+    def save(self, path, extra_meta: dict | None = None) -> TraceArchive:
+        """``finalize()`` and write the archive to ``path``."""
+        archive = self.finalize(extra_meta)
+        archive.save(path)
+        return archive

@@ -1,0 +1,350 @@
+"""ReplayDevice / ReplayFleet: archives back through the *real* receiver.
+
+A :class:`ReplayDevice` implements the `VirtualDevice` transport surface
+(``write`` / ``read`` / ``advance`` / ``t_s`` / ``pending_bytes``) over a
+recorded :class:`~repro.replay.archive.DeviceTrace`: it answers the
+connect handshake from the archived firmware version + config blocks,
+then re-emits the recorded frames as wire packets — so the bytes flow
+through the unmodified `PowerSensor` receiver, exercising decode, frame
+assembly, conversion, ring append and marker pairing exactly as a live
+device would.
+
+Bit-identical playback falls out of three invariants:
+
+* codes are archived, so the receiver's ``code · a + b`` reproduces each
+  recorded float exactly;
+* the emitted 10-bit timestamps are ``times_us & 0x3FF`` — the same
+  chain the live device produced — and chunks never span a **wrap gap**
+  (a recorded inter-frame step ≥ 1024 µs, i.e. anywhere the live clock
+  reconstruction re-anchored): each gap-crossing chunk starts a fresh
+  ``read()`` whose ``t_s`` equals its last frame's recorded time, so the
+  receiver's arrival-clock wrap correction lands the chunk back on the
+  recorded times exactly;
+* recorded marker bits ride sensor-0 packets of their original frames,
+  and `PowerSensor.expect_markers` (seeded by `ReplayFleet` /
+  :func:`replay_sensor`) pairs them with their original chars.
+
+Two speeds: **max speed** (default) makes every frame available
+immediately — each ``poll()`` drains one gap-delimited chunk — while
+``realtime=True`` gates frame release on ``advance()``, so existing
+drivers (`FleetMonitor.advance`, governor loops) pace the session at its
+recorded rate.  ``t_s`` always vouches only for frames already
+delivered; with paced multi-device replay, fleet staleness during a
+recorded dropout is still visible because healthy devices keep the
+fleet's ``now`` moving.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import protocol
+from repro.core.protocol import (
+    CMD_MARKER,
+    CMD_READ_CONFIG,
+    CMD_START_STREAM,
+    CMD_STOP_STREAM,
+    CMD_VERSION,
+    CMD_WRITE_CONFIG,
+    CONFIG_BLOCK_SIZE,
+    TIMESTAMP_SENSOR_ID,
+)
+
+from .archive import DeviceTrace, TraceArchive
+
+#: the 10-bit device-timestamp wrap period: any recorded inter-frame step
+#: this long or longer crossed at least one whole wrap and needs the
+#: receiver's arrival-clock re-anchor — chunks must break there
+WRAP_US = 1024
+
+
+class ReplayDevice:
+    """Serve one recorded `DeviceTrace` over the wire-transport surface."""
+
+    def __init__(
+        self,
+        trace: DeviceTrace,
+        realtime: bool = False,
+        chunk_frames: int | None = None,
+    ):
+        self.trace = trace
+        self.realtime = bool(realtime)
+        self.chunk_frames = chunk_frames
+        self.streaming = False
+        n = len(trace)
+        self._times_us = trace.times_us
+        # chunk boundaries: frame 0, plus every frame following a wrap gap
+        if n > 1:
+            gap_starts = 1 + np.flatnonzero(np.diff(self._times_us) >= WRAP_US)
+        else:
+            gap_starts = np.empty(0, dtype=np.int64)
+        self._breaks = np.concatenate([[0], gap_starts, [n]]).astype(np.int64)
+        # marker bookkeeping (validated against the frame grid at load)
+        self._marker_frames = trace.marker_frames
+        self._ch_ids = trace.channel_ids
+        self._ch0_col = (
+            int(np.flatnonzero(self._ch_ids == 0)[0]) + 1
+            if 0 in self._ch_ids
+            else None
+        )
+        self._cursor = 0  # next frame to encode
+        self._clock_us = float(self._times_us[0]) if n else 0.0
+        self._ctrl = bytearray()  # handshake replies
+        self._buf = bytearray()  # encoded frames awaiting (size-capped) reads
+        self._cmd_buf = bytearray()
+        self._preloaded: list[tuple[bytes, int]] | None = None
+
+    # ------------------------------------------------------------ transport
+    @property
+    def t_s(self) -> float:
+        """Recorded time of the newest frame handed to the host.
+
+        The receiver anchors its wrap correction to this clock, so it
+        must never run ahead of delivered data — a clock past the last
+        delivered frame would fabricate extra 1024 µs wraps.
+        """
+        if self._cursor > 0:
+            return float(self._times_us[self._cursor - 1]) / 1e6
+        return self._clock_us / 1e6
+
+    @property
+    def pending_bytes(self) -> int:
+        """Encoded-but-unread bytes (only size-capped reads leave any)."""
+        return len(self._buf)
+
+    @property
+    def exhausted(self) -> bool:
+        """Every recorded frame has been handed to the host."""
+        return (
+            self._cursor >= len(self.trace)
+            and not self._buf
+            and not self._ctrl
+        )
+
+    def write(self, data: bytes) -> None:
+        """Host commands: the handshake subset a receiver actually sends."""
+        buf = self._cmd_buf
+        buf.extend(data)
+        while buf:
+            cmd = bytes(buf[:1])
+            if cmd == CMD_START_STREAM:
+                self.streaming = True
+                del buf[:1]
+            elif cmd == CMD_STOP_STREAM:
+                self.streaming = False
+                del buf[:1]
+            elif cmd == CMD_VERSION:
+                self._ctrl.extend(self.trace.fw_version.encode() + b"\0")
+                del buf[:1]
+            elif cmd == CMD_READ_CONFIG:
+                if len(buf) < 2:
+                    return
+                sid = buf[1]
+                if sid < len(self.trace.configs):
+                    self._ctrl.extend(self.trace.configs[sid].pack())
+                del buf[:2]
+            elif cmd == CMD_MARKER:
+                if len(buf) < 2:
+                    return
+                # replayed streams carry their recorded marker bits; live
+                # marks during replay have no frame to ride on — ignored
+                del buf[:2]
+            elif cmd == CMD_WRITE_CONFIG:
+                if len(buf) < 2 + CONFIG_BLOCK_SIZE:
+                    return
+                # a recording's conversion is frozen; the whole payload
+                # must still be consumed or its bytes re-parse as commands
+                del buf[: 2 + CONFIG_BLOCK_SIZE]
+            else:  # reboot / unknown: no-op on a recording
+                del buf[:1]
+
+    def advance(self, dt_s: float) -> None:
+        """Move the replay clock (releases frames in realtime mode)."""
+        self._clock_us += dt_s * 1e6
+
+    def release_all(self) -> None:
+        """Release every remaining frame (ends realtime pacing)."""
+        if len(self.trace):
+            self._clock_us = max(self._clock_us, float(self._times_us[-1]) + 1.0)
+
+    def read(self, max_bytes: int | None = None) -> bytes:
+        if self._ctrl:
+            return self._take(self._ctrl, max_bytes)
+        if not self._buf:
+            self._refill()
+        return self._take(self._buf, max_bytes)
+
+    # ------------------------------------------------------------ internals
+    @staticmethod
+    def _take(buf: bytearray, max_bytes: int | None) -> bytes:
+        if max_bytes is None or max_bytes >= len(buf):
+            out = bytes(buf)
+            buf.clear()
+            return out
+        out = bytes(buf[:max_bytes])
+        del buf[:max_bytes]
+        return out
+
+    def _released_end(self) -> int:
+        if not self.realtime:
+            return len(self.trace)
+        return int(np.searchsorted(self._times_us, self._clock_us, side="right"))
+
+    def _refill(self) -> None:
+        """Encode the next chunk: up to the next wrap gap, never across."""
+        if not self.streaming or self._cursor >= len(self.trace):
+            return
+        if self._preloaded is not None:
+            if self._preloaded:
+                raw, end = self._preloaded.pop(0)
+                self._buf.extend(raw)
+                self._cursor = end
+            return
+        lo = self._cursor
+        seg_end = int(self._breaks[np.searchsorted(self._breaks, lo, side="right")])
+        hi = min(seg_end, self._released_end())
+        if self.chunk_frames is not None:
+            hi = min(hi, lo + int(self.chunk_frames))
+        if hi <= lo:
+            return
+        self._buf.extend(self._encode(lo, hi))
+        self._cursor = hi
+
+    def preload(self) -> int:
+        """Pre-encode every remaining chunk (benchmarks: isolates the
+        receiver path from encode cost).  Returns total preloaded bytes."""
+        chunks: list = []
+        saved = self._cursor
+        while self._cursor < len(self.trace):
+            lo = self._cursor
+            seg_end = int(
+                self._breaks[np.searchsorted(self._breaks, lo, side="right")]
+            )
+            hi = seg_end
+            if self.chunk_frames is not None:
+                hi = min(hi, lo + int(self.chunk_frames))
+            chunks.append((self._encode(lo, hi), hi))
+            self._cursor = hi
+        self._cursor = saved
+        self._preloaded = chunks
+        return sum(len(c) for c, _ in chunks)
+
+    def _encode(self, lo: int, hi: int) -> bytes:
+        """Vectorised wire encoding of frames [lo, hi): per frame one
+        timestamp packet + one packet per recorded channel, plus recorded
+        marker bits on sensor-0 packets (inserted bare when ch0 is not a
+        recorded column, mirroring the firmware)."""
+        n = hi - lo
+        ch_ids = self._ch_ids
+        per = 1 + ch_ids.size
+        ids = np.empty((n, per), dtype=np.int64)
+        vals = np.empty((n, per), dtype=np.int64)
+        marks = np.zeros((n, per), dtype=np.int64)
+        ids[:, 0] = TIMESTAMP_SENSOR_ID
+        vals[:, 0] = self._times_us[lo:hi] & (WRAP_US - 1)
+        marks[:, 0] = 1
+        ids[:, 1:] = ch_ids[None, :]
+        vals[:, 1:] = self.trace.codes[lo:hi].astype(np.int64)
+
+        mf = self._marker_frames
+        sel = mf[(mf >= lo) & (mf < hi)] - lo
+        ids_f, vals_f, marks_f = ids.ravel(), vals.ravel(), marks.ravel()
+        if sel.size:
+            if self._ch0_col is not None:
+                marks.reshape(n, per)[sel, self._ch0_col] = 1
+                marks_f = marks.ravel()
+            else:
+                # ch0 was not recorded (disabled): bare sensor-0 packets
+                # right after the timestamps, exactly like the firmware
+                pos = sel * per + 1
+                ids_f = np.insert(ids_f, pos, 0)
+                vals_f = np.insert(vals_f, pos, 0)
+                marks_f = np.insert(marks_f, pos, 1)
+        return protocol.encode_packets(ids_f, vals_f, marks_f)
+
+
+def replay_sensor(
+    trace: DeviceTrace,
+    realtime: bool = False,
+    ring_capacity: int | None = None,
+    chunk_frames: int | None = None,
+):
+    """A `PowerSensor` wired to one replayed trace, markers pre-seeded.
+
+    The default ring capacity retains the whole recorded session, so
+    whole-span queries (attribution, golden metrics) never lose frames
+    to eviction during replay.
+    """
+    from repro.core.host import PowerSensor
+
+    dev = ReplayDevice(trace, realtime=realtime, chunk_frames=chunk_frames)
+    if ring_capacity is None:
+        ring_capacity = max(1 << max(len(trace) - 1, 1).bit_length(), 1024)
+    ps = PowerSensor(dev, ring_capacity=ring_capacity)
+    ps.expect_markers(trace.marker_chars)
+    return ps
+
+
+class ReplayFleet:
+    """Reconstruct a full `FleetMonitor` session from a multi-device archive."""
+
+    def __init__(
+        self,
+        archive: TraceArchive,
+        realtime: bool = False,
+        ring_capacity: int | None = None,
+        window_s: float | None = None,
+        chunk_frames: int | None = None,
+        **monitor_kwargs,
+    ):
+        from repro.stream.fleet import FleetMonitor
+
+        if window_s is None:
+            window_s = float(archive.meta.get("window_s", 1.0))
+        self.archive = archive
+        self.monitor = FleetMonitor(window_s=window_s, **monitor_kwargs)
+        self.devices: dict[str, ReplayDevice] = {}
+        for dev_name, trace in archive.devices.items():
+            ps = replay_sensor(
+                trace,
+                realtime=realtime,
+                ring_capacity=ring_capacity,
+                chunk_frames=chunk_frames,
+            )
+            self.devices[dev_name] = ps.device
+            self.monitor.add(dev_name, ps)
+
+    @classmethod
+    def from_file(cls, path, **kwargs) -> "ReplayFleet":
+        return cls(TraceArchive.load(path), **kwargs)
+
+    @property
+    def names(self) -> list[str]:
+        return self.monitor.names
+
+    def __getitem__(self, name: str):
+        return self.monitor[name]
+
+    def advance(self, dt_s: float) -> None:
+        """Paced replay: release `dt_s` of recorded time and drain it."""
+        self.monitor.advance(dt_s)
+
+    def drain(self) -> int:
+        """Replay everything that remains, at max speed.
+
+        On a ``realtime=True`` fleet this first releases every remaining
+        frame (otherwise the loop would wait forever on a clock only
+        `advance` moves).
+        """
+        total = 0
+        for d in self.devices.values():
+            d.release_all()
+        while True:
+            n = self.monitor.poll_all()
+            total += n
+            if n == 0 and all(
+                d.exhausted or not d.streaming for d in self.devices.values()
+            ):
+                return total
+
+    def close(self) -> None:
+        self.monitor.close()

@@ -9,11 +9,13 @@ call.  This module renders the dump schema
 entirely with integer digit arithmetic on a byte matrix: every row gets a
 fixed cell layout, pad cells (unused leading-digit positions, absent minus
 signs) are masked out, and the compacted bytes decode to the same text the
-printf path produces — except for values whose scaled product lands within
-1 ULP of a decimal rounding boundary (e.g. ``5118.10005``), where the last
-digit may differ by one: printf rounds the exact double, the fast path
-rounds the float64 product.  Harmless for dump data (4th-decimal noise),
-but don't rely on byte equality at constructed ties.
+printf path produces.  Values whose scaled product lands near a decimal
+rounding boundary (e.g. ``5118.10005``) are re-rounded in extended
+precision (`_round_scaled`): printf rounds the *exact* double, and the
+float64 product alone can land a constructed tie one last-digit off — a
+drift the archive/dump parity test pins.  A double can never be an exact
+decimal tie (the boundary has a factor 5⁴ in its denominator), so 80-bit
+extended precision always decides the same way printf does.
 
 Values outside the supported fixed-point range (|V|,|A| < 10^4, |W| < 10^6,
 0 <= t < 10^6, non-finite anything) fall back to the printf path for the
@@ -29,6 +31,35 @@ _PRINTF_FMT = "%.6f %d %.4f %.4f %.4f\n"
 def _printf_block(rows: np.ndarray) -> str:
     """One C-level %-format for the whole block (the fallback path)."""
     return (_PRINTF_FMT * rows.shape[0]) % tuple(rows.ravel().tolist())
+
+
+def _round_scaled(values: np.ndarray, scale: int) -> np.ndarray:
+    """``round(values · scale)`` with printf's exact-double rounding.
+
+    The float64 product carries ~1 ULP of error, enough to flip the last
+    digit when the exact value sits within that of a decimal boundary.
+    Entries near a boundary are re-rounded exactly (`Decimal` represents
+    the double with no error; exact decimal ties are impossible for
+    binary doubles), so the result always matches the correctly-rounded
+    printf output — on every platform, including those where
+    ``np.longdouble`` is just float64.  The exact path only ever sees
+    the handful of near-tie entries, never the bulk of the block.
+    """
+    prod = values * float(scale)
+    scaled = np.round(prod)
+    frac = prod - np.floor(prod)
+    near = np.abs(frac - 0.5) < 1e-6
+    if np.any(near):
+        from decimal import ROUND_HALF_EVEN, Decimal
+
+        exp = Decimal(1)
+        scaled[near] = [
+            float(
+                (Decimal(x) * scale).quantize(exp, rounding=ROUND_HALF_EVEN)
+            )
+            for x in values[near].tolist()
+        ]
+    return scaled.astype(np.int64)
 
 
 def _int_digits(out, keep, col, ip, width):
@@ -57,7 +88,7 @@ def _frac_digits(out, col, frac, width):
 def _signed_fixed(out, keep, col, values, int_width, dec):
     """Render ``values`` as [-]int.frac at [col, col+1+int_width+1+dec)."""
     scale = 10**dec
-    scaled = np.round(np.abs(values) * scale).astype(np.int64)
+    scaled = _round_scaled(np.abs(values), scale)
     keep[col] = np.signbit(values)  # printf keeps the sign of -0.0001...
     out[col] = ord("-")
     _int_digits(out, keep, col + 1, scaled // scale, int_width)
@@ -102,7 +133,7 @@ def format_dump_block(
     out = np.full((width, n), ord(" "), dtype=np.uint8)
     keep = np.ones((width, n), dtype=bool)
 
-    t_scaled = np.round(times_s * 1e6).astype(np.int64)
+    t_scaled = _round_scaled(times_s, 10**6)
     _int_digits(out, keep, 0, t_scaled // 10**6, 6)
     out[6] = ord(".")
     _frac_digits(out, 7, t_scaled % 10**6, 6)
@@ -113,3 +144,40 @@ def format_dump_block(
     out[col] = ord("\n")
     flat = np.ascontiguousarray(out.T).ravel()
     return flat[np.ascontiguousarray(keep.T).ravel()].tobytes().decode("ascii")
+
+
+def parse_dump(
+    text: str,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray, list]:
+    """Parse continuous-mode dump text back into arrays + marker events.
+
+    The inverse of the dump schema: returns ``(times_s, pairs, volts,
+    amps, watts, markers)`` where ``markers`` is the ``[(char, t_s), ...]``
+    list the ``M <char> <t>`` lines encode.  Used by the dump/archive
+    parity tests — a text dump parsed back must match the binary trace
+    archive of the same session to within the dump's fixed-point
+    quantisation (half of the last printed digit).
+    """
+    rows: list[list[float]] = []
+    markers: list[tuple[str, float]] = []
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        if line.startswith("M "):
+            _, char, t = line.split()
+            markers.append((char, float(t)))
+            continue
+        parts = line.split()
+        if len(parts) != 5:
+            raise ValueError(f"malformed dump row: {line!r}")
+        rows.append([float(x) for x in parts])
+    arr = np.asarray(rows, dtype=np.float64).reshape(-1, 5)
+    return (
+        arr[:, 0],
+        arr[:, 1].astype(np.int64),
+        arr[:, 2],
+        arr[:, 3],
+        arr[:, 4],
+        markers,
+    )

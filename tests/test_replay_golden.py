@@ -1,0 +1,194 @@
+"""Golden-corpus regression tier: committed archives vs their manifests.
+
+Replays each committed golden archive through the real host receiver and
+asserts every sensor-derived metric against the committed tolerance
+manifest — any drift in the receiver, ring, attribution, fleet
+aggregation or replay transport shows up here as a manifest violation.
+(`tools/regen_goldens.py --check` additionally re-records the scenarios
+live in CI, catching staleness in the other direction.)
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.replay import TraceArchive
+from repro.replay.golden import (
+    MAX_CORPUS_BYTES,
+    SCENARIOS,
+    _compare,
+    archive_since,
+    check_goldens,
+    corpus_bytes,
+    load_manifest,
+    replay_session_metrics,
+)
+
+GOLDEN_DIR = Path(__file__).parent / "goldens"
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    return load_manifest(GOLDEN_DIR)
+
+
+def test_corpus_is_committed_and_mini(manifest):
+    assert set(manifest["scenarios"]) == set(SCENARIOS)
+    total = corpus_bytes(GOLDEN_DIR)
+    assert 0 < total <= MAX_CORPUS_BYTES, f"corpus is {total} bytes"
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_golden_scenario_replays_to_manifest(name, manifest):
+    entry = manifest["scenarios"][name]
+    archive = TraceArchive.load(GOLDEN_DIR / entry["archive"])
+    # golden archives must be clean recordings: nothing lossy, nothing lost
+    for tr in archive.devices.values():
+        assert tr.n_quantised == 0
+        assert tr.n_time_quantised == 0
+        assert tr.lost_frames == 0
+    metrics = replay_session_metrics(SCENARIOS[name], archive)
+    errors = _compare(name, metrics, entry, skip_live=True)
+    assert not errors, "\n".join(errors)
+
+
+def test_chaos_goldens_carry_their_fault_ledgers():
+    for name in ("chaos-dropout", "chaos-disconnect"):
+        archive = TraceArchive.load(
+            GOLDEN_DIR / load_manifest(GOLDEN_DIR)["scenarios"][name]["archive"]
+        )
+        assert any(
+            tr.fault_ledger is not None and tr.fault_ledger.dropped_s > 0
+            for tr in archive.devices.values()
+        ), f"{name}: no injected gaps in any device ledger"
+
+
+def test_golden_roundtrip_one_scenario_rerecorded():
+    """One cheap live re-record in-tier: the round-trip invariant holds
+    against the *committed* manifest, not just at regen time."""
+    errors = check_goldens(GOLDEN_DIR, names=["serve-wave"], rerecord=False)
+    assert not errors, "\n".join(errors)
+    archive, live = SCENARIOS["serve-wave"].record()
+    replayed = replay_session_metrics(SCENARIOS["serve-wave"], archive)
+    manifest = load_manifest(GOLDEN_DIR)
+    entry = manifest["scenarios"]["serve-wave"]
+    for key, spec in entry["metrics"].items():
+        assert key in replayed
+        assert abs(replayed[key] - spec["value"]) <= (
+            spec["atol"] + spec["rtol"] * abs(spec["value"])
+        ), key
+        assert abs(replayed[key] - live[key]) <= 1e-9 * max(abs(live[key]), 1e-12)
+
+
+def test_manifest_tolerances_are_tight():
+    """Sensor metrics are pinned at the 1e-9 round-trip contract, not at
+    hand-wavy tolerances that would let regressions hide."""
+    manifest = load_manifest(GOLDEN_DIR)
+    for name, entry in manifest["scenarios"].items():
+        for key, spec in entry["metrics"].items():
+            if key.startswith("live."):
+                continue
+            assert spec["rtol"] <= 1e-9, (name, key)
+            assert spec["atol"] <= 1e-12, (name, key)
+
+
+def test_stale_manifest_is_detected(tmp_path):
+    """check_goldens flags a manifest whose pinned values drifted."""
+    import shutil
+
+    work = tmp_path / "goldens"
+    shutil.copytree(GOLDEN_DIR, work)
+    manifest = json.loads((work / "manifest.json").read_text())
+    entry = manifest["scenarios"]["serve-wave"]["metrics"]["dev0.energy_j"]
+    entry["value"] *= 1.01  # 1% drift, far outside 1e-9
+    (work / "manifest.json").write_text(json.dumps(manifest))
+    errors = check_goldens(work, rerecord=False)
+    assert any("dev0.energy_j" in e for e in errors)
+
+
+def test_archive_since_covers_all_devices():
+    manifest = load_manifest(GOLDEN_DIR)
+    entry = manifest["scenarios"]["governor-step"]
+    archive = TraceArchive.load(GOLDEN_DIR / entry["archive"])
+    since = archive_since(archive)
+    assert set(since) == set(archive.devices)
+    assert all(t > 0 for t in since.values())
+
+
+# ----------------------------------------------------- regeneration paths
+def test_write_goldens_regenerates_a_fresh_corpus(tmp_path):
+    """`write_goldens` = what `tools/regen_goldens.py` runs: every
+    scenario records, round-trips within 1e-9, and lands under budget."""
+    from repro.replay.golden import write_goldens
+
+    out = tmp_path / "fresh"
+    manifest = write_goldens(out)
+    assert set(manifest["scenarios"]) == set(SCENARIOS)
+    assert 0 < corpus_bytes(out) <= MAX_CORPUS_BYTES
+    # the freshly written corpus verifies against itself, live re-record
+    # included (this is the --check CI gate, end to end)
+    assert check_goldens(out, rerecord=True) == []
+    # and matches the committed manifest: regeneration is deterministic
+    committed = load_manifest(GOLDEN_DIR)
+    fresh = load_manifest(out)
+    for name, entry in committed["scenarios"].items():
+        for key, spec in entry["metrics"].items():
+            got = fresh["scenarios"][name]["metrics"][key]["value"]
+            assert abs(got - spec["value"]) <= (
+                spec["atol"] + spec["rtol"] * abs(spec["value"])
+            ), (name, key)
+
+
+def test_golden_error_paths(tmp_path):
+    from repro.replay.golden import GoldenError
+
+    with pytest.raises(GoldenError, match="no golden manifest"):
+        load_manifest(tmp_path)
+    (tmp_path / "manifest.json").write_text(json.dumps({"version": 99}))
+    with pytest.raises(GoldenError, match="version"):
+        load_manifest(tmp_path)
+    # a manifest naming an unknown scenario / a missing archive → violations
+    (tmp_path / "manifest.json").write_text(
+        json.dumps(
+            {
+                "version": 1,
+                "scenarios": {
+                    "no-such-scenario": {"archive": "x.npz", "metrics": {}},
+                    "serve-wave": {"archive": "missing.npz", "metrics": {}},
+                },
+            }
+        )
+    )
+    errors = check_goldens(tmp_path, rerecord=False)
+    assert any("unknown scenario" in e for e in errors)
+    assert any("missing golden archive" in e for e in errors)
+    assert any("not in the committed manifest" in e for e in errors)
+
+
+def test_unpinned_metric_is_a_violation(tmp_path):
+    """A session producing metrics the manifest doesn't pin fails the
+    check — silent coverage shrinkage of the pinned set is not allowed."""
+    import shutil
+
+    work = tmp_path / "goldens"
+    shutil.copytree(GOLDEN_DIR, work)
+    manifest = json.loads((work / "manifest.json").read_text())
+    del manifest["scenarios"]["serve-wave"]["metrics"]["dev0.energy_j"]
+    (work / "manifest.json").write_text(json.dumps(manifest))
+    errors = check_goldens(work, rerecord=False)
+    assert any("unpinned metric" in e and "dev0.energy_j" in e for e in errors)
+
+
+def test_partial_regen_preserves_other_scenarios(tmp_path):
+    """`regen_goldens.py --scenario X` must merge into the committed
+    manifest, not drop every other scenario's pins."""
+    import shutil
+
+    from repro.replay.golden import write_goldens
+
+    work = tmp_path / "goldens"
+    shutil.copytree(GOLDEN_DIR, work)
+    write_goldens(work, names=["chaos-dropout"])
+    manifest = load_manifest(work)
+    assert set(manifest["scenarios"]) == set(SCENARIOS)
+    assert check_goldens(work, rerecord=False) == []

@@ -1,0 +1,230 @@
+"""Replay-parity tier: record → archive → replay ≡ the live run.
+
+The subsystem's contract: a recorded session replayed through
+`ReplayDevice` (i.e. through the *real* host receiver) must reproduce
+`attribute()` ledger joules and `FleetMonitor.window_power_w` within
+1e-9 relative of the live run — for clean sessions *and* for chaos runs
+whose `FaultLedger` gaps punch holes in the stream.
+"""
+import numpy as np
+import pytest
+
+from repro.attrib import KernelSpan, attribute_block, marker_spans
+from repro.core import ConstantLoad, SquareWaveLoad
+from repro.faultlab import inject, shipped_scenarios
+from repro.replay import ReplayFleet, SessionRecorder, load_bytes, save_bytes
+from repro.stream import make_virtual_fleet
+
+RTOL = 1e-9
+
+
+def _rel(a: float, b: float) -> float:
+    return abs(a - b) / max(abs(b), 1e-300)
+
+
+def _wave_ledgers(monitor, char: str):
+    """Per-device whole-span + per-wave attribution from the rings."""
+    out = {}
+    for name in monitor.names:
+        ps = monitor[name]
+        block = ps.ring.latest()
+        spans = [KernelSpan("all", block.times_s[0], block.times_s[-1])]
+        spans += marker_spans(ps.markers, char)
+        out[name] = attribute_block(block, spans)
+    return out
+
+
+def _record_clean_session():
+    fleet = make_virtual_fleet(
+        [ConstantLoad(12.0, 3.0), SquareWaveLoad(12.0, 2.0, 6.0, freq_hz=90.0)],
+        window_s=0.05,
+        seed=13,
+        ring_capacity=1 << 13,
+    )
+    rec = SessionRecorder(fleet)
+    for _ in range(4):
+        fleet.mark_all("W")
+        fleet.run_for(0.03, chunk_s=0.005)
+        rec.capture()
+    fleet.mark_all("W")
+    fleet.run_for(0.005, chunk_s=0.005)
+    return fleet, rec.finalize()
+
+
+def _record_chaos_session(scenario_name: str):
+    scen = shipped_scenarios(0.3)[scenario_name]
+    fleet = make_virtual_fleet(
+        [ConstantLoad(12.0, 3.0), ConstantLoad(12.0, 4.0)],
+        window_s=0.02,
+        seed=23,
+        ring_capacity=1 << 14,
+    )
+    transports = inject(fleet, scen)
+    rec = SessionRecorder(fleet)
+    t, next_mark = 0.0, 0.0
+    while t < 0.3 - 1e-12:
+        if t >= next_mark - 1e-12:
+            fleet.mark_all("C")
+            next_mark += 0.05
+        fleet.advance(0.002)
+        t += 0.002
+        rec.capture()
+    fleet.poll_all()
+    return fleet, transports, rec.finalize()
+
+
+def test_clean_session_replay_parity():
+    fleet, archive = _record_clean_session()
+    live = _wave_ledgers(fleet, "W")
+    live_power = fleet.window_power_w(0.05, poll=False)
+
+    replay = ReplayFleet(load_bytes(save_bytes(archive)))
+    replay.drain()
+    replayed = _wave_ledgers(replay.monitor, "W")
+    replay_power = replay.monitor.window_power_w(0.05, poll=False)
+
+    assert _rel(replay_power, live_power) <= RTOL
+    for name in fleet.names:
+        llive, lrep = live[name], replayed[name]
+        assert set(lrep.entries) == set(llive.entries)
+        assert len(llive.entries) == 5  # whole span + 4 waves
+        for key, ent in llive.entries.items():
+            rent = lrep.entries[key]
+            assert _rel(rent.energy_j, ent.energy_j) <= RTOL, key
+            assert rent.count == ent.count
+            assert _rel(rent.peak_w, ent.peak_w) <= RTOL
+        assert _rel(lrep.trace_energy_j, llive.trace_energy_j) <= RTOL
+    replay.close()
+    fleet.close()
+
+
+@pytest.mark.parametrize("scenario", ["dropout-burst", "disconnect-cycle"])
+def test_chaos_session_replay_parity(scenario):
+    fleet, transports, archive = _record_chaos_session(scenario)
+    live = _wave_ledgers(fleet, "C")
+    live_power = fleet.window_power_w(0.02, poll=False)
+
+    loaded = load_bytes(save_bytes(archive))
+    replay = ReplayFleet(loaded)
+    replay.drain()
+    replayed = _wave_ledgers(replay.monitor, "C")
+    replay_power = replay.monitor.window_power_w(0.02, poll=False)
+
+    assert _rel(replay_power, live_power) <= RTOL
+    saw_gap = False
+    for name in fleet.names:
+        llive, lrep = live[name], replayed[name]
+        for key, ent in llive.entries.items():
+            rent = lrep.entries[key]
+            assert _rel(rent.energy_j, ent.energy_j) <= RTOL, (scenario, key)
+            # coverage (the gap accounting) must survive the round trip too
+            assert _rel(rent.covered_s, ent.covered_s) <= RTOL
+            saw_gap |= ent.coverage_frac < 0.999
+        # the injected ground truth rides in the archive
+        led = loaded.devices[name].fault_ledger
+        assert led is not None
+        src = transports[name].ledger
+        assert led.delivered_frac == src.delivered_frac
+        assert led.gap_spans() == src.gap_spans()
+    assert saw_gap  # the scenario really did punch holes the ledger attributes
+    replay.close()
+    fleet.close()
+
+
+def test_chaos_replay_frames_bit_identical():
+    """Stronger than the 1e-9 contract: the decoded frames themselves."""
+    fleet, _, archive = _record_chaos_session("dropout-burst")
+    replay = ReplayFleet(load_bytes(save_bytes(archive)))
+    replay.drain()
+    for name in fleet.names:
+        tr = archive.devices[name]
+        live = fleet[name].ring.latest()
+        rep = replay[name].ring.latest()
+        k = len(tr)
+        np.testing.assert_array_equal(rep.times_s, live.times_s[-k:])
+        np.testing.assert_array_equal(rep.volts, live.volts[-k:])
+        np.testing.assert_array_equal(rep.amps, live.amps[-k:])
+        np.testing.assert_array_equal(rep.watts, live.watts[-k:])
+        assert replay[name].markers == [
+            m for m in fleet[name].markers if m[1] >= live.times_s[-k]
+        ]
+    replay.close()
+    fleet.close()
+
+
+def test_realtime_replay_matches_max_speed():
+    """Wall-clock-paced replay lands on the same frames as max speed."""
+    fleet, _, archive = _record_chaos_session("disconnect-cycle")
+    fleet.close()
+    fast = ReplayFleet(archive)
+    fast.drain()
+    paced = ReplayFleet(archive, realtime=True)
+    for _ in range(400):
+        paced.advance(0.001)
+    for name in fast.names:
+        a = fast[name].ring.latest()
+        b = paced[name].ring.latest()
+        np.testing.assert_array_equal(a.times_s, b.times_s)
+        np.testing.assert_array_equal(a.watts, b.watts)
+        assert fast[name].markers == paced[name].markers
+    fast.close()
+    paced.close()
+
+
+def test_serve_launcher_record_flag(tmp_path):
+    """`--record` on the serving launcher writes a replayable archive."""
+    from repro.launch import serve
+    from repro.replay import ReplayFleet, TraceArchive
+
+    path = tmp_path / "serve.npz"
+    serve.main(
+        [
+            "--arch", "qwen1.5-4b", "--smoke",
+            "--requests", "4", "--decode-batch", "2",
+            "--prompt-len", "8", "--gen-len", "4",
+            "--fleet", "2", "--record", str(path),
+        ]
+    )
+    archive = TraceArchive.load(path)
+    assert len(archive) == 2
+    assert archive.n_frames > 0
+    assert archive.meta["launcher"] == "serve"
+    assert archive.meta["waves"] >= 1
+    # at least one wave bracket per device made it into the archive
+    assert all(tr.marker_chars for tr in archive.devices.values())
+    replay = ReplayFleet(archive)
+    assert replay.drain() == archive.n_frames
+    assert replay.monitor.window_power_w(0.5, poll=False) > 0
+    replay.close()
+
+
+def test_train_recording_attributor(tmp_path):
+    """The train launcher's recording attributor archives its session."""
+    from repro.launch.train import make_recording_attributor
+    from repro.power import EnergyTelemetry, StepCost
+    from repro.replay import TraceArchive, replay_sensor
+
+    telemetry = EnergyTelemetry(
+        cost_per_step=StepCost(2e9, 1e9, 0.0), n_layers=2,
+        useful_flops_per_step=2e9,
+    )
+    path = tmp_path / "train.npz"
+    attributor = make_recording_attributor(str(path), telemetry, seed=3)
+    for _ in range(3):
+        attributor.on_step()
+    ledger = attributor.finish()
+    archive = TraceArchive.load(path)
+    trace = archive.devices["train"]
+    assert len(trace) > 0
+    assert trace.marker_chars.count("S") == 3
+    ps = replay_sensor(trace)
+    while not ps.device.exhausted:
+        ps.poll()
+    # re-attribute the replayed session: same marker anchors, same energy
+    block = ps.ring.latest()
+    spans = marker_spans(ps.markers, "S")
+    replayed = attribute_block(block, spans)
+    live_total = sum(e.energy_j for e in ledger.entries.values())
+    assert replayed.trace_energy_j > 0
+    assert live_total > 0
+    ps.close()

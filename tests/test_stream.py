@@ -539,3 +539,89 @@ def test_window_power_concurrent_with_threaded_receiver():
         assert vals[-1] == pytest.approx(2 * 18.0, abs=12.0)
     finally:
         fleet.close()
+
+
+# ------------------------------------------------------- dump/archive parity
+def test_dump_text_parses_back_to_the_archive():
+    """Continuous-mode dump ≡ trace archive, to the dump's quantisation.
+
+    The same session is captured both ways — `set_dump_file` text and a
+    `repro.replay` archive — then the parsed-back dump must match the
+    archive's full-precision frames to within half of the last printed
+    digit (5e-7 s, 5e-5 V/A/W), and the marker lines must be exact.
+    A drift beyond half-ULP means the fixed-point fast path rounded a
+    value differently than the exact double (the near-tie bug
+    `_round_scaled` fixes).
+    """
+    import io as _io
+
+    from repro.core import SweepLoad
+    from repro.replay import SessionRecorder
+    from repro.stream.textio import parse_dump
+
+    dev = make_device(
+        ["pcie8pin-20a", "hc-50a"],
+        SweepLoad(steps=np.arange(-6.0, 6.5, 1.0), dwell_s=0.01),
+        seed=5,
+    )
+    ps = PowerSensor(dev)
+    sink = _io.StringIO()
+    ps.set_dump_file(sink)
+    rec = SessionRecorder(ps, name="d")
+    for k in range(3):
+        ps.mark(chr(65 + k))
+        ps.run_for(0.04, chunk_s=0.007)
+        rec.capture()
+    archive = rec.finalize()
+    ps.set_dump_file(None)
+    ps.close()
+
+    t, pairs, volts, amps, watts, markers = parse_dump(sink.getvalue())
+    tr = archive.devices["d"]
+    block = tr.decode()
+    dumped_pairs = np.flatnonzero(
+        [blk.enabled for blk in tr.configs[0::2]]
+    )
+    n, p = len(block), dumped_pairs.size
+    assert t.size == n * p
+
+    true_t = np.repeat(block.times_s, p)
+    true_pairs = np.tile(dumped_pairs, n)
+    np.testing.assert_array_equal(pairs, true_pairs)
+    assert np.abs(t - true_t).max() <= 5e-7
+    for parsed, true in (
+        (volts, block.volts),
+        (amps, block.amps),
+        (watts, block.watts),
+    ):
+        err = np.abs(parsed - true[:, dumped_pairs].ravel())
+        assert err.max() <= 5e-5, err.max()
+    assert markers == tr.markers
+
+
+def test_fast_path_matches_printf_at_decimal_ties():
+    """The near-tie regression `_round_scaled` fixed: constructed values
+    whose scaled product sits within a float64 ULP of a rounding boundary
+    must still format byte-identically to printf's exact-double rounding."""
+    rng = np.random.default_rng(11)
+    k = rng.integers(0, 10**8, 4000)
+    v = np.clip((k + 0.5) / 1e4, 0.0, 1e4 - 1.0)
+    t = np.round(np.sort(rng.uniform(0, 10, v.size)) * 1e6) / 1e6
+    pairs = np.zeros(v.size, dtype=np.int64)
+    z = np.zeros(v.size)
+    fast = format_dump_block(t, pairs, v, -v, z)
+    slow = _printf_block(np.column_stack([t, pairs.astype(float), v, -v, z]))
+    assert fast == slow
+
+
+def test_round_scaled_exact_path_matches_printf_without_longdouble():
+    """The near-tie re-round must not depend on platform longdouble
+    precision: the exact Decimal path alone decides like printf."""
+    from repro.stream.textio import _round_scaled
+
+    v = np.array([5118.10005, 9486.49445, 2492.28635, 0.00005, 1.00015])
+    got = _round_scaled(v, 10**4)
+    expected = np.array(
+        [int(("%.4f" % x).replace(".", "")) for x in v], dtype=np.int64
+    )
+    np.testing.assert_array_equal(got, expected)

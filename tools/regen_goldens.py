@@ -1,0 +1,70 @@
+"""Regenerate (or verify) the committed golden trace corpus.
+
+    PYTHONPATH=src python tools/regen_goldens.py            # rewrite goldens
+    PYTHONPATH=src python tools/regen_goldens.py --check    # CI staleness gate
+    PYTHONPATH=src python tools/regen_goldens.py --scenario chaos-dropout
+
+Default output directory is ``tests/goldens`` (the committed corpus).
+
+``--check`` re-records every scenario live *and* replays the committed
+archives, comparing both against the committed tolerance manifest — it
+exits nonzero when the corpus has gone stale relative to the code (or the
+code relative to the corpus), which is exactly the regression the golden
+CI job gates.  Regeneration itself enforces the subsystem's round-trip
+invariant (live ≡ replay within 1e-9) and the < 200 kB mini-corpus
+budget before writing anything the repo would commit.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.replay.golden import (  # noqa: E402  (path bootstrap above)
+    SCENARIOS,
+    check_goldens,
+    corpus_bytes,
+    default_golden_dir,
+    write_goldens,
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, metavar="DIR",
+                    help="golden directory (default: tests/goldens)")
+    ap.add_argument("--check", action="store_true",
+                    help="verify the committed corpus instead of rewriting it")
+    ap.add_argument("--scenario", action="append", choices=sorted(SCENARIOS),
+                    help="limit to one scenario (repeatable)")
+    args = ap.parse_args(argv)
+    golden_dir = Path(args.out) if args.out else default_golden_dir()
+
+    if args.check:
+        errors = check_goldens(golden_dir, names=args.scenario, rerecord=True)
+        if errors:
+            print(f"STALE GOLDENS ({len(errors)} violations):")
+            for e in errors:
+                print(f"  - {e}")
+            print("regenerate with: PYTHONPATH=src python tools/regen_goldens.py")
+            return 1
+        print(f"golden corpus at {golden_dir} is fresh "
+              f"({corpus_bytes(golden_dir)} bytes, "
+              f"{len(args.scenario or SCENARIOS)} scenarios)")
+        return 0
+
+    manifest = write_goldens(golden_dir, names=args.scenario)
+    total = corpus_bytes(golden_dir)
+    n_written = len(args.scenario or SCENARIOS)
+    print(f"recorded {n_written} golden scenario(s) into {golden_dir}; "
+          f"manifest now pins {len(manifest['scenarios'])} ({total} bytes total):")
+    for name, entry in manifest["scenarios"].items():
+        size = (golden_dir / entry["archive"]).stat().st_size
+        print(f"  {name:20s} {size:7d} B  {len(entry['metrics'])} pinned metrics")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
