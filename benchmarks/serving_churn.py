@@ -1,0 +1,258 @@
+"""Step-granularity vs wave-granularity billing under churn (regression gate).
+
+The scheduling-side version of the paper's granularity argument: per
+-request energy accounting is only as good as the attribution window.
+This benchmark runs the *same* churn workload (staggered arrivals, mixed
+generation lengths, completions freeing slots mid-run) through both
+serving granularities and scores each against the per-step ground truth
+of its own execution — every step's energy split equally across the
+requests actually decoding in it:
+
+* **step** — `ContinuousBatch`: admissions at step-interval boundaries,
+  per-request billing from the interval occupancy matrix;
+* **wave** — `EnergySloScheduler`: serial waves decoding every member to
+  the longest request, billing split by whole-wave token share.
+
+Gates (nonzero exit on regression):
+
+1. mean per-request billing error of step granularity is **strictly
+   lower** than wave granularity on the same workload, with margin
+   (``step <= STEP_VS_WAVE_MARGIN x wave``);
+2. under ``cap-strict`` admission the modelled fleet power stays at or
+   under the cap at **every** decode step (zero overshoot steps) while
+   the batch churns;
+3. the billing ledger conserves: per-request billed joules plus unbilled
+   overhead reproduce the settled total exactly.
+
+    PYTHONPATH=src python -m benchmarks.serving_churn [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import sys
+
+import numpy as np
+
+from repro.sched import (
+    ContinuousBatch,
+    EnergyPricer,
+    EnergySloScheduler,
+    Request,
+    get_policy,
+)
+
+from .common import emit
+
+#: gate 1: step billing error must be at most this fraction of wave error
+STEP_VS_WAVE_MARGIN = 0.8
+#: gate 2: tolerated cap overshoot at any step boundary (modelled watts)
+CAP_EPS_W = 1e-9
+#: gate 3: billing conservation slack (relative)
+CONSERVE_RTOL = 1e-9
+
+POWER = lambda b: 80.0 + 15.0 * b  # noqa: E731 — modelled batch power
+STEP_S = 1e-3  # modelled per-step time, constant
+BIAS = 1.1  # measured = modelled x bias (exercises the pricer loop)
+
+
+def make_workload(n_requests: int, n_clients: int, spread_s: float, seed: int):
+    """One churn request set, identical for both executors."""
+    rng = np.random.default_rng(seed)
+    gen_lens = rng.integers(4, 25, size=n_requests)
+    clients = rng.integers(0, n_clients, size=n_requests)
+    arrivals = np.sort(rng.uniform(0.0, spread_s, size=n_requests))
+    return [
+        Request(
+            rid=rid,
+            client=f"client{int(clients[rid])}",
+            gen_len=int(gen_lens[rid]),
+            arrival_s=float(arrivals[rid]),
+        )
+        for rid in range(n_requests)
+    ]
+
+
+def run_step(requests, n_slots, steps_per_interval, policy="throughput-max",
+             cap_w=None):
+    """Step executor; returns (sched, truth, per-step modelled watts).
+
+    ``truth[rid]`` is the request's ground-truth energy: each step's
+    measured energy split equally across the requests that decoded a real
+    token in it (occupancy is exact at step granularity, so this is the
+    reference both billing schemes are scored against).
+    """
+    sched = ContinuousBatch(
+        EnergyPricer(j_per_token=POWER(n_slots) * STEP_S / n_slots),
+        get_policy(policy),
+        n_slots=n_slots,
+        cap_w=cap_w,
+        power_of_batch=POWER,
+    )
+    truth: dict[int, float] = {}
+    step_watts: list[float] = []
+    pending = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+    now = 0.0
+    while True:
+        while pending and pending[0].arrival_s <= now + 1e-12:
+            sched.submit(pending.pop(0))
+        sched.admit(now)
+        if not sched.live_rids:
+            if pending:
+                now = max(now, pending[0].arrival_s)
+                continue
+            break
+        interval_j = 0.0
+        for _ in range(steps_per_interval):
+            if not sched.live_rids:
+                break
+            watts = POWER(sched.n_active)
+            rec = sched.step_billing(1, decoded_slots=sched.n_active)
+            e = watts * STEP_S * BIAS
+            for rid in rec.rids:
+                truth[rid] = truth.get(rid, 0.0) + e / len(rec.rids)
+            interval_j += watts * STEP_S
+            step_watts.append(watts)
+            now += STEP_S
+            while pending and pending[0].arrival_s <= now + 1e-12:
+                sched.submit(pending.pop(0))
+        sealed = sched.seal_interval()
+        if sealed is not None:
+            sched.settle_interval(sealed.index, interval_j * BIAS)
+    return sched, truth, step_watts
+
+
+def run_wave(requests, max_batch, policy="throughput-max"):
+    """Wave executor on the same workload; returns (sched, truth).
+
+    Each wave decodes every member to its longest request; ground truth
+    still splits each step's energy across the requests *really* decoding
+    (members past their gen_len are padding), which is exactly the signal
+    whole-wave token-share billing smears.
+    """
+    sched = EnergySloScheduler(
+        EnergyPricer(j_per_token=POWER(max_batch) * STEP_S / max_batch),
+        get_policy(policy),
+        max_batch=max_batch,
+        power_of_batch=POWER,
+    )
+    truth: dict[int, float] = {}
+    pending = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+    now = 0.0
+    while True:
+        while pending and pending[0].arrival_s <= now + 1e-12:
+            sched.submit(pending.pop(0))
+        wave = sched.next_wave(now)
+        if wave is None:
+            if pending:
+                now = max(now, pending[0].arrival_s)
+                continue
+            break
+        k = sched.waves[-1].index
+        b = len(wave)
+        steps = max(r.gen_len - r.done_tokens for r in wave)
+        remaining = {r.rid: r.gen_len - r.done_tokens for r in wave}
+        watts = POWER(b)
+        for i in range(steps):
+            active = [rid for rid, rem in remaining.items() if rem > i]
+            e = watts * STEP_S * BIAS
+            for rid in active:
+                truth[rid] = truth.get(rid, 0.0) + e / len(active)
+        sched.complete_wave(k, steps)
+        sched.reconcile(k, watts * STEP_S * steps * BIAS)
+        now += STEP_S * steps
+    return sched, truth
+
+
+def billing_error(sched, truth) -> float:
+    """Mean relative |billed − truth| over requests with nonzero truth."""
+    errs = []
+    for row in sched.report_rows():
+        t = truth.get(row["rid"], 0.0)
+        if t > 0:
+            errs.append(abs(row["measured_j"] - t) / t)
+    return float(np.mean(errs)) if errs else 0.0
+
+
+def conservation_leak(sched) -> float:
+    """Relative |billed + overhead − settled| (0 = exact ledger)."""
+    overhead = getattr(sched, "overhead_j", 0.0)
+    billed = sum(r["measured_j"] for r in sched.report_rows())
+    return abs(billed + overhead - sched.spent_j) / max(abs(sched.spent_j), 1.0)
+
+
+def run(n_requests: int, seed: int) -> int:
+    n_slots = 8
+    spread_s = n_requests * 2.0 * STEP_S  # arrivals overlap decode heavily
+    requests = make_workload(n_requests, n_clients=3, spread_s=spread_s, seed=seed)
+    clone = lambda: [  # noqa: E731 — executors mutate their requests
+        Request(rid=r.rid, client=r.client, gen_len=r.gen_len,
+                arrival_s=r.arrival_s)
+        for r in requests
+    ]
+
+    step_sched, step_truth, _ = run_step(clone(), n_slots, steps_per_interval=4)
+    wave_sched, wave_truth = run_wave(clone(), n_slots)
+    step_err = billing_error(step_sched, step_truth)
+    wave_err = billing_error(wave_sched, wave_truth)
+    emit("serving_churn_step_err_pct", step_err * 100.0,
+         "mean per-request billing error, step granularity")
+    emit("serving_churn_wave_err_pct", wave_err * 100.0,
+         "mean per-request billing error, wave granularity")
+
+    cap_w = POWER(n_slots) - 1.0  # a full batch would blow the cap
+    cap_sched, _, cap_watts = run_step(
+        clone(), n_slots, steps_per_interval=4, policy="cap-strict", cap_w=cap_w
+    )
+    overshoot = sum(1 for w in cap_watts if w > cap_w + CAP_EPS_W)
+    emit("serving_churn_cap_overshoot_steps", float(overshoot),
+         f"steps over {cap_w:.0f} W under cap-strict churn")
+    emit("serving_churn_cap_peak_w", max(cap_watts) if cap_watts else 0.0,
+         "peak modelled step power under cap-strict churn")
+
+    failures = []
+    if not (step_err <= STEP_VS_WAVE_MARGIN * wave_err):
+        failures.append(
+            f"step billing error {step_err:.3%} not below "
+            f"{STEP_VS_WAVE_MARGIN:.0%} of wave error {wave_err:.3%}"
+        )
+    if overshoot:
+        failures.append(
+            f"cap-strict admission let {overshoot} step(s) over the "
+            f"{cap_w:.0f} W cap (peak {max(cap_watts):.1f} W)"
+        )
+    for label, s in (("step", step_sched), ("wave", wave_sched),
+                     ("cap", cap_sched)):
+        leak = conservation_leak(s)
+        if not math.isfinite(leak) or leak > CONSERVE_RTOL:
+            failures.append(f"{label} ledger leaks energy (rel {leak:.3g})")
+    for label, s in (("step", step_sched), ("wave", wave_sched)):
+        if len(s.finished) != n_requests:
+            failures.append(
+                f"{label} executor finished {len(s.finished)}/{n_requests}"
+            )
+
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}")
+        return 1
+    print(f"OK: step-granularity billing error {step_err:.3%} < "
+          f"{STEP_VS_WAVE_MARGIN:.0%} x wave error {wave_err:.3%} on the same "
+          f"churn workload; cap-strict held {cap_w:.0f} W at all "
+          f"{len(cap_watts)} step boundaries (peak {max(cap_watts):.1f} W)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    n_requests = args.requests if args.requests is not None else (
+        24 if args.smoke else 96)
+    return run(n_requests, args.seed)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

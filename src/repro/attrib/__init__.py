@@ -8,13 +8,16 @@ high temporal granularity" claim, made operational).
   hysteresis edges, binary-segmentation refinement) straight off
   `stream.FrameRing` views;
 * `attribute`  — marker-aligned energy ledgers: segments × markers ×
-  declared kernel timelines → per-kernel J / avg / peak / count;
+  declared kernel timelines → per-kernel J / avg / peak / count, plus
+  step-interval attribution (`interval_spans` / `attribute_intervals`)
+  for the continuous-batching serve loop — wave markers are the
+  degenerate one-interval case;
 * `signatures` — normalised per-kernel waveforms + nearest-signature
   matching so unlabeled segments in fresh traces can be identified;
 * `report`     — energy-ranked text / CSV / JSON emitters.
 
 Integration points: `train.loop` (per-step ledgers via `StepAttributor`),
-`launch.serve` (per-request-wave attribution), `power.tuner`
+`launch.serve` (per-request step-interval attribution), `power.tuner`
 (attribution-backed variant scoring), `benchmarks/attrib_accuracy.py`
 (the 20 kHz-vs-builtin-counter granularity experiment).
 """
@@ -25,6 +28,8 @@ from .attribute import (
     StepAttributor,
     attribute,
     attribute_block,
+    attribute_intervals,
+    interval_spans,
     marker_spans,
     refine_spans,
     spans_from_segments,
@@ -52,6 +57,8 @@ __all__ = [
     "StepAttributor",
     "attribute",
     "attribute_block",
+    "attribute_intervals",
+    "interval_spans",
     "marker_spans",
     "refine_spans",
     "spans_from_segments",

@@ -144,6 +144,31 @@ class EnergyLedger:
 
 
 # --------------------------------------------------------------------- spans
+def interval_spans(
+    markers: Iterable[tuple[str, float]],
+    char: str,
+    names: Sequence[str] | None = None,
+    start: int = 0,
+) -> list[KernelSpan]:
+    """Spans for the step intervals bracketed by one marker char.
+
+    The serving loop emits one occurrence of ``char`` per step interval (a
+    batch of decode steps); interval ``k`` runs from occurrence ``k`` to
+    occurrence ``k+1``.  Occurrence-indexed by construction, so repeated
+    brackets (step intervals, request waves, tuning trials) never collide
+    the way a wrapping marker alphabet does.  ``start`` skips already
+    settled intervals while keeping *global* interval indices in the
+    default names (``f"{char}{k}"``) — the index the scheduler settles by.
+    """
+    ts = [t for c, t in markers if c == char]
+    spans = []
+    for k in range(max(int(start), 0), len(ts) - 1):
+        j = k - start
+        name = names[j] if names is not None and j < len(names) else f"{char}{k}"
+        spans.append(KernelSpan(name, ts[k], ts[k + 1]))
+    return spans
+
+
 def marker_spans(
     markers: Iterable[tuple[str, float]],
     char: str,
@@ -151,17 +176,41 @@ def marker_spans(
 ) -> list[KernelSpan]:
     """Spans between consecutive occurrences of one marker char.
 
-    Occurrence-indexed by construction: span ``k`` runs from occurrence
-    ``k`` to occurrence ``k+1`` of ``char``, so repeated brackets (request
-    waves, tuning trials) never collide the way a wrapping marker alphabet
-    does.  Default names are ``f"{char}{k}"``.
+    The degenerate one-interval-per-wave case of :func:`interval_spans`
+    (``start=0``): span ``k`` runs from occurrence ``k`` to occurrence
+    ``k+1`` of ``char``.  Default names are ``f"{char}{k}"``.  Kept as the
+    wave-era entry point; existing goldens replay bit-identically through
+    either.
     """
-    ts = [t for c, t in markers if c == char]
-    spans = []
-    for k in range(len(ts) - 1):
-        name = names[k] if names is not None and k < len(names) else f"{char}{k}"
-        spans.append(KernelSpan(name, ts[k], ts[k + 1]))
-    return spans
+    return interval_spans(markers, char, names=names, start=0)
+
+
+def attribute_intervals(
+    block: FrameBlock,
+    markers: Iterable[tuple[str, float]],
+    char: str,
+    start: int = 0,
+    pair: int | None = None,
+    min_coverage: float = 0.0,
+    gap_factor: float = 3.0,
+) -> dict[int, LedgerEntry]:
+    """Attribute every retained step interval at once: {interval: entry}.
+
+    One `attribute` pass over all intervals of ``char`` from occurrence
+    ``start`` on, keyed by *global* interval index — what the continuous
+    batch settles `settle_interval(k, entry.energy_j)` against.  Intervals
+    the ring evicted or the gap logic rejects are simply absent (the
+    caller releases those at prediction); present entries carry the same
+    gap-aware energy/coverage semantics as any other attribution.
+    """
+    spans = interval_spans(markers, char, start=start)
+    ledger = attribute_block(
+        block, spans, pair=pair, min_coverage=min_coverage, gap_factor=gap_factor
+    )
+    out: dict[int, LedgerEntry] = {}
+    for name, entry in ledger.entries.items():
+        out[int(name[len(char):])] = entry
+    return out
 
 
 def timeline_spans(

@@ -16,7 +16,12 @@ sensor stack against the injected ground truth:
 * `harness` — `ChaosRun`: clean pass vs faulted pass over the same
   seeded fleet, `ChaosReport.check()` enforcing the conformance bound
   (energy deviation ≤ injected dropout fraction + 1 %, no NaNs, no
-  negative joules).
+  negative joules); `churn_billing_run` + `ChurnBillingReport`: a
+  continuous-batching step loop (staggered arrivals, mid-decode
+  eviction, per-interval markers) driven over an injected fleet, with
+  the billing-conformance contract (every interval settled-or-released,
+  billed + overhead ≡ settled exactly, nothing non-finite) enforced
+  under every shipped scenario.
 
 The degradation *handling* lives with the consumers: `stream.FleetMonitor`
 (health states, quorum power, holdover), `sched.PowerCapGovernor` (stale
@@ -31,7 +36,13 @@ from .faults import (
     PartialReads,
     Stall,
 )
-from .harness import ChaosReport, ChaosRun, DeviceOutcome
+from .harness import (
+    ChaosReport,
+    ChaosRun,
+    ChurnBillingReport,
+    DeviceOutcome,
+    churn_billing_run,
+)
 from .scenario import Scenario, periodic, shipped_scenarios
 from .transport import FaultLedger, FaultyTransport, inject
 
@@ -45,6 +56,8 @@ __all__ = [
     "Stall",
     "ChaosReport",
     "ChaosRun",
+    "ChurnBillingReport",
+    "churn_billing_run",
     "DeviceOutcome",
     "Scenario",
     "periodic",

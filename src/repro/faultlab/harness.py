@@ -234,3 +234,170 @@ class ChaosRun:
                 on_tick(t, fleet)
         fleet.poll_all()
         return {name: fleet[name].read().total_joules for name in fleet.names}
+
+
+# --------------------------------------------------------------------------
+# continuous-batching billing under chaos
+# --------------------------------------------------------------------------
+@dataclass
+class ChurnBillingReport:
+    """Step-granularity billing scored under one injected scenario.
+
+    The conformance contract is ledger *consistency*, not accuracy: faults
+    may shift or swallow marker windows (that uncertainty is what the
+    release-at-prediction rule is for), but the billing ledger must never
+    leak, double-bill, or go non-finite — every sealed interval settles
+    exactly once (measured or released), and per-request billed joules
+    plus unbilled overhead reproduce the total settled energy exactly.
+    """
+
+    scenario: Scenario
+    duration_s: float
+    n_intervals: int
+    settled: int
+    released: int
+    billed_j: float
+    overhead_j: float
+    spent_j: float
+    finished: int
+    evicted: int
+    rows: list[dict] = field(default_factory=list)
+
+    def check(self, rtol: float = 1e-9) -> list[str]:
+        """Billing-conformance violations (empty list = survived)."""
+        errs: list[str] = []
+        if self.settled + self.released != self.n_intervals:
+            errs.append(
+                f"{self.settled} settled + {self.released} released != "
+                f"{self.n_intervals} sealed intervals"
+            )
+        if not math.isfinite(self.spent_j) or self.spent_j < -1e-9:
+            errs.append(f"non-finite/negative settled energy {self.spent_j!r}")
+        leak = abs(self.billed_j + self.overhead_j - self.spent_j)
+        if leak > rtol * max(abs(self.spent_j), 1.0):
+            errs.append(
+                f"billing leak: billed {self.billed_j!r} + overhead "
+                f"{self.overhead_j!r} != settled {self.spent_j!r}"
+            )
+        for row in self.rows:
+            if not math.isfinite(row["measured_j"]) or row["measured_j"] < -1e-12:
+                errs.append(f"rid {row['rid']}: bad billed energy "
+                            f"{row['measured_j']!r}")
+        if not self.scenario.all_faults and self.released:
+            errs.append(
+                f"clean scenario released {self.released} interval(s) at "
+                f"prediction — every span should have measured"
+            )
+        return errs
+
+
+def churn_billing_run(
+    scenario: Scenario,
+    n_requests: int = 6,
+    n_slots: int = 2,
+    steps_per_interval: int = 3,
+    step_dt_s: float = 0.003,
+    arrive_every_steps: int = 2,
+    evict_at_step: int = 7,
+    n_devices: int = 2,
+    module: str = "pcie8pin-20a",
+    seed: int = 0,
+    window_s: float = 0.02,
+    ring_capacity: int = 1 << 15,
+    mark_char: str = "B",
+) -> ChurnBillingReport:
+    """Drive a `ContinuousBatch` step loop over an injected fleet.
+
+    A churn workload — staggered arrivals (one new request every
+    ``arrive_every_steps`` decode steps), mixed ``gen_len``s, one
+    deterministic mid-decode eviction — runs against ``n_devices``
+    fault-injected virtual sensors, with one marker occurrence bracketing
+    every step interval.  At the end every interval that still has an
+    attributable marker window settles from measurement; intervals whose
+    markers or frames the scenario swallowed are released at prediction
+    (the degraded-telemetry billing rule).  The returned report's
+    ``check()`` enforces the billing-conformance contract.
+    """
+    from repro.attrib import attribute_intervals
+    from repro.core import ConstantLoad
+    from repro.sched import ContinuousBatch, EnergyPricer, Request, get_policy
+    from repro.stream import make_virtual_fleet
+
+    fleet = make_virtual_fleet(
+        [ConstantLoad(12.0, 3.0 + 0.5 * i) for i in range(n_devices)],
+        module=module,
+        seed=seed,
+        window_s=window_s,
+        ring_capacity=ring_capacity,
+    )
+    inject(fleet, scenario)
+    total_w = 12.0 * sum(3.0 + 0.5 * i for i in range(n_devices))
+    pricer = EnergyPricer(j_per_token=total_w * step_dt_s / max(n_slots, 1))
+    batch = ContinuousBatch(pricer, get_policy("throughput-max"), n_slots=n_slots)
+
+    t = 0.0
+    step = 0
+    next_rid = 0
+    while True:
+        while next_rid < n_requests and step >= next_rid * arrive_every_steps:
+            batch.submit(Request(
+                rid=next_rid,
+                client=f"c{next_rid % 2}",
+                gen_len=3 + (next_rid % 3),
+                arrival_s=t,
+            ))
+            next_rid += 1
+        batch.admit(t)
+        if not batch.live_rids:
+            if next_rid < n_requests:
+                step = next_rid * arrive_every_steps  # idle to next arrival
+                continue
+            break
+        fleet.mark_all(mark_char)
+        for _ in range(max(steps_per_interval, 1)):
+            if not batch.live_rids:
+                break
+            batch.step_billing(1)
+            fleet.advance(step_dt_s)
+            t += step_dt_s
+            step += 1
+            if step == evict_at_step and batch.live_rids:
+                batch.retire(batch.live_rids[0])  # mid-decode eviction
+        batch.seal_interval()
+    fleet.mark_all(mark_char)  # closing bracket of the last interval
+    fleet.advance(step_dt_s)
+    t += step_dt_s
+    fleet.poll_all()
+
+    # settle every interval a device still measured; release the rest
+    energies: dict[int, float] = {}
+    for name in fleet.names:
+        ps = fleet[name]
+        block = fleet._locked_ring_read(ps, lambda ps=ps: ps.ring.latest())
+        for k, e in attribute_intervals(
+            block, ps.markers, mark_char, min_coverage=0.5
+        ).items():
+            energies[k] = energies.get(k, 0.0) + e.energy_j
+    settled = released = 0
+    for k in list(batch.unsettled()):
+        if energies.get(k, 0.0) > 0.0:
+            batch.settle_interval(k, energies[k])
+            settled += 1
+        else:
+            batch.release_interval(k)
+            released += 1
+    report = ChurnBillingReport(
+        scenario=scenario,
+        duration_s=t,
+        n_intervals=len(batch.intervals),
+        settled=settled,
+        released=released,
+        billed_j=batch.billed_j,
+        overhead_j=batch.overhead_j,
+        spent_j=batch.spent_j,
+        finished=len(batch.finished),
+        evicted=len(batch.evicted),
+        rows=batch.report_rows(),
+    )
+    fleet.close()
+    return report

@@ -1,22 +1,53 @@
-"""Serving launcher: scheduler-driven batching with energy telemetry.
+"""Serving launcher: continuous batching priced in joules.
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --smoke \
         --requests 16 --prompt-len 64 --gen-len 32 --policy energy-fair
 
-The wave loop is driven by `repro.sched.EnergySloScheduler`: every
-request is priced in joules at submission (per-kernel phase timeline →
-`EnergyPricer`), a policy (``--policy``: throughput-max, cap-strict,
-energy-fair) selects each wave under the joules budget (``--budget-j``)
-and optional fleet power cap (``--cap-w``), and the measured energy of
-every wave — attributed from the virtual sensor fleet's ring buffers —
-is reconciled back into the scheduler, correcting the pricer online.
+The main loop is a **step loop** over a fixed compiled decode batch,
+driven by `repro.sched.ContinuousBatch`: requests join and leave the
+live batch per decode step instead of per wave.
 
-With ``--fleet N`` (default 2, ``--fleet 0`` disables) a `FleetMonitor`
-over N virtual PowerSensor3 devices rides along: each device plays the
-modelled per-shard serving power, every request wave is bracketed with
-one occurrence of a single time-synced marker char, and per-wave
-**measured** J/token comes from `repro.attrib.attribute` over the ring
-buffers — occurrence-indexed, so any number of waves attribute cleanly.
+Slot lifecycle: each of the ``--decode-batch`` slots is *free*, *active*
+(occupied by a live request) or *draining* (its request finished or was
+evicted; the compiled batch shape still decodes the slot as padding,
+which is excluded from billing and throughput, and the slot is reusable
+at the next admission).  Admission happens between steps: the policy
+(``--policy``: throughput-max, cap-strict, energy-fair) orders the queue
+and bounds the number of live slots — so cap-strict holds the modelled
+batch power under ``--cap-w`` at step boundaries even as completions and
+arrivals churn the batch — and every admitted request takes a
+per-request joules commitment against ``--budget-j``.  Admitted prompts
+are prefilled at the compiled batch shape and their cache rows scattered
+into the live decode cache (chunked prefill admission; batch-global
+leaves such as the decode position clock are kept live).
+
+Step-interval attribution: with ``--fleet N`` (default 2, ``--fleet 0``
+disables), every batch of ``--steps-per-sync`` decode steps — one *step
+interval* — is bracketed by one occurrence of a single time-synced
+marker char on every virtual PowerSensor3 device.  The measured interval
+energy, attributed from the ring buffers via `repro.attrib`, is split
+across the requests occupying slots during that interval by real-token
+share and reconciled into the scheduler, correcting the `EnergyPricer`
+online.  Wave markers are the degenerate one-interval case of the same
+machinery.
+
+Degraded-telemetry billing rules (what lands on a request's bill when
+measurement is imperfect):
+
+    condition                               billing rule
+    --------------------------------------  ------------------------------
+    interval measured on all devices        measured J, split by token share
+    some devices missing the span           measured J scaled up by
+                                            n_devices / n_measured (shards
+                                            are identical by construction)
+    span evicted / markers lost (faults)    released at *predicted* J —
+                                            budget commitment settled, the
+                                            pricer correction not fed
+    padded (free/draining) slots            never billed; counted only in
+                                            the pricer's decoded-token
+                                            correction denominator
+    no live request in the interval         settled as fleet overhead, not
+                                            billed to any request
 """
 from __future__ import annotations
 
@@ -34,15 +65,17 @@ from repro.models import build_model
 from repro.power import EnergyTelemetry, StepCost
 from repro.sched import (
     POLICIES,
+    ContinuousBatch,
     EnergyPricer,
-    EnergySloScheduler,
     Request,
     format_report_rows,
     get_policy,
 )
 
-#: one char brackets every wave; wave k spans occurrences k .. k+1
-_WAVE_MARK = "W"
+#: one char brackets every step interval; interval k spans occurrences
+#: k .. k+1 of it (wave-era goldens use the same char, one wave = one
+#: interval)
+_STEP_MARK = "W"
 
 
 def _make_fleet(n_devices: int, total_watts: float, seed: int):
@@ -60,13 +93,61 @@ def _make_fleet(n_devices: int, total_watts: float, seed: int):
     )
 
 
+def _cache_batch_axes(prefill_fn, params, example_inputs):
+    """Which axis of every cache leaf is the batch axis (-1 = batch-global).
+
+    Probed abstractly (`jax.eval_shape`, nothing runs) by prefilling the
+    same prompt shape at batch 1 and batch 2 and diffing leaf shapes: the
+    axis that grew is the batch axis; leaves that didn't grow (the decode
+    position clock, shared norms) are batch-global and must *keep their
+    live value* when new requests scatter in.
+    """
+
+    def rebatch(x, bb):
+        return jax.ShapeDtypeStruct((bb,) + tuple(x.shape[1:]), x.dtype)
+
+    def probe(bb):
+        inputs = jax.tree.map(lambda x: rebatch(x, bb), example_inputs)
+        _, cache = jax.eval_shape(prefill_fn, params, inputs)
+        return cache
+
+    c1, c2 = probe(1), probe(2)
+
+    def axis(l1, l2):
+        for a, (s1, s2) in enumerate(zip(l1.shape, l2.shape)):
+            if s1 != s2:
+                return a
+        return -1
+
+    return jax.tree.map(axis, c1, c2)
+
+
+def _scatter_slots(live, fresh, axes, slots):
+    """Copy the freshly prefilled rows of ``slots`` into the live cache.
+
+    Per-leaf along its probed batch axis; batch-global leaves (axis -1)
+    keep the live value so the shared decode clock never rewinds.
+    """
+    idx = jnp.asarray(slots, dtype=jnp.int32)
+
+    def one(lv, fr, ax):
+        if ax < 0:
+            return lv
+        lv0 = jnp.moveaxis(lv, ax, 0)
+        fr0 = jnp.moveaxis(fr, ax, 0)
+        return jnp.moveaxis(lv0.at[idx].set(fr0[idx]), 0, ax)
+
+    return jax.tree.map(one, live, fresh, axes)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="rwkv6-3b")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full", dest="smoke", action="store_false")
     ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--decode-batch", type=int, default=4)
+    ap.add_argument("--decode-batch", type=int, default=4,
+                    help="compiled decode batch shape = number of slots")
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
@@ -79,6 +160,11 @@ def main(argv=None):
                     help="total joules budget for admission (0 = unlimited)")
     ap.add_argument("--cap-w", type=float, default=0.0,
                     help="fleet power cap for cap-strict admission (0 = uncapped)")
+    ap.add_argument("--steps-per-sync", type=int, default=4,
+                    help="decode steps per marker-bracketed step interval")
+    ap.add_argument("--arrive-every", type=int, default=0,
+                    help="request j arrives at decode step j*N (0 = all upfront) "
+                         "— mid-decode churn")
     ap.add_argument("--record", default=None, metavar="PATH",
                     help="record the fleet session to a trace archive "
                          "(replayable via repro.replay; needs --fleet > 0)")
@@ -92,10 +178,36 @@ def main(argv=None):
     params = model.init(jax.random.PRNGKey(args.seed))
     rng = np.random.default_rng(args.seed)
 
-    max_len = args.prompt_len + args.gen_len
     b = args.decode_batch
-    prefill = jax.jit(lambda p, t: model.prefill(p, t, max_len=max_len))
+    # the position clock is batch-global: one cache serves every request
+    # that ever occupies a slot, so its length must cover the whole run
+    max_len = args.prompt_len + min(args.requests * args.gen_len, 4096)
+
+    def _prefill_tokens(p, t):
+        return model.prefill(p, t, max_len=max_len)
+
+    def _prefill_encdec(p, inputs):
+        return model.prefill(p, inputs, max_len=max_len)
+
+    # both prefill paths jitted ONCE, next to the decoder — the compiled
+    # batch shape is fixed, so admission never recompiles
+    prefill = jax.jit(_prefill_tokens)
+    prefill_encdec = jax.jit(_prefill_encdec)
     decode = jax.jit(model.decode_step)
+
+    def _make_inputs(prompts: np.ndarray):
+        tokens = jnp.asarray(prompts)
+        if cfg.is_encdec:
+            frames = jnp.asarray(
+                rng.standard_normal((b, args.prompt_len, cfg.d_model)), jnp.float32
+            )
+            return {"frames": frames, "tokens": tokens}
+        return tokens
+
+    def _prefill(inputs):
+        if cfg.is_encdec:
+            return prefill_encdec(params, inputs)
+        return prefill(params, inputs)
 
     n = cfg.param_count_estimate()
     telemetry = EnergyTelemetry(
@@ -104,7 +216,7 @@ def main(argv=None):
     )
 
     # joule-priced admission: the per-kernel phase timeline prices one decode
-    # step, the measured wave ledgers correct that price online
+    # step, the measured interval ledgers correct that price online
     pricer = EnergyPricer.from_phases(
         telemetry.phases, telemetry.chip, tokens_per_step=b, dvfs=telemetry.dvfs
     )
@@ -113,18 +225,19 @@ def main(argv=None):
         if telemetry.modelled_step_time_s
         else 0.0
     )
-    sched = EnergySloScheduler(
+    sched = ContinuousBatch(
         pricer,
         get_policy(args.policy),
-        max_batch=b,
+        n_slots=b,
         budget_j=args.budget_j if args.budget_j > 0 else math.inf,
         cap_w=args.cap_w if args.cap_w > 0 else None,
-        # modelled wave power scales weakly with batch on this fleet model:
-        # expose the telemetry estimate so cap-strict has something to bound
+        # modelled batch power scales weakly with live slots on this fleet
+        # model: expose the telemetry estimate so cap-strict has something
+        # to bound at every step-boundary admission
         power_of_batch=lambda bb: modelled_watts * (0.5 + 0.5 * bb / b) if b else 0.0,
     )
-    for rid in range(args.requests):
-        sched.submit(Request(
+    pending = [
+        Request(
             rid=rid,
             client=f"client{rid % max(args.clients, 1)}",
             prompt_len=args.prompt_len,
@@ -132,7 +245,9 @@ def main(argv=None):
             payload=rng.integers(
                 2, cfg.vocab_size, size=args.prompt_len
             ).astype(np.int32),
-        ))
+        )
+        for rid in range(args.requests)
+    ]
 
     fleet = None
     recorder = None
@@ -147,137 +262,182 @@ def main(argv=None):
                       "policy": args.policy, "seed": args.seed},
             )
 
-    done_tokens = 0
-    # measured per-wave energy, resolved incrementally (one wave after its
-    # closing marker lands) so long runs never outlive the ring retention
-    wave_ledger = EnergyLedger()
-    wave_devices: dict[int, int] = {}  # wave index -> devices that attributed
-    wave_occ: dict[int, int] = {}  # wave index -> its opening marker occurrence
-    n_marks = 0  # total wave markers issued (flush marks shift occurrences)
-    modelled_wave_s = telemetry.modelled_step_time_s * args.gen_len
+    # measured per-interval energy, resolved incrementally (one interval
+    # after its closing marker lands) so long runs never outlive the ring
+    interval_ledger = EnergyLedger()
+    interval_devices: dict[int, int] = {}  # interval -> devices that attributed
+    interval_occ: dict[int, int] = {}  # interval -> its opening marker occurrence
+    n_marks = 0  # total markers issued (flush marks shift occurrences)
 
     def _mark_fleet() -> None:
         nonlocal n_marks
         if fleet is not None:
-            fleet.mark_all(_WAVE_MARK)
+            fleet.mark_all(_STEP_MARK)
             n_marks += 1
 
-    def _resolve_wave(k: int) -> None:
-        """Attribute wave k (occurrences k..k+1) and reconcile it.
+    def _resolve_interval(k: int) -> None:
+        """Attribute step interval k (its marker occurrence pair) and settle.
 
         The fleet plays modelled watts over *wall* time (the marker span),
         so raw measured joules are inflated by the span/modelled time ratio
-        (huge on CPU, ~1 on real hardware); the scheduler is reconciled on
+        (huge on CPU, ~1 on real hardware); the scheduler is settled on
         the modelled time base — each device's joules scaled by
-        ``modelled_wave_s / span`` — so predicted and measured J stay in
-        the same units and a ``--budget-j`` set from modelled numbers keeps
-        meaning something.  The raw sensor joules stay in ``wave_ledger``
-        untouched.
+        ``modelled interval time / span`` — so predicted and measured J
+        stay in the same units and a ``--budget-j`` set from modelled
+        numbers keeps meaning something.  The raw sensor joules stay in
+        ``interval_ledger`` untouched.
         """
-        if fleet is None or k < 0 or k in wave_devices or k not in wave_occ:
+        if fleet is None or k < 0 or k in interval_devices or k not in interval_occ:
             return
-        occ = wave_occ[k]  # the wave closes at the *next* marker, occ + 1
+        occ = interval_occ[k]  # the interval closes at the *next* marker
+        modelled_s = telemetry.modelled_step_time_s * sched.intervals[k].steps
         n_dev = 0
         energy = 0.0
         for name in fleet.names:
-            hit = fleet.marker_window(name, _WAVE_MARK, occurrence=occ, occurrence_b=occ + 1)
+            hit = fleet.marker_window(
+                name, _STEP_MARK, occurrence=occ, occurrence_b=occ + 1
+            )
             if hit is None:
                 continue
             t0, t1, block = hit
             led = attribute_block(
-                block, [KernelSpan(f"wave{k}", t0, t1)], min_coverage=0.9
+                block, [KernelSpan(f"int{k}", t0, t1)], min_coverage=0.9
             )
             if led.entries:
-                wave_ledger.absorb(led)
+                interval_ledger.absorb(led)
                 dev_j = led.total_energy_j
-                if modelled_wave_s > 0 and t1 > t0:
-                    dev_j *= modelled_wave_s / (t1 - t0)
+                if modelled_s > 0 and t1 > t0:
+                    dev_j *= modelled_s / (t1 - t0)
                 energy += dev_j
                 n_dev += 1
         if n_dev:
-            wave_devices[k] = n_dev
+            interval_devices[k] = n_dev
             # devices are identical shards: scale up for any whose ring had
             # already evicted the span, instead of silently undercounting
             energy *= len(fleet.names) / n_dev
-            sched.reconcile(k, energy)
+            sched.settle_interval(k, energy)
 
-    t0 = time.perf_counter()
-    t_wave = t0
-    while True:
-        wave = sched.next_wave(time.perf_counter() - t0)
-        if wave is None and sched.queue and fleet is not None and sched.unreconciled():
-            # blocked on in-flight commitments, not the hard budget: flush
-            # the pending wave's closing marker, reconcile, and retry
+    def _flush_and_settle(release_rest: bool) -> None:
+        """Flush the open interval's closing marker; settle what measured,
+        optionally release the rest at prediction."""
+        if fleet is not None and sched.intervals:
             _mark_fleet()
             fleet.advance(0.01)
-            for kk in list(sched.unreconciled()):
-                _resolve_wave(kk)
-            for kk in list(sched.unreconciled()):
-                # closing marker just flushed yet still unattributable: the
-                # span is gone from the ring — settle at prediction now so
-                # the freed commitment can admit what is still queued
-                sched.release_wave(kk)
-            wave = sched.next_wave(time.perf_counter() - t0)
-        if wave is None:
-            break
-        k = sched.waves[-1].index
-        batch = [r.payload for r in wave]
-        while len(batch) < b:  # pad the last wave to the compiled batch shape
-            batch.append(batch[-1])
-        wave_occ[k] = n_marks
-        _mark_fleet()
-        tokens = jnp.asarray(np.stack(batch))
-        if cfg.is_encdec:
-            frames = jnp.asarray(
-                rng.standard_normal((b, args.prompt_len, cfg.d_model)), jnp.float32
+            for kk in list(sched.unsettled()):
+                _resolve_interval(kk)
+        if release_rest:
+            for kk in list(sched.unsettled()):
+                sched.release_interval(kk)
+
+    t0 = time.perf_counter()
+    t_sync = t0
+    step_count = 0  # decode steps executed (the churn arrival clock)
+    billed_tokens = 0  # real-request tokens (padded slots excluded)
+    decoded_tokens = 0  # what the hardware ran, padded slots included
+    logits = None
+    cache = None
+    cache_axes = None
+    while True:
+        # churn arrivals: request j reaches the queue at decode step j*N
+        while pending and (
+            args.arrive_every <= 0
+            or step_count >= (pending[0].rid * args.arrive_every)
+        ):
+            sched.submit(pending.pop(0))
+        admitted = sched.admit(time.perf_counter() - t0)
+        if not sched.live_rids:
+            if sched.queue and sched.unsettled():
+                # blocked on in-flight interval settlements, not the hard
+                # budget: flush the open interval's closing marker, settle,
+                # release what can never measure, and retry admission
+                _flush_and_settle(release_rest=True)
+                admitted = sched.admit(time.perf_counter() - t0)
+            if not admitted:
+                if sched.queue:
+                    break  # starved by the budget: accounted below
+                if pending:
+                    # idle until the next churn arrival is due
+                    step_count = pending[0].rid * args.arrive_every
+                    continue
+                break
+        if admitted:
+            # chunked prefill admission at the compiled batch shape: the
+            # admitted slots' prompt rows are real, the rest placeholder,
+            # and only the admitted rows scatter into the live cache
+            adm = dict(admitted)  # slot -> request
+            filler = admitted[0][1].payload
+            prompts = np.stack(
+                [adm[i].payload if i in adm else filler for i in range(b)]
             )
-            logits, cache = jax.jit(
-                lambda p, fr, t: model.prefill(p, {"frames": fr, "tokens": t}, max_len=max_len)
-            )(params, frames, tokens)
-        else:
-            logits, cache = prefill(params, tokens)
-        for i in range(args.gen_len):
+            new_logits, new_cache = _prefill(_make_inputs(prompts))
+            slots = [slot for slot, _ in admitted]
+            if cache is None:
+                logits, cache = new_logits, new_cache
+            else:
+                if cache_axes is None:
+                    cache_axes = _cache_batch_axes(
+                        _prefill_encdec if cfg.is_encdec else _prefill_tokens,
+                        params,
+                        _make_inputs(prompts),
+                    )
+                idx = jnp.asarray(slots, dtype=jnp.int32)
+                logits = logits.at[idx].set(new_logits[idx])
+                cache = _scatter_slots(cache, new_cache, cache_axes, slots)
+        # one step interval: marker bracket + up to --steps-per-sync steps
+        k = sched.current_interval
+        interval_occ[k] = n_marks
+        _mark_fleet()
+        for _ in range(max(args.steps_per_sync, 1)):
+            if not sched.live_rids:
+                break
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32) % cfg.vocab_size
             logits, cache = decode(params, cache, tok)
-            telemetry.record_step(k * args.gen_len + i, 0.0, b)
-            done_tokens += b
-        sched.complete_wave(k, args.gen_len, decoded_tokens=b * args.gen_len)
+            rec = sched.step_billing(1)
+            telemetry.record_step(step_count, 0.0, b)
+            step_count += 1
+            billed_tokens += rec.billed_tokens
+            decoded_tokens += rec.decoded_tokens
+        sealed = sched.seal_interval()
+        if sealed is None:
+            interval_occ.pop(k, None)
+            continue
         if fleet is None:
             # no sensors to measure against: settle at prediction right away
             # so budget commitments never pile up unreleased
-            sched.release_wave(k)
-        if fleet is not None:
-            # devices play modelled power over the wave's wall time
+            sched.release_interval(sealed.index)
+        else:
+            # devices play modelled power over the interval's wall time
             now = time.perf_counter()
-            fleet.advance(now - t_wave)
-            t_wave = now
-            # this wave's advance flushed the previous wave's closing marker
-            _resolve_wave(k - 1)
+            fleet.advance(now - t_sync)
+            t_sync = now
+            # this interval's advance flushed the previous one's closing
+            # marker: settle everything that is now attributable
+            for kk in list(sched.unsettled()):
+                _resolve_interval(kk)
             if recorder is not None:
-                # tap the rings once per wave: eviction between taps would
-                # punch (counted) holes in the archive
+                # tap the rings once per interval: eviction between taps
+                # would punch (counted) holes in the archive
                 recorder.capture()
-    n_waves = len(sched.waves)
-    if fleet is not None and n_waves:
-        _mark_fleet()  # closing bracket of the last wave
-        fleet.advance(0.01)  # flush the closing marker onto the stream
-        for kk in list(sched.unreconciled()):
-            _resolve_wave(kk)
-    # waves whose span the ring already evicted can never be measured:
-    # release them so their budget commitment is settled, not leaked
-    for kk in list(sched.unreconciled()):
-        sched.release_wave(kk)
+    n_intervals = len(sched.intervals)
+    # closing bracket of the last interval, then settle or release the rest
+    _flush_and_settle(release_rest=True)
     # anything still queued when the loop gave up was starved by the budget:
     # account for it as rejected rather than dropping it silently
-    if sched.queue:
+    if sched.queue or pending:
         sched.rejected.extend(sched.queue)
+        sched.rejected.extend(pending)
         sched.queue.clear()
+        pending.clear()
     dt = time.perf_counter() - t0
     s = telemetry.summary()
     print(f"served {len(sched.finished)}/{args.requests} requests "
-          f"({len(sched.rejected)} rejected by SLO), {done_tokens} tokens in "
-          f"{dt:.2f}s ({done_tokens/dt:.1f} tok/s wall on CPU) "
-          f"over {n_waves} {args.policy} waves")
+          f"({len(sched.rejected)} rejected by SLO), {billed_tokens} tokens in "
+          f"{dt:.2f}s ({billed_tokens/dt:.1f} tok/s wall on CPU) "
+          f"over {step_count} decode steps / {n_intervals} {args.policy} intervals")
+    if decoded_tokens:
+        print(f"slot utilization: {billed_tokens}/{decoded_tokens} decoded "
+              f"tokens billed ({billed_tokens/decoded_tokens:.0%}; padded "
+              f"slots excluded from billing and throughput)")
     if s:
         print(f"modelled: {s['j_per_token']*1e3:.3f} mJ/token, "
               f"{s['modelled_step_s']*1e3:.3f} ms/decode-step on {telemetry.chip.name}")
@@ -286,17 +446,24 @@ def main(argv=None):
         print(f"fleet: {snap.aggregate.n_devices} devices, "
               f"{snap.aggregate.mean_w:.1f} W windowed mean, "
               f"{snap.aggregate.energy_j:.2f} J in window")
-        print(render_text(wave_ledger, title="per-wave measured energy (raw sensor J)"))
+        print(render_text(
+            interval_ledger, title="per-interval measured energy (raw sensor J)"
+        ))
         print("per-request energy SLO accounting, modelled time base "
               f"(pricer correction {pricer.correction:.3f} after "
-              f"{pricer.n_updates} waves):")
+              f"{pricer.n_updates} intervals):")
         print(format_report_rows(sched.report_rows()))
-        missing = n_waves - len(wave_devices)
-        if missing:
-            print(f"  ({missing} waves not individually attributed: "
+        released = sum(1 for r in sched.intervals if r.released)
+        if released:
+            print(f"  ({released} intervals settled at prediction: "
                   f"ring history evicted)")
+        if sched.overhead_j:
+            print(f"  (fleet overhead not billed to any request: "
+                  f"{sched.overhead_j:.4f} J)")
         if recorder is not None:
-            archive = recorder.save(args.record, extra_meta={"waves": n_waves})
+            archive = recorder.save(
+                args.record, extra_meta={"intervals": n_intervals}
+            )
             print(f"recorded {archive.n_frames} frames / {len(archive)} devices "
                   f"to {args.record} (replay: repro.replay.ReplayFleet)")
         fleet.close()

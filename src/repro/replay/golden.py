@@ -164,6 +164,105 @@ def _record_serve_wave() -> tuple[TraceArchive, dict[str, float]]:
     return archive, metrics
 
 
+def _record_serve_churn() -> tuple[TraceArchive, dict[str, float]]:
+    """Continuous-batching churn: a live `ContinuousBatch` drives the load.
+
+    The churn workload (staggered arrivals onto 3 slots, mixed gen_lens,
+    completions freeing slots mid-run) is executed first to derive the
+    per-step slot-occupancy staircase; a `TraceLoad` device then plays
+    ``20 + 12·occupancy`` watts over the recorded session, with one
+    ``"I"`` marker occurrence bracketing every step interval.  The
+    settled billing totals are pinned as live-only metrics, so the golden
+    gates step-interval attribution *and* the billing ledger — not just
+    the sensor stream.
+    """
+    import numpy as np
+
+    from repro.attrib import attribute_intervals
+    from repro.core import ConstantLoad, TraceLoad
+    from repro.sched import ContinuousBatch, EnergyPricer, Request, get_policy
+    from repro.stream import make_virtual_fleet
+
+    step_dt = 0.005
+    n_slots, n_requests = 3, 7
+    batch = ContinuousBatch(
+        EnergyPricer(j_per_token=(20.0 + 12.0 * n_slots) * step_dt / n_slots),
+        get_policy("throughput-max"),
+        n_slots=n_slots,
+    )
+    occupancy: list[int] = []
+    t, step, next_rid = 0.0, 0, 0
+    while True:
+        while next_rid < n_requests and step >= next_rid * 2:
+            batch.submit(Request(
+                rid=next_rid, client=f"c{next_rid % 2}",
+                gen_len=2 + (next_rid % 3), arrival_s=t,
+            ))
+            next_rid += 1
+        batch.admit(t)
+        if not batch.live_rids:
+            if next_rid < n_requests:
+                step = next_rid * 2
+                continue
+            break
+        for _ in range(2):  # two decode steps per marker-bracketed interval
+            if not batch.live_rids:
+                break
+            occupancy.append(batch.n_active)
+            batch.step_billing(1)
+            step += 1
+            t += step_dt
+        batch.seal_interval()
+
+    # near-vertical staircase edges: each step holds its watts for the
+    # whole step and jumps 10 µs before the next one
+    times, watts = [], []
+    for i, occ in enumerate(occupancy):
+        times += [i * step_dt, (i + 1) * step_dt - 1e-5]
+        watts += [20.0 + 12.0 * occ] * 2
+    fleet = make_virtual_fleet(
+        [
+            TraceLoad(times_s=np.array(times), watts=np.array(watts), volts=12.0),
+            ConstantLoad(12.0, 2.5),
+        ],
+        window_s=0.02,
+        seed=103,
+        ring_capacity=1 << 13,
+    )
+    rec = SessionRecorder(fleet)
+    for iv in batch.intervals:
+        fleet.mark_all("I")
+        fleet.run_for(iv.steps * step_dt, chunk_s=0.005)
+        rec.capture()
+    fleet.mark_all("I")  # closing bracket of the last interval
+    fleet.run_for(0.005, chunk_s=0.005)
+    archive = rec.finalize(extra_meta={"scenario": "serve-churn"})
+
+    # settle the billing ledger from the measured marker windows
+    energies: dict[int, float] = {}
+    for name in fleet.names:
+        ps = fleet[name]
+        block = fleet._locked_ring_read(ps, lambda ps=ps: ps.ring.latest())
+        for k, e in attribute_intervals(block, ps.markers, "I").items():
+            energies[k] = energies.get(k, 0.0) + e.energy_j
+    released = 0
+    for k in list(batch.unsettled()):
+        if energies.get(k, 0.0) > 0.0:
+            batch.settle_interval(k, energies[k])
+        else:
+            batch.release_interval(k)
+            released += 1
+    metrics = session_metrics(fleet, "I", 0.02)
+    # live-only: the billing ledger is the scheduler's, not the sensors'
+    metrics["live.billed_j"] = batch.billed_j
+    metrics["live.overhead_j"] = batch.overhead_j
+    metrics["live.spent_j"] = batch.spent_j
+    metrics["live.released_intervals"] = float(released)
+    metrics["live.finished"] = float(len(batch.finished))
+    fleet.close()
+    return archive, metrics
+
+
 def _record_governor_step() -> tuple[TraceArchive, dict[str, float]]:
     """A power-cap governor riding out a load step on a calibrated plant."""
     from repro.sched import (
@@ -239,6 +338,14 @@ SCENARIOS: dict[str, GoldenScenario] = {
         wave_char="W",
         window_s=0.05,
         record=_record_serve_wave,
+    ),
+    "serve-churn": GoldenScenario(
+        name="serve-churn",
+        description="continuous-batching churn: occupancy staircase with "
+                    "per-interval markers and a settled billing ledger",
+        wave_char="I",
+        window_s=0.02,
+        record=_record_serve_churn,
     ),
     "governor-step": GoldenScenario(
         name="governor-step",

@@ -8,15 +8,21 @@ attribution (`repro.attrib`) feed a controller and a scheduler that
 * `governor`  — `PowerCapGovernor`: PI power-cap control (anti-windup,
   hysteresis, minimum dwell) actuating modelled DVFS states × decode
   batch (`OperatingGrid`) over a `VirtualPlant` of sensor devices;
-* `scheduler` — `EnergySloScheduler`: joule-priced admission and wave
-  batching (`EnergyPricer` from attrib ledgers / per-kernel signatures /
-  model phases), with measured-vs-predicted reconciliation per wave;
+* `scheduler` — `ContinuousBatch`: joule-priced continuous batching at
+  step granularity (requests join/leave the live decode batch per step;
+  per-request budget commitments; measured step-interval energy split
+  across slot occupants), plus `EnergySloScheduler`, the wave-granularity
+  compatibility shim over the same core (`EnergyPricer` from attrib
+  ledgers / per-kernel signatures / model phases, measured-vs-predicted
+  reconciliation per wave);
 * `policies`  — throughput-max, cap-strict and energy-fair policies plus
-  `compare_policies`, the benchmark-comparable harness.
+  `compare_policies`, the benchmark-comparable harness (wave and churn
+  executors).
 
-Integration points: `launch.serve` (the serving wave loop is scheduler
+Integration points: `launch.serve` (the serving step loop is scheduler
 driven), `benchmarks/governor_cap.py` (cap adherence at 20 kHz vs
-builtin-counter telemetry rates), `examples/governor_serve.py`.
+builtin-counter telemetry rates), `benchmarks/serving_churn.py`
+(step-vs-wave billing error under churn), `examples/governor_serve.py`.
 """
 from .governor import (
     GovernorConfig,
@@ -43,9 +49,12 @@ from .policies import (
     get_policy,
 )
 from .scheduler import (
+    ContinuousBatch,
     EnergyPricer,
     EnergySloScheduler,
+    IntervalRecord,
     Request,
+    StepRecord,
     WaveRecord,
     format_report_rows,
 )
@@ -71,9 +80,12 @@ __all__ = [
     "ThroughputMaxPolicy",
     "compare_policies",
     "get_policy",
+    "ContinuousBatch",
     "EnergyPricer",
     "EnergySloScheduler",
+    "IntervalRecord",
     "Request",
+    "StepRecord",
     "WaveRecord",
     "format_report_rows",
 ]

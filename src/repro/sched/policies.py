@@ -143,6 +143,71 @@ class PolicyScore:
     finished: int
 
 
+def _execute_churn(
+    sched,
+    requests,
+    power_of_batch: Callable[[int], float],
+    time_of_batch: Callable[[int], float],
+    measured_bias: float,
+    steps_per_interval: int,
+) -> PolicyScore:
+    """Analytic step executor: churn over a `ContinuousBatch` slot model.
+
+    Requests arrive mid-decode by ``arrival_s``, admissions happen at step
+    -interval boundaries, completions retire slots immediately, and each
+    step's power/time follow the *live occupancy* (not the compiled batch
+    shape) so policies are scored on what the batch actually did.
+    """
+    pending = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+    total_tokens = 0
+    total_time = 0.0
+    total_j = 0.0
+    peak_w = 0.0
+    now = 0.0
+    while True:
+        while pending and pending[0].arrival_s <= now + 1e-12:
+            sched.submit(pending.pop(0))
+        sched.admit(now)
+        if not sched.live_rids:
+            if sched.queue:
+                break  # budget-starved: nothing admissible ever again
+            if pending:
+                now = max(now, pending[0].arrival_s)
+                continue
+            break
+        interval_j = 0.0
+        for _ in range(max(steps_per_interval, 1)):
+            if not sched.live_rids:
+                break
+            occ = sched.n_active
+            watts = power_of_batch(occ)
+            dt = time_of_batch(occ)
+            rec = sched.step_billing(1, decoded_slots=occ)
+            interval_j += watts * dt
+            total_tokens += rec.billed_tokens
+            total_time += dt
+            peak_w = max(peak_w, watts)
+            now += dt
+            # mid-interval arrivals queue up; admitted at the next boundary
+            while pending and pending[0].arrival_s <= now + 1e-12:
+                sched.submit(pending.pop(0))
+        sealed = sched.seal_interval()
+        if sealed is not None:
+            measured = interval_j * measured_bias
+            sched.settle_interval(sealed.index, measured)
+            total_j += measured
+    energies = list(sched.client_energy_j.values()) or [0.0]
+    return PolicyScore(
+        name=sched.policy.name,
+        tokens_per_s=total_tokens / total_time if total_time else 0.0,
+        j_per_token=total_j / total_tokens if total_tokens else 0.0,
+        peak_wave_w=peak_w,
+        fairness_spread_j=max(energies) - min(energies),
+        waves=len(sched.intervals),
+        finished=len(sched.finished),
+    )
+
+
 def compare_policies(
     n_requests: int = 24,
     n_clients: int = 3,
@@ -156,10 +221,13 @@ def compare_policies(
     measured_bias: float = 1.1,
     seed: int = 0,
     policies: Sequence[str] | None = None,
+    churn: bool = False,
+    arrival_spread_s: float = 0.05,
+    steps_per_interval: int = 4,
 ) -> dict[str, PolicyScore]:
-    """Run each policy over one synthetic workload; analytic wave execution.
+    """Run each policy over one synthetic workload; analytic execution.
 
-    Every policy sees the identical request set (same seed): per-wave time
+    Every policy sees the identical request set (same seed): per-batch time
     and power come from the supplied batch models (defaults: linear power,
     constant step time), measured energy is the prediction scaled by
     ``measured_bias`` so the pricer's reconciliation loop is exercised.
@@ -168,10 +236,21 @@ def compare_policies(
     policies when there is not enough energy for everyone.  Scores are
     directly comparable — this is what the sched tests pin the policy
     ranking with.
+
+    Two executors share the scoring surface:
+
+    * the default **wave** executor (`EnergySloScheduler`): serial waves,
+      each decoding every member to the longest request — the legacy
+      granularity, kept byte-identical for the pinned ranking tests;
+    * ``churn=True`` runs the **step** executor (`ContinuousBatch`):
+      arrivals spread over ``arrival_spread_s`` join the live batch
+      mid-decode, completions free slots immediately, and power follows
+      the per-step occupancy.  ``PolicyScore.waves`` then counts sealed
+      step intervals and ``peak_wave_w`` the peak *step* power.
     """
     import numpy as np
 
-    from .scheduler import EnergyPricer, EnergySloScheduler, Request
+    from .scheduler import ContinuousBatch, EnergyPricer, EnergySloScheduler, Request
 
     power_of_batch = power_of_batch or (lambda b: 80.0 + 15.0 * b)
     time_of_batch = time_of_batch or (lambda b: 1e-3)
@@ -187,10 +266,37 @@ def compare_policies(
     budget_j = math.inf
     if budget_frac is not None:
         budget_j = budget_frac * j_per_token * float(np.sum(gen_lens))
+    arrivals = None
+    if churn:
+        # drawn *after* the shared draws so the wave path stays byte-identical
+        arrivals = np.sort(rng.uniform(0.0, arrival_spread_s, size=n_requests))
 
     out: dict[str, PolicyScore] = {}
     for pname in policies or sorted(POLICIES):
         policy = get_policy(pname)
+        if churn:
+            sched = ContinuousBatch(
+                EnergyPricer(j_per_token=j_per_token),
+                policy,
+                n_slots=max_batch,
+                budget_j=budget_j,
+                cap_w=cap_w,
+                power_of_batch=power_of_batch,
+            )
+            out[pname] = _execute_churn(
+                sched,
+                [
+                    Request(rid=rid, client=clients[rid],
+                            gen_len=int(gen_lens[rid]),
+                            arrival_s=float(arrivals[rid]))
+                    for rid in range(n_requests)
+                ],
+                power_of_batch,
+                time_of_batch,
+                measured_bias,
+                steps_per_interval,
+            )
+            continue
         sched = EnergySloScheduler(
             EnergyPricer(j_per_token=j_per_token),
             policy,

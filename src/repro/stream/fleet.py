@@ -309,6 +309,34 @@ class FleetMonitor:
             return None
         return t0, t1, block
 
+    def marker_windows(
+        self,
+        device: str,
+        char: str,
+        start_occurrence: int = 0,
+    ) -> list[tuple[int, float, float, FrameBlock]]:
+        """All retained step intervals of one repeated marker char.
+
+        Returns ``(k, t0, t1, block)`` for every interval ``k`` (occurrence
+        ``k`` → ``k+1`` of ``char``) from ``start_occurrence`` on that the
+        ring still fully retains, with `marker_window`'s integrity rules
+        applied per interval.  Unretainable intervals are *skipped, not a
+        stop*: after a fault or head eviction swallows interval ``k``,
+        later intervals may still be intact — the continuous-batching
+        settle loop releases the missing ones at prediction and settles
+        the rest from measurement.
+        """
+        ps = self._sensors[device]
+        hits = [t for c, t in ps.markers if c == char]
+        out: list[tuple[int, float, float, FrameBlock]] = []
+        for k in range(max(int(start_occurrence), 0), len(hits) - 1):
+            hit = self.marker_window(device, char, occurrence=k, occurrence_b=k + 1)
+            if hit is None:
+                continue
+            t0, t1, block = hit
+            out.append((k, t0, t1, block))
+        return out
+
     def interval(
         self,
         char_a: str,

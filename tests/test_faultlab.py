@@ -321,3 +321,27 @@ def test_corruption_marker_regression():
     starts = [s.t0_s for s in spans]
     assert starts == sorted(starts)
     assert len(spans) <= 10  # corruption may eat markers, never invent order
+
+
+# ---------------------------------------------- churn billing conformance
+@pytest.mark.parametrize(
+    "name", sorted(shipped_scenarios()), ids=lambda s: s
+)
+def test_shipped_scenario_churn_billing_conformance(name):
+    """Every shipped chaos scenario through the live batch-mutation paths.
+
+    A `ContinuousBatch` churn workload (staggered admissions, a mid-decode
+    eviction, end-of-run settlement from step-interval attribution) runs
+    against the faulted fleet; the contract is *consistency*, not
+    accuracy — faults may shift marker windows, but every interval must
+    end settled-or-released, the ledger must conserve billed + overhead
+    == spent exactly, and no row may go non-finite or negative.  A clean
+    scenario must additionally settle everything (zero released).
+    """
+    from repro.faultlab import churn_billing_run, shipped_scenarios as shipped
+
+    report = churn_billing_run(shipped()[name])
+    assert report.check() == [], report
+    assert report.n_intervals > 0
+    assert report.finished > 0  # churn actually served requests
+    assert report.evicted == 1  # the mid-decode retirement happened

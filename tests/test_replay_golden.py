@@ -192,3 +192,41 @@ def test_partial_regen_preserves_other_scenarios(tmp_path):
     manifest = load_manifest(work)
     assert set(manifest["scenarios"]) == set(SCENARIOS)
     assert check_goldens(work, rerecord=False) == []
+
+
+def test_wave_goldens_attribute_bit_identically_through_intervals():
+    """Wave-marker goldens through the refactored attribution path.
+
+    Wave markers are the degenerate one-interval-per-wave case of step
+    -interval attribution: `attribute_intervals` keyed by global interval
+    index must reproduce the legacy `attribute_block(marker_spans(...))`
+    ledger **bit-for-bit** (`==`, not approx) on every committed golden
+    that carries markers — clean serving and chaos recordings alike.
+    """
+    from repro.attrib import attribute_block, attribute_intervals, marker_spans
+    from repro.replay import ReplayFleet
+
+    manifest = load_manifest(GOLDEN_DIR)
+    checked = 0
+    for name, scenario in sorted(SCENARIOS.items()):
+        char = scenario.wave_char
+        if char is None:
+            continue
+        entry = manifest["scenarios"][name]
+        archive = TraceArchive.load(GOLDEN_DIR / entry["archive"])
+        fleet = ReplayFleet(archive, window_s=scenario.window_s)
+        try:
+            fleet.drain()
+            for dev in fleet.monitor.names:
+                ps = fleet.monitor[dev]
+                block = ps.ring.latest()
+                legacy = attribute_block(block, marker_spans(ps.markers, char))
+                stepped = attribute_intervals(block, ps.markers, char)
+                assert {
+                    int(n[len(char):]): e for n, e in legacy.entries.items()
+                } == stepped, (name, dev)
+                if legacy.entries:
+                    checked += 1
+        finally:
+            fleet.close()
+    assert checked > 0  # the parity claim was exercised, not vacuous

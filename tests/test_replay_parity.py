@@ -189,7 +189,7 @@ def test_serve_launcher_record_flag(tmp_path):
     assert len(archive) == 2
     assert archive.n_frames > 0
     assert archive.meta["launcher"] == "serve"
-    assert archive.meta["waves"] >= 1
+    assert archive.meta["intervals"] >= 1
     # at least one wave bracket per device made it into the archive
     assert all(tr.marker_chars for tr in archive.devices.values())
     replay = ReplayFleet(archive)

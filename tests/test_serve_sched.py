@@ -1,4 +1,4 @@
-"""Integration: the serving launcher's scheduler-driven wave loop."""
+"""Integration: the serving launcher's continuous-batching step loop."""
 import pytest
 
 from repro.launch import serve
@@ -12,7 +12,7 @@ def test_serve_scheduler_loop_end_to_end(capsys):
     ])
     out = capsys.readouterr().out
     assert "served 6/6 requests" in out
-    assert "energy-fair waves" in out
+    assert "energy-fair intervals" in out
     assert "per-request energy SLO accounting" in out
     # every request row is printed with measured energy attributed
     for rid in range(6):
@@ -28,3 +28,32 @@ def test_serve_budget_rejects_when_exhausted(capsys):
     out = capsys.readouterr().out
     assert "served 0/4 requests" in out
     assert "(4 rejected by SLO)" in out
+
+
+def test_serve_bills_only_real_tokens(capsys):
+    # 3 requests on 2 slots: the last interval decodes with one padded slot,
+    # so billed tokens < decoded tokens and only real tokens are reported
+    serve.main([
+        "--arch", "rwkv6-3b", "--smoke", "--requests", "3", "--gen-len", "4",
+        "--prompt-len", "8", "--decode-batch", "2", "--fleet", "0",
+    ])
+    out = capsys.readouterr().out
+    assert "served 3/3 requests" in out
+    assert "(0 rejected by SLO), 12 tokens" in out  # 3 x 4, padding excluded
+    assert "slot utilization:" in out
+    assert "padded slots excluded" in out
+
+
+def test_serve_churn_arrivals_mid_decode(capsys):
+    # requests trickle in every 2 decode steps, joining the live batch
+    # mid-decode; all finish and all their tokens are billed exactly once
+    serve.main([
+        "--arch", "rwkv6-3b", "--smoke", "--requests", "5", "--gen-len", "6",
+        "--prompt-len", "8", "--decode-batch", "2", "--fleet", "2",
+        "--arrive-every", "2", "--steps-per-sync", "3",
+    ])
+    out = capsys.readouterr().out
+    assert "served 5/5 requests" in out
+    assert "(0 rejected by SLO), 30 tokens" in out  # 5 x 6, billed exactly once
+    for rid in range(5):
+        assert f"\n  {rid:>3} client" in out
