@@ -31,7 +31,7 @@ from repro.core import ConstantLoad, PowerSensor, TraceLoad, make_device
 from repro.core.calibration import calibrate
 from repro.power import BuiltinCounterMeter, V5E, Phase, render_phases
 
-from .common import emit
+from .common import BenchReport, add_json_arg, emit
 
 BOUNDARY_TOL_S = 2e-3
 ENERGY_TOL = 0.05
@@ -140,15 +140,23 @@ def evaluate(label, times, watts, anchors, t_end, phases, steps, verbose):
     return hit, len(truth_b), max_e
 
 
-def run(steps: int, seed: int, verbose: bool) -> int:
+def run(steps: int, seed: int, verbose: bool,
+        json_path: str | None = None) -> int:
+    report = BenchReport("attrib_accuracy", {"steps": steps, "seed": seed})
     phases = build_workload()
     failures = []
 
     t, w, anchors, t_end = measure_through_sensor(phases, steps, seed)
     hit, total, max_e = evaluate("20khz", t, w, anchors, t_end, phases, steps, verbose)
-    if hit < total:
+    report.record("attrib_20khz_boundary_hits", hit, f"of {total}")
+    report.record("attrib_20khz_max_energy_err_pct", max_e * 100.0)
+    if not report.gate("boundaries_20khz", hit >= total,
+                       value=float(hit), limit=float(total),
+                       detail=f"phase boundaries within {BOUNDARY_TOL_S * 1e3:.0f} ms"):
         failures.append(f"20 kHz missed {total - hit}/{total} phase boundaries")
-    if max_e > ENERGY_TOL:
+    if not report.gate("energy_20khz", max_e <= ENERGY_TOL,
+                       value=max_e, limit=ENERGY_TOL,
+                       detail="max per-kernel energy error, 20 kHz attribution"):
         failures.append(f"20 kHz energy error {max_e * 100.0:.1f}% > {ENERGY_TOL:.0%}")
 
     for rate in (100.0, 10.0):
@@ -156,12 +164,19 @@ def run(steps: int, seed: int, verbose: bool) -> int:
         hit, total, max_e = evaluate(
             f"{rate:.0f}hz", t, w, anchors, t_end, phases, steps, verbose
         )
-        if rate <= 10.0 and hit == total and max_e <= LOW_RATE_FAIL_ERR:
+        report.record(f"attrib_{rate:.0f}hz_boundary_hits", hit, f"of {total}")
+        report.record(f"attrib_{rate:.0f}hz_max_energy_err_pct", max_e * 100.0)
+        if rate <= 10.0 and not report.gate(
+            "builtin_rate_fails", hit < total or max_e > LOW_RATE_FAIL_ERR,
+            value=max_e, limit=LOW_RATE_FAIL_ERR,
+            detail="10 Hz counter must demonstrably miss the granularity",
+        ):
             failures.append(
                 "10 Hz counter unexpectedly matched 20 kHz accuracy — "
                 "the granularity experiment no longer discriminates"
             )
 
+    report.finish(failures, json_path=json_path)
     if failures:
         for f in failures:
             print(f"FAIL: {f}")
@@ -178,9 +193,10 @@ def main(argv=None) -> int:
     ap.add_argument("--steps", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quiet", action="store_true")
+    add_json_arg(ap)
     args = ap.parse_args(argv)
     steps = args.steps if args.steps is not None else (3 if args.smoke else 8)
-    return run(steps, args.seed, verbose=not args.quiet)
+    return run(steps, args.seed, verbose=not args.quiet, json_path=args.json)
 
 
 if __name__ == "__main__":

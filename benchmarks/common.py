@@ -1,6 +1,14 @@
-"""Shared benchmark plumbing: CSV emission per the harness contract."""
+"""Shared benchmark plumbing: CSV emission + machine-readable JSON reports.
+
+Every gated benchmark prints ``name,value,derived`` CSV lines (the
+harness contract) and can additionally write one JSON document per run
+via ``--json PATH`` — measured values, gate outcomes and the overall
+pass/fail — so perf trajectories can be diffed across PRs with
+``tools/perf_diff.py --bench``.
+"""
 from __future__ import annotations
 
+import json
 import time
 
 
@@ -19,3 +27,80 @@ class timer:
     @property
     def us(self) -> float:
         return self.dt * 1e6
+
+
+class BenchReport:
+    """Collects one benchmark run's metrics and gates for JSON export.
+
+    ``emit`` mirrors the module-level CSV emitter while recording the
+    value; ``gate`` records one named pass/fail check; ``finish`` folds
+    in a benchmark's legacy failure-string list and writes the document
+    (no-op when the caller didn't ask for ``--json``).
+    """
+
+    def __init__(self, benchmark: str, config: dict | None = None):
+        self.benchmark = benchmark
+        self.config = dict(config or {})
+        self.metrics: dict[str, dict] = {}
+        self.gates: list[dict] = []
+        self.failures: list[str] = []
+
+    def emit(self, name: str, value: float, derived: str = "") -> None:
+        """Print the harness CSV line and record the metric."""
+        emit(name, value, derived)
+        self.record(name, value, derived)
+
+    def record(self, name: str, value: float, derived: str = "") -> None:
+        self.metrics[name] = {"value": float(value), "derived": derived}
+
+    def gate(
+        self,
+        name: str,
+        passed: bool,
+        value: float | None = None,
+        limit: float | None = None,
+        detail: str = "",
+    ) -> bool:
+        self.gates.append(
+            {
+                "name": name,
+                "passed": bool(passed),
+                "value": None if value is None else float(value),
+                "limit": None if limit is None else float(limit),
+                "detail": detail,
+            }
+        )
+        return bool(passed)
+
+    @property
+    def ok(self) -> bool:
+        return not self.failures and all(g["passed"] for g in self.gates)
+
+    def to_dict(self) -> dict:
+        return {
+            "benchmark": self.benchmark,
+            "config": self.config,
+            "metrics": self.metrics,
+            "gates": self.gates,
+            "failures": list(self.failures),
+            "ok": self.ok,
+        }
+
+    def finish(self, failures: list[str] | None = None, json_path: str | None = None) -> bool:
+        """Fold in failure strings, write the JSON document, return ok."""
+        if failures:
+            self.failures.extend(failures)
+        if json_path:
+            with open(json_path, "w") as fh:
+                json.dump(self.to_dict(), fh, indent=2)
+                fh.write("\n")
+        return self.ok
+
+
+def add_json_arg(ap) -> None:
+    """Install the shared ``--json PATH`` benchmark flag."""
+    ap.add_argument(
+        "--json", default=None, metavar="PATH",
+        help="write a machine-readable result document (metrics, gates, "
+             "pass/fail) for tools/perf_diff.py --bench",
+    )

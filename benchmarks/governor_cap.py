@@ -45,7 +45,7 @@ from repro.sched import (
     time_over_cap,
 )
 
-from .common import emit
+from .common import BenchReport, add_json_arg
 
 TOC_LIMIT = 0.05  # max acceptable fraction of time over cap (20 kHz)
 SETTLE_LIMIT_S = 0.100  # max acceptable settle after a load step (20 kHz)
@@ -102,7 +102,12 @@ def run_loop(
     return toc, settle, tps, switches
 
 
-def run(duration_s: float, seed: int, n_devices: int) -> int:
+def run(duration_s: float, seed: int, n_devices: int,
+        json_path: str | None = None) -> int:
+    report = BenchReport(
+        "governor_cap",
+        {"duration_s": duration_s, "seed": seed, "devices": n_devices},
+    )
     grid = build_grid()
     # cap at ~72 % of the fleet's unconstrained draw: binding but feasible
     cap_w = 0.72 * n_devices * grid.max_watts
@@ -121,9 +126,10 @@ def run(duration_s: float, seed: int, n_devices: int) -> int:
         print(f"== {label}: time-over-cap {toc * 100.0:.1f}%  "
               f"settle {settle * 1e3:.1f} ms  "
               f"throughput {tps / 1e6:.2f} Mtok/s  switches {switches}")
-        emit(f"governor_{label}_time_over_cap_pct", toc * 100.0,
-             f"cap {cap_w:.0f} W")
-        emit(f"governor_{label}_settle_ms", settle * 1e3, "after load step")
+        report.emit(f"governor_{label}_time_over_cap_pct", toc * 100.0,
+                    f"cap {cap_w:.0f} W")
+        report.emit(f"governor_{label}_settle_ms", settle * 1e3,
+                    "after load step")
 
     toc20, settle20 = results["20khz"]
     if toc20 > TOC_LIMIT:
@@ -138,6 +144,12 @@ def run(duration_s: float, seed: int, n_devices: int) -> int:
             "10 Hz telemetry unexpectedly held the cap — the closed-loop "
             "granularity experiment no longer discriminates")
 
+    report.gate("toc_20khz", toc20 <= TOC_LIMIT, value=toc20, limit=TOC_LIMIT)
+    report.gate("settle_20khz", settle20 <= SETTLE_LIMIT_S,
+                value=settle20, limit=SETTLE_LIMIT_S)
+    report.gate("builtin_rate_fails", toc10 > TOC_LIMIT or settle10 > SETTLE_LIMIT_S,
+                value=toc10, detail="10 Hz loop must demonstrably fail")
+    report.finish(failures, json_path)
     if failures:
         for f in failures:
             print(f"FAIL: {f}")
@@ -154,7 +166,8 @@ CHAOS_TOC_LIMIT = 0.05  # max fraction of time over cap through the cycle
 CHAOS_RECOVERY_LIMIT_S = 0.200  # max time to reacquire after reconnect
 
 
-def run_chaos(duration_s: float, seed: int, n_devices: int) -> int:
+def run_chaos(duration_s: float, seed: int, n_devices: int,
+              json_path: str | None = None) -> int:
     """Conformance smoke: disconnect→reconnect one device mid-run.
 
     The governor runs on quorum-rescaled fleet telemetry
@@ -203,9 +216,13 @@ def run_chaos(duration_s: float, seed: int, n_devices: int) -> int:
     print(f"== chaos: time-over-cap {toc * 100.0:.1f}%  "
           f"recovery {recovery * 1e3:.1f} ms  degraded ticks {degraded_ticks}  "
           f"stale ticks {stale_ticks}")
-    emit("governor_chaos_time_over_cap_pct", toc * 100.0,
-         f"1-device disconnect, cap {cap_w:.0f} W")
-    emit("governor_chaos_recovery_ms", recovery * 1e3, "after reconnect")
+    report = BenchReport(
+        "governor_cap_chaos",
+        {"duration_s": duration_s, "seed": seed, "devices": n_devices},
+    )
+    report.emit("governor_chaos_time_over_cap_pct", toc * 100.0,
+                f"1-device disconnect, cap {cap_w:.0f} W")
+    report.emit("governor_chaos_recovery_ms", recovery * 1e3, "after reconnect")
 
     failures: list[str] = []
     if toc > CHAOS_TOC_LIMIT:
@@ -220,6 +237,12 @@ def run_chaos(duration_s: float, seed: int, n_devices: int) -> int:
         failures.append(
             "the disconnect was never visible in device health — the chaos "
             "experiment no longer degrades anything")
+    report.gate("chaos_toc", toc <= CHAOS_TOC_LIMIT,
+                value=toc, limit=CHAOS_TOC_LIMIT)
+    report.gate("chaos_recovery", recovery <= CHAOS_RECOVERY_LIMIT_S,
+                value=recovery, limit=CHAOS_RECOVERY_LIMIT_S)
+    report.gate("chaos_degrades", degraded_ticks > 0, value=degraded_ticks)
+    report.finish(failures, json_path)
     if failures:
         for f in failures:
             print(f"FAIL: {f}")
@@ -239,14 +262,15 @@ def main(argv=None) -> int:
                     help="simulated seconds per loop")
     ap.add_argument("--devices", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    add_json_arg(ap)
     args = ap.parse_args(argv)
     duration = args.duration if args.duration is not None else (
         0.6 if args.smoke else 2.0)
     devices = args.devices if args.devices is not None else (
         2 if args.smoke else 4)
     if args.chaos:
-        return run_chaos(duration, args.seed, devices)
-    return run(duration, args.seed, devices)
+        return run_chaos(duration, args.seed, devices, json_path=args.json)
+    return run(duration, args.seed, devices, json_path=args.json)
 
 
 if __name__ == "__main__":

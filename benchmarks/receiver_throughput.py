@@ -32,7 +32,7 @@ from repro.core import protocol
 from repro.core.firmware import FRAME_US, N_CHANNELS
 from repro.core.host import MAX_PAIRS
 
-from .common import emit, timer
+from .common import BenchReport, add_json_arg, timer
 
 
 class _NullDump:
@@ -189,7 +189,9 @@ def _run_replay(ps, frames_per_poll: int = 10_000) -> tuple[float, int, float]:
     return t.dt, frames, energy
 
 
-def run(seconds: float = 10.0, replay: bool = False) -> int:
+def run(seconds: float = 10.0, replay: bool = False, json_path: str | None = None) -> int:
+    report = BenchReport("receiver_throughput",
+                         {"seconds": seconds, "replay": replay})
     ps, chunks = _record_stream(seconds)
     stream_bytes = sum(len(c) for c in chunks)
     dt_new, frames_new, e_new = _run_vectorised(ps, chunks)
@@ -198,8 +200,8 @@ def run(seconds: float = 10.0, replay: bool = False) -> int:
     assert abs(e_new - e_old) < max(1e-6, 1e-6 * abs(e_old)), (e_new, e_old)
     fps_old = frames_old / dt_old
     fps_new = frames_new / dt_new
-    emit("receiver_legacy", dt_old / frames_old * 1e6, f"{fps_old:.0f} frames/s")
-    emit("receiver_vectorised", dt_new / frames_new * 1e6, f"{fps_new:.0f} frames/s")
+    report.emit("receiver_legacy", dt_old / frames_old * 1e6, f"{fps_old:.0f} frames/s")
+    report.emit("receiver_vectorised", dt_new / frames_new * 1e6, f"{fps_new:.0f} frames/s")
     print(
         f"# {frames_new} frames ({stream_bytes/1e6:.1f} MB stream, "
         f"{seconds:.0f} s at 20 kHz, 8 ch, dump on): "
@@ -207,24 +209,28 @@ def run(seconds: float = 10.0, replay: bool = False) -> int:
         f"({fps_new/fps_old:.1f}x)"
     )
     if not replay:
+        report.finish(json_path=json_path)
         return 0
     dt_rep, frames_rep, e_rep = _run_replay(ps)
     assert frames_rep == frames_new, (frames_rep, frames_new)
     assert abs(e_rep - e_new) <= 1e-9 * abs(e_new), (e_rep, e_new)
     fps_rep = frames_rep / dt_rep
-    emit("receiver_replay", dt_rep / frames_rep * 1e6, f"{fps_rep:.0f} frames/s")
+    report.emit("receiver_replay", dt_rep / frames_rep * 1e6, f"{fps_rep:.0f} frames/s")
     print(
         f"# replay: {fps_rep:,.0f} frames/s through the real receiver "
         f"({fps_rep/fps_new:.2f}x the live figure)"
     )
-    if fps_rep < fps_new:
+    ok = report.gate("replay_not_slower", fps_rep >= fps_new,
+                     value=fps_rep / fps_new, limit=1.0,
+                     detail="max-speed archive replay >= live decoded frames/s")
+    if not ok:
         print(
             f"FAIL: max-speed replay ({fps_rep:,.0f} frames/s) is slower than "
             f"the live receiver ({fps_new:,.0f} frames/s) — replay must not "
             f"become the slow path"
         )
-        return 1
-    return 0
+    report.finish(json_path=json_path)
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":
@@ -235,5 +241,7 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true", help="CI-sized run (1 s)")
     ap.add_argument("--replay", action="store_true",
                     help="gate max-speed archive replay >= the live figure")
+    add_json_arg(ap)
     args = ap.parse_args()
-    sys.exit(run(1.0 if args.smoke else args.seconds, replay=args.replay))
+    sys.exit(run(1.0 if args.smoke else args.seconds, replay=args.replay,
+                 json_path=args.json))

@@ -42,7 +42,7 @@ from repro.sched import (
     get_policy,
 )
 
-from .common import emit
+from .common import BenchReport, add_json_arg
 
 #: gate 1: step billing error must be at most this fraction of wave error
 STEP_VS_WAVE_MARGIN = 0.8
@@ -181,7 +181,8 @@ def conservation_leak(sched) -> float:
     return abs(billed + overhead - sched.spent_j) / max(abs(sched.spent_j), 1.0)
 
 
-def run(n_requests: int, seed: int) -> int:
+def run(n_requests: int, seed: int, json_path: str | None = None) -> int:
+    report = BenchReport("serving_churn", {"requests": n_requests, "seed": seed})
     n_slots = 8
     spread_s = n_requests * 2.0 * STEP_S  # arrivals overlap decode heavily
     requests = make_workload(n_requests, n_clients=3, spread_s=spread_s, seed=seed)
@@ -195,28 +196,33 @@ def run(n_requests: int, seed: int) -> int:
     wave_sched, wave_truth = run_wave(clone(), n_slots)
     step_err = billing_error(step_sched, step_truth)
     wave_err = billing_error(wave_sched, wave_truth)
-    emit("serving_churn_step_err_pct", step_err * 100.0,
-         "mean per-request billing error, step granularity")
-    emit("serving_churn_wave_err_pct", wave_err * 100.0,
-         "mean per-request billing error, wave granularity")
+    report.emit("serving_churn_step_err_pct", step_err * 100.0,
+                "mean per-request billing error, step granularity")
+    report.emit("serving_churn_wave_err_pct", wave_err * 100.0,
+                "mean per-request billing error, wave granularity")
 
     cap_w = POWER(n_slots) - 1.0  # a full batch would blow the cap
     cap_sched, _, cap_watts = run_step(
         clone(), n_slots, steps_per_interval=4, policy="cap-strict", cap_w=cap_w
     )
     overshoot = sum(1 for w in cap_watts if w > cap_w + CAP_EPS_W)
-    emit("serving_churn_cap_overshoot_steps", float(overshoot),
-         f"steps over {cap_w:.0f} W under cap-strict churn")
-    emit("serving_churn_cap_peak_w", max(cap_watts) if cap_watts else 0.0,
-         "peak modelled step power under cap-strict churn")
+    report.emit("serving_churn_cap_overshoot_steps", float(overshoot),
+                f"steps over {cap_w:.0f} W under cap-strict churn")
+    report.emit("serving_churn_cap_peak_w", max(cap_watts) if cap_watts else 0.0,
+                "peak modelled step power under cap-strict churn")
 
     failures = []
-    if not (step_err <= STEP_VS_WAVE_MARGIN * wave_err):
+    if not report.gate("step_beats_wave", step_err <= STEP_VS_WAVE_MARGIN * wave_err,
+                       value=step_err / wave_err if wave_err else float("inf"),
+                       limit=STEP_VS_WAVE_MARGIN,
+                       detail="step billing error / wave billing error"):
         failures.append(
             f"step billing error {step_err:.3%} not below "
             f"{STEP_VS_WAVE_MARGIN:.0%} of wave error {wave_err:.3%}"
         )
-    if overshoot:
+    if not report.gate("cap_no_overshoot", not overshoot,
+                       value=float(overshoot), limit=0.0,
+                       detail="decode steps over the cap under cap-strict"):
         failures.append(
             f"cap-strict admission let {overshoot} step(s) over the "
             f"{cap_w:.0f} W cap (peak {max(cap_watts):.1f} W)"
@@ -224,7 +230,10 @@ def run(n_requests: int, seed: int) -> int:
     for label, s in (("step", step_sched), ("wave", wave_sched),
                      ("cap", cap_sched)):
         leak = conservation_leak(s)
-        if not math.isfinite(leak) or leak > CONSERVE_RTOL:
+        if not report.gate(f"conserve_{label}",
+                           math.isfinite(leak) and leak <= CONSERVE_RTOL,
+                           value=leak, limit=CONSERVE_RTOL,
+                           detail="relative billing-ledger leak"):
             failures.append(f"{label} ledger leaks energy (rel {leak:.3g})")
     for label, s in (("step", step_sched), ("wave", wave_sched)):
         if len(s.finished) != n_requests:
@@ -232,6 +241,7 @@ def run(n_requests: int, seed: int) -> int:
                 f"{label} executor finished {len(s.finished)}/{n_requests}"
             )
 
+    report.finish(failures, json_path=json_path)
     if failures:
         for f in failures:
             print(f"FAIL: {f}")
@@ -248,10 +258,11 @@ def main(argv=None) -> int:
     ap.add_argument("--smoke", action="store_true", help="CI-sized run")
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    add_json_arg(ap)
     args = ap.parse_args(argv)
     n_requests = args.requests if args.requests is not None else (
         24 if args.smoke else 96)
-    return run(n_requests, args.seed)
+    return run(n_requests, args.seed, json_path=args.json)
 
 
 if __name__ == "__main__":

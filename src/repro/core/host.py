@@ -24,6 +24,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.obs import trace as obs_trace
 from repro.stream.ring import FrameRing
 from repro.stream.textio import format_dump_block
 
@@ -252,6 +253,12 @@ class PowerSensor:
             junk = consumed - 2 * int(ids.size)
             if junk > 0:
                 self._dropped_bytes += junk
+                rec = obs_trace.active()
+                if rec is not None:
+                    rec.counter(
+                        "rx.dropped_bytes", float(junk),
+                        track=f"rx:{getattr(self, 'obs_name', 'dev')}",
+                    )
             if ids.size == 0:
                 return 0
             # A batch may end mid-frame (tiny transport reads split packets
@@ -471,6 +478,15 @@ class PowerSensor:
                     )
                 )
         self._frame_count += n_frames
+        rec = obs_trace.active()
+        if rec is not None:
+            # one batch-level sample per poll, not per frame: the flight
+            # recorder must stay off the per-frame fast path
+            track = f"rx:{getattr(self, 'obs_name', 'dev')}"
+            rec.anchor_once(float(times_s[-1]))
+            rec.counter("rx.frames", float(n_frames), track=track)
+            if mk_frames.size:
+                rec.counter("rx.markers", float(mk_frames.size), track=track)
         return n_frames
 
     # ------------------------------------------------------------ interval mode

@@ -28,6 +28,9 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 from .faults import (
     ClockDrift,
     Corruption,
@@ -106,6 +109,42 @@ class FaultLedger:
             kw[key] = [tuple(s) for s in kw.get(key, [])]
         return cls(**kw)
 
+    # ------------------------------------------------------------ obs overlay
+    def record_obs(
+        self,
+        rec: "obs_trace.TraceRecorder | None" = None,
+        epoch_s: float = 0.0,
+        track: str | None = None,
+    ) -> int:
+        """Export the ledger's fault windows as a device-time trace track.
+
+        Each injected window becomes one span on ``faults:<device>``,
+        stamped in absolute device seconds (``epoch_s`` + the ledger's
+        relative window times) so the exporter lines it up against
+        receiver activity and attribution intervals — the ground-truth
+        overlay for a flight-recorder timeline.  Returns spans written.
+        """
+        if rec is None:
+            rec = obs_trace.active()
+        if rec is None:
+            return 0
+        track = track or f"faults:{self.device}"
+        n = 0
+        for kind, spans in (
+            ("dropout", self.dropped_spans),
+            ("stall", self.stall_spans),
+            ("disconnect", self.disconnect_spans),
+        ):
+            for t0, t1 in spans:
+                rec.device_span(f"fault:{kind}", epoch_s + t0, epoch_s + t1,
+                                track=track)
+                n += 1
+        for t0, t1, factor in self.drift_spans:
+            rec.device_span(f"fault:drift x{factor:g}", epoch_s + t0,
+                            epoch_s + t1, track=track, value=factor)
+            n += 1
+        return n
+
 
 class FaultyTransport:
     """Apply a scenario's faults to one device's byte link.
@@ -165,6 +204,13 @@ class FaultyTransport:
     def write(self, data: bytes) -> None:
         if self._active(Disconnect, self.rel_t_s):
             self.ledger.lost_writes += 1
+            reg = obs_metrics.active()
+            if reg is not None:
+                reg.counter(
+                    "fault_lost_writes_total",
+                    "host writes swallowed by a disconnect window",
+                    device=self.name,
+                ).inc()
             return
         self.inner.write(data)
 
@@ -253,7 +299,24 @@ class FaultyTransport:
             arr = np.delete(arr, hit)
             self.ledger.deleted_bytes += int(hit.size)
             self.ledger.corrupted_bytes += int(hit.size)
+        reg = obs_metrics.active()
+        if reg is not None:
+            reg.counter(
+                "fault_corrupted_bytes_total",
+                "bytes corrupted in flight by injection",
+                device=self.name,
+            ).inc(int(hit.size))
         return arr.tobytes()
+
+    # ------------------------------------------------------------ obs overlay
+    def record_obs(self, rec: "obs_trace.TraceRecorder | None" = None) -> int:
+        """Overlay this transport's ground-truth fault windows on the trace.
+
+        Windows are exported in absolute device time (the injection epoch
+        plus the ledger's relative spans).  Call after (or during) a run;
+        returns the number of spans written.
+        """
+        return self.ledger.record_obs(rec, epoch_s=self.epoch_s)
 
 
 def inject(fleet, scenario, seed: int | None = None) -> dict[str, FaultyTransport]:

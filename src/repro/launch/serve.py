@@ -62,6 +62,7 @@ import numpy as np
 from repro.attrib import EnergyLedger, KernelSpan, attribute_block, render_text
 from repro.configs import RunConfig, get_config, smoke_config
 from repro.models import build_model
+from repro.obs import trace as obs_trace
 from repro.power import EnergyTelemetry, StepCost
 from repro.sched import (
     POLICIES,
@@ -168,9 +169,20 @@ def main(argv=None):
     ap.add_argument("--record", default=None, metavar="PATH",
                     help="record the fleet session to a trace archive "
                          "(replayable via repro.replay; needs --fleet > 0)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable the flight recorder and write a "
+                         "Chrome-trace-event JSON (Perfetto-loadable)")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="enable metrics and write a Prometheus text "
+                         "snapshot at exit")
     args = ap.parse_args(argv)
     if args.record and args.fleet <= 0:
         ap.error("--record needs a sensor fleet (--fleet > 0)")
+
+    if args.trace or args.metrics:
+        from repro import obs
+
+        obs.enable()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     run = RunConfig(attn_impl="full", remat="none", lr_chunk=16)
@@ -310,6 +322,13 @@ def main(argv=None):
                     dev_j *= modelled_s / (t1 - t0)
                 energy += dev_j
                 n_dev += 1
+                orec = obs_trace.active()
+                if orec is not None:
+                    # attributed interval on the device timeline: the span
+                    # the exporter aligns against control-plane spans
+                    orec.device_span(f"int{k}", t0, t1,
+                                     track=f"attr:{name}",
+                                     value=led.total_energy_j)
         if n_dev:
             interval_devices[k] = n_dev
             # devices are identical shards: scale up for any whose ring had
@@ -387,6 +406,8 @@ def main(argv=None):
         k = sched.current_interval
         interval_occ[k] = n_marks
         _mark_fleet()
+        orec = obs_trace.active()
+        int_t0_us = obs_trace.now_us() if orec is not None else 0
         for _ in range(max(args.steps_per_sync, 1)):
             if not sched.live_rids:
                 break
@@ -398,6 +419,10 @@ def main(argv=None):
             billed_tokens += rec.billed_tokens
             decoded_tokens += rec.decoded_tokens
         sealed = sched.seal_interval()
+        if orec is not None and sealed is not None:
+            orec.span_at(f"interval {sealed.index}", int_t0_us,
+                         obs_trace.now_us(), track="serve",
+                         value=float(sealed.decoded_tokens))
         if sealed is None:
             interval_occ.pop(k, None)
             continue
@@ -467,6 +492,24 @@ def main(argv=None):
             print(f"recorded {archive.n_frames} frames / {len(archive)} devices "
                   f"to {args.record} (replay: repro.replay.ReplayFleet)")
         fleet.close()
+    if args.trace:
+        from repro.obs import export as obs_export
+
+        orec = obs_trace.active()
+        obs_export.write_chrome_trace(
+            orec, args.trace,
+            metadata={"launcher": "serve", "arch": args.arch,
+                      "policy": args.policy, "seed": args.seed},
+        )
+        print(f"wrote flight-recorder trace ({orec.head} events) to "
+              f"{args.trace} — load in Perfetto / chrome://tracing")
+    if args.metrics:
+        from repro.obs import export as obs_export
+        from repro.obs import metrics as obs_metrics
+
+        with open(args.metrics, "w") as fh:
+            fh.write(obs_export.prometheus_text(obs_metrics.active()))
+        print(f"wrote metrics snapshot to {args.metrics}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,128 @@
+"""Exporters: Prometheus text snapshots and Chrome-trace-event JSON.
+
+The Chrome trace output is the "JSON array of event objects" dialect
+that Perfetto and chrome://tracing both load: spans become ``"ph": "X"``
+complete events, instants ``"ph": "i"``, counter samples ``"ph": "C"``.
+
+Clock alignment: wall-clock tracks are emitted relative to the
+recorder's start (``t0_us``).  Device-clock tracks (fault windows,
+attribution intervals) are shifted onto the same timeline using the
+recorder's first wall/device anchor pair when one exists; otherwise they
+are emitted raw under a separate ``device-time`` process so nothing is
+silently misaligned.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from typing import IO
+
+from repro.obs.metrics import Histogram, MetricsRegistry, format_labels
+from repro.obs.trace import COUNTER, DEVICE, INSTANT, SPAN, TraceRecorder
+
+__all__ = [
+    "prometheus_text",
+    "chrome_trace_events",
+    "chrome_trace_json",
+    "write_chrome_trace",
+]
+
+_WALL_PID = 1
+_DEVICE_PID = 2
+
+
+def prometheus_text(reg: MetricsRegistry) -> str:
+    """Render a registry in the Prometheus text exposition format."""
+    lines: list[str] = []
+    seen_meta: set[str] = set()
+    for name, labels, metric in reg.series():
+        if name not in seen_meta:
+            seen_meta.add(name)
+            help_text = reg.help_text(name)
+            if help_text:
+                lines.append(f"# HELP {name} {help_text}")
+            lines.append(f"# TYPE {name} {metric.kind}")
+        if isinstance(metric, Histogram):
+            for bound, cum in metric.cumulative():
+                le = "+Inf" if math.isinf(bound) else repr(bound)
+                lines.append(
+                    f"{name}_bucket{format_labels(labels, {'le': le})} {cum}"
+                )
+            lines.append(f"{name}_sum{format_labels(labels)} {metric.sum!r}")
+            lines.append(f"{name}_count{format_labels(labels)} {metric.count}")
+        else:
+            lines.append(f"{name}{format_labels(labels)} {metric.value!r}")
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+def chrome_trace_events(rec: TraceRecorder) -> list[dict]:
+    """Convert retained ring events to Chrome trace-event dicts."""
+    offset = rec.device_offset_us()
+    t0 = rec.t0_us
+    out: list[dict] = []
+    tids: dict[tuple[int, str], int] = {}
+
+    def tid_for(pid: int, track: str) -> int:
+        key = (pid, track)
+        tid = tids.get(key)
+        if tid is None:
+            tid = len([k for k in tids if k[0] == pid]) + 1
+            tids[key] = tid
+            out.append({
+                "name": "thread_name", "ph": "M", "pid": pid, "tid": tid,
+                "args": {"name": track},
+            })
+        return tid
+
+    out.append({"name": "process_name", "ph": "M", "pid": _WALL_PID,
+                "tid": 0, "args": {"name": "repro"}})
+    if offset is None:
+        out.append({"name": "process_name", "ph": "M", "pid": _DEVICE_PID,
+                    "tid": 0, "args": {"name": "device-time"}})
+
+    for ev in rec.events():
+        if ev.clock == DEVICE:
+            if offset is None:
+                pid, ts = _DEVICE_PID, ev.t_us
+            else:
+                pid, ts = _WALL_PID, ev.t_us + offset - t0
+        else:
+            pid, ts = _WALL_PID, ev.t_us - t0
+        tid = tid_for(pid, ev.track)
+        if ev.kind == SPAN:
+            out.append({"name": ev.name, "ph": "X", "pid": pid, "tid": tid,
+                        "ts": ts, "dur": ev.dur_us,
+                        "args": {"value": ev.value}})
+        elif ev.kind == INSTANT:
+            out.append({"name": ev.name, "ph": "i", "pid": pid, "tid": tid,
+                        "ts": ts, "s": "t", "args": {"value": ev.value}})
+        elif ev.kind == COUNTER:
+            out.append({"name": ev.name, "ph": "C", "pid": pid, "tid": tid,
+                        "ts": ts, "args": {ev.name: ev.value}})
+    return out
+
+
+def chrome_trace_json(rec: TraceRecorder, metadata: dict | None = None) -> str:
+    doc = {
+        "traceEvents": chrome_trace_events(rec),
+        "displayTimeUnit": "ms",
+        "otherData": {
+            "recorded_events": rec.head,
+            "dropped_events": rec.dropped,
+            **(metadata or {}),
+        },
+    }
+    return json.dumps(doc)
+
+
+def write_chrome_trace(
+    rec: TraceRecorder, path_or_file: str | IO[str],
+    metadata: dict | None = None,
+) -> None:
+    text = chrome_trace_json(rec, metadata)
+    if hasattr(path_or_file, "write"):
+        path_or_file.write(text)  # type: ignore[union-attr]
+    else:
+        with open(path_or_file, "w") as fh:
+            fh.write(text)

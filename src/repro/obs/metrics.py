@@ -1,0 +1,229 @@
+"""Counters, gauges, and fixed-log-bucket histograms with a global registry.
+
+Same activation pattern as :mod:`repro.obs.trace`: call sites fetch the
+process-global registry via :func:`active` and skip updates when it is
+``None``.  Metrics are cumulative process-lifetime aggregates (what you
+scrape); the trace ring is the time-resolved view (what you replay).
+
+Labels are passed as keyword arguments and become part of the series
+key, matching the Prometheus data model::
+
+    reg.counter("fleet_health_transitions_total", device="dev0", to="stale").inc()
+
+numpy + stdlib only — hot paths import this module.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "install",
+    "uninstall",
+    "active",
+]
+
+_LabelKey = tuple[tuple[str, str], ...]
+
+
+def _label_key(labels: dict[str, str]) -> _LabelKey:
+    return tuple(sorted((k, str(v)) for k, v in labels.items()))
+
+
+def _format_labels(labels: _LabelKey) -> str:
+    if not labels:
+        return ""
+    inner = ",".join(f'{k}="{v}"' for k, v in labels)
+    return "{" + inner + "}"
+
+
+class Counter:
+    """Monotonically increasing value."""
+
+    kind = "counter"
+
+    def __init__(self) -> None:
+        self._value = 0.0
+        self._lock = threading.Lock()
+
+    def inc(self, n: float = 1.0) -> None:
+        if n < 0:
+            raise ValueError("counters only go up")
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+
+class Gauge:
+    """Last-write-wins sampled value."""
+
+    kind = "gauge"
+
+    def __init__(self) -> None:
+        self._value = 0.0
+
+    def set(self, v: float) -> None:
+        self._value = float(v)
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+
+class Histogram:
+    """Fixed log-spaced buckets between ``lo`` and ``hi``.
+
+    ``per_decade`` buckets per power of ten, plus an overflow bucket.
+    Exposed in Prometheus exposition as cumulative ``_bucket{le=...}``
+    series with ``_sum`` and ``_count``.
+    """
+
+    kind = "histogram"
+
+    def __init__(self, lo: float = 1e-6, hi: float = 10.0, per_decade: int = 4):
+        if not (lo > 0 and hi > lo):
+            raise ValueError("need 0 < lo < hi")
+        if per_decade <= 0:
+            raise ValueError("per_decade must be positive")
+        n_decades = math.log10(hi / lo)
+        n = max(1, math.ceil(n_decades * per_decade))
+        step = 10.0 ** (1.0 / per_decade)
+        self.bounds = [lo * step**i for i in range(n + 1)]
+        self._counts = [0] * (len(self.bounds) + 1)  # + overflow
+        self._sum = 0.0
+        self._count = 0
+        self._lock = threading.Lock()
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        with self._lock:
+            self._sum += v
+            self._count += 1
+            for i, b in enumerate(self.bounds):
+                if v <= b:
+                    self._counts[i] += 1
+                    return
+            self._counts[-1] += 1
+
+    @property
+    def count(self) -> int:
+        return self._count
+
+    @property
+    def sum(self) -> float:
+        return self._sum
+
+    def cumulative(self) -> list[tuple[float, int]]:
+        """(upper_bound, cumulative_count) pairs, ending with +inf."""
+        out: list[tuple[float, int]] = []
+        running = 0
+        for b, c in zip(self.bounds, self._counts[:-1]):
+            running += c
+            out.append((b, running))
+        out.append((math.inf, running + self._counts[-1]))
+        return out
+
+    def quantile(self, q: float) -> float:
+        """Upper bound of the bucket holding the q-quantile (crude)."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError("q must be in [0, 1]")
+        if self._count == 0:
+            return float("nan")
+        target = q * self._count
+        for b, running in self.cumulative():
+            if running >= target:
+                return b
+        return math.inf
+
+
+class MetricsRegistry:
+    """Get-or-create store of labelled metric series."""
+
+    def __init__(self) -> None:
+        self._series: dict[tuple[str, _LabelKey], Counter | Gauge | Histogram] = {}
+        self._help: dict[str, str] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, cls, name: str, help: str, labels: dict[str, str], **kwargs):
+        key = (name, _label_key(labels))
+        with self._lock:
+            m = self._series.get(key)
+            if m is None:
+                m = cls(**kwargs)
+                self._series[key] = m
+                if help:
+                    self._help[name] = help
+            elif not isinstance(m, cls):
+                raise TypeError(
+                    f"metric {name!r} already registered as {m.kind}"
+                )
+            return m
+
+    def counter(self, name: str, help: str = "", **labels: str) -> Counter:
+        return self._get(Counter, name, help, labels)
+
+    def gauge(self, name: str, help: str = "", **labels: str) -> Gauge:
+        return self._get(Gauge, name, help, labels)
+
+    def histogram(
+        self, name: str, help: str = "", *, lo: float = 1e-6,
+        hi: float = 10.0, per_decade: int = 4, **labels: str,
+    ) -> Histogram:
+        return self._get(Histogram, name, help, labels,
+                         lo=lo, hi=hi, per_decade=per_decade)
+
+    def series(self) -> list[tuple[str, _LabelKey, Counter | Gauge | Histogram]]:
+        """(name, labels, metric) triples, sorted by name then labels."""
+        with self._lock:
+            items = sorted(self._series.items())
+        return [(name, labels, m) for (name, labels), m in items]
+
+    def help_text(self, name: str) -> str:
+        return self._help.get(name, "")
+
+    def get_value(self, name: str, **labels: str) -> float | None:
+        """Value of a counter/gauge series, or None if absent."""
+        m = self._series.get((name, _label_key(labels)))
+        if m is None or isinstance(m, Histogram):
+            return None
+        return m.value
+
+
+def format_labels(labels: _LabelKey, extra: dict[str, str] | None = None) -> str:
+    """Render a label key (plus extras) as ``{k="v",...}`` or ``""``."""
+    if extra:
+        merged = dict(labels)
+        merged.update(extra)
+        labels = _label_key(merged)
+    return _format_labels(labels)
+
+
+# -- module-global active registry ----------------------------------------
+
+_active: MetricsRegistry | None = None
+
+
+def install(reg: MetricsRegistry | None = None) -> MetricsRegistry:
+    global _active
+    if reg is None:
+        reg = MetricsRegistry()
+    _active = reg
+    return reg
+
+
+def uninstall() -> MetricsRegistry | None:
+    global _active
+    reg, _active = _active, None
+    return reg
+
+
+def active() -> MetricsRegistry | None:
+    return _active

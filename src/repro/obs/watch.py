@@ -1,0 +1,228 @@
+"""Streaming anomaly watchdog over live fleet windows (ROADMAP item 4).
+
+:class:`SignatureWatchdog` runs the :mod:`repro.attrib.signatures`
+matcher incrementally over each device's ring: every ``check()`` pulls
+the window since the device's cursor, changepoint-segments it, and
+scores each *complete* segment against a library of known-good kernel
+signatures.  Two anomaly kinds come out:
+
+- ``unknown-signature`` — no library entry within ``max_distance``
+  (a kernel shape the fleet has never run, or a badly distorted one);
+- ``power-deviation``  — the shape matches a known kernel but its mean
+  power is off by more than ``power_tol`` (thermal throttling, a stuck
+  DVFS rung, a misbehaving device).
+
+:class:`PartTimeSampler` is the negative baseline the benchmark pins:
+an nvidia-smi-style part-time power counter ("Part-time Power
+Measurements", PAPERS.md) that reads instantaneous power at ~10 Hz with
+sample-and-hold.  Excursions shorter than its sampling period land
+between samples and are structurally invisible to it, while the 20 kHz
+watchdog sees every segment.
+
+Degraded-telemetry semantics (see the table in ``stream/fleet.py``):
+stale and lost devices are *skipped*, not judged — their rings only
+hold the past, and matching old windows would re-raise stale anomalies
+forever.  Skips are counted in ``watchdog_skipped_total`` and the
+device's cursor freezes until it recovers.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Callable
+
+from repro.attrib.segment import segment_block
+from repro.attrib.signatures import SignatureLibrary
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.stream.fleet import FleetMonitor
+
+__all__ = ["Anomaly", "SignatureWatchdog", "PartTimeSampler"]
+
+
+@dataclass(frozen=True)
+class Anomaly:
+    """One flagged segment on one device."""
+
+    device: str
+    kind: str  # "unknown-signature" | "power-deviation"
+    name: str  # nearest signature name ("?" when none close enough)
+    t0_s: float
+    t1_s: float
+    distance: float
+    mean_w: float
+    expected_w: float | None = None
+
+    @property
+    def duration_s(self) -> float:
+        return self.t1_s - self.t0_s
+
+
+@dataclass
+class _Cursor:
+    t_s: float
+    primed: bool = False  # first segment after attach is dropped unjudged
+
+
+class SignatureWatchdog:
+    """Incremental signature matching over a live ``FleetMonitor``.
+
+    ``check()`` is cheap enough to call from the same loop that polls
+    the fleet; each call consumes only the ring data that arrived since
+    the previous call, so work scales with stream time, not ring size.
+    """
+
+    def __init__(
+        self,
+        fleet: "FleetMonitor",
+        library: SignatureLibrary,
+        *,
+        max_distance: float = 0.25,
+        power_tol: float = 0.2,
+        min_window_s: float = 0.01,
+        min_duration_s: float = 1e-3,
+        segment_kwargs: dict | None = None,
+    ):
+        if len(library) == 0:
+            raise ValueError("watchdog needs a non-empty signature library")
+        self.fleet = fleet
+        self.library = library
+        self.max_distance = float(max_distance)
+        self.power_tol = float(power_tol)
+        self.min_window_s = float(min_window_s)
+        self.min_duration_s = float(min_duration_s)
+        self.segment_kwargs = dict(segment_kwargs or {})
+        self.anomalies: list[Anomaly] = []
+        self.n_checks = 0
+        self.n_segments = 0
+        self._cursors: dict[str, _Cursor] = {}
+
+    # ------------------------------------------------------------ internals
+    def _emit(self, anom: Anomaly) -> None:
+        self.anomalies.append(anom)
+        rec = obs_trace.active()
+        if rec is not None:
+            rec.device_span(
+                f"anomaly:{anom.kind}:{anom.name}", anom.t0_s, anom.t1_s,
+                track=f"watchdog:{anom.device}", value=anom.mean_w,
+            )
+        reg = obs_metrics.active()
+        if reg is not None:
+            reg.counter(
+                "watchdog_anomalies_total",
+                "anomalous segments flagged by the signature watchdog",
+                device=anom.device, kind=anom.kind,
+            ).inc()
+
+    def _judge(self, device: str, seg, times_s, watts) -> None:
+        self.n_segments += 1
+        name, dist = self.library.match(times_s, watts, seg.t0_s, seg.t1_s)
+        if dist > self.max_distance:
+            self._emit(Anomaly(device, "unknown-signature", "?",
+                               seg.t0_s, seg.t1_s, dist, seg.mean_w))
+            return
+        sig = self.library.signatures[name]
+        ref = max(abs(sig.mean_w), 1e-9)
+        if abs(seg.mean_w - sig.mean_w) / ref > self.power_tol:
+            self._emit(Anomaly(device, "power-deviation", name,
+                               seg.t0_s, seg.t1_s, dist, seg.mean_w,
+                               expected_w=sig.mean_w))
+
+    # ------------------------------------------------------------ public
+    def check(self, poll: bool = False) -> list[Anomaly]:
+        """Consume new ring data on every healthy device; return new anomalies."""
+        from repro.stream.fleet import FleetMonitor  # locked ring reads
+
+        if poll:
+            self.fleet.poll_all()
+        self.n_checks += 1
+        before = len(self.anomalies)
+        reg = obs_metrics.active()
+        if reg is not None:
+            reg.counter("watchdog_checks_total",
+                        "watchdog check passes").inc()
+        health = self.fleet.device_health()
+        for name in self.fleet.names:
+            ps = self.fleet[name]
+            state = health[name].state
+            if state != "healthy":
+                # stale/lost: freeze the cursor, count the skip (see table)
+                if reg is not None:
+                    reg.counter(
+                        "watchdog_skipped_total",
+                        "device windows skipped while stale/lost",
+                        device=name, state=state,
+                    ).inc()
+                continue
+            last = ps.ring.last_time_s if len(ps.ring) else 0.0
+            cur = self._cursors.get(name)
+            if cur is None:
+                cur = self._cursors[name] = _Cursor(t_s=last)
+                continue
+            if last - cur.t_s < self.min_window_s:
+                continue
+            block = FleetMonitor._locked_ring_read(
+                ps, lambda ps=ps, t0=cur.t_s, t1=last: ps.ring.window(t0, t1)
+            )
+            if block.times_s.size < 8:
+                continue
+            seg = segment_block(block, **self.segment_kwargs)
+            if len(seg.segments) < 2:
+                continue  # nothing complete yet: the lone segment is open
+            times, watts = block.times_s, block.total_watts
+            # the trailing segment is still in progress — leave it for the
+            # next pass by parking the cursor at its start
+            for s in seg.segments[:-1]:
+                if s.duration_s < self.min_duration_s:
+                    continue
+                if not cur.primed:
+                    cur.primed = True  # first segment may straddle attach
+                    continue
+                self._judge(name, s, times, watts)
+            cur.t_s = seg.segments[-1].t0_s
+        return self.anomalies[before:]
+
+
+class PartTimeSampler:
+    """nvidia-smi-style part-time power counter (the negative baseline).
+
+    Reads instantaneous power through ``read_fn(t_s)`` at ``rate_hz``
+    with sample-and-hold between updates — the documented behaviour the
+    "Part-time Power Measurements" paper measured (and the same model
+    as ``repro.power.pmt.BuiltinCounterMeter``, here in streaming form).
+    ``poll(now_s)`` takes every sample that has come due; ``detect``
+    flags readings outside a power band, which is the best a shape-blind
+    sampler can do.
+    """
+
+    def __init__(
+        self,
+        read_fn: Callable[[float], float],
+        rate_hz: float = 10.0,
+        phase_s: float = 0.0,
+    ):
+        if rate_hz <= 0:
+            raise ValueError("rate_hz must be positive")
+        self.read_fn = read_fn
+        self.period_s = 1.0 / float(rate_hz)
+        self._next_t = float(phase_s)
+        self.samples: list[tuple[float, float]] = []
+
+    def poll(self, now_s: float) -> int:
+        """Take every sample due by ``now_s``; returns how many were taken."""
+        n = 0
+        while self._next_t <= now_s:
+            self.samples.append((self._next_t, float(self.read_fn(self._next_t))))
+            self._next_t += self.period_s
+            n += 1
+        return n
+
+    @property
+    def values(self) -> list[float]:
+        return [w for _, w in self.samples]
+
+    def detect(self, lo_w: float, hi_w: float) -> list[tuple[float, float]]:
+        """Samples outside [lo_w, hi_w] — the sampler's whole anomaly story."""
+        return [(t, w) for t, w in self.samples if not (lo_w <= w <= hi_w)]

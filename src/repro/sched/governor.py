@@ -41,6 +41,8 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.power.tpu_model import (
     DEFAULT_LADDER,
     V5E,
@@ -452,6 +454,10 @@ class PowerCapGovernor:
         stale = bool(getattr(reading, "stale", False))
         measured = float(getattr(reading, "power_w", reading))
         n = plant.n_devices
+        reg = obs_metrics.active()
+        if reg is not None:
+            reg.counter("governor_ticks_total", "governor control ticks").inc()
+            reg.gauge("governor_measured_w", "latest fleet power seen").set(measured)
         if stale:
             # ---- safety event: telemetry lost or below quorum ----
             # Control on a held/extrapolated number is how caps get blown
@@ -459,8 +465,21 @@ class PowerCapGovernor:
             # estimate (no update at all), shed to a conservative rung
             # predicted to fit stale_shed_frac of the cap, and hold until
             # the fleet reading is trustworthy again.
+            entered_stale = not self._was_stale
             self._was_stale = True
             self.n_stale_ticks += 1
+            if reg is not None:
+                reg.counter(
+                    "governor_stale_ticks_total",
+                    "ticks spent controlling on stale telemetry",
+                ).inc()
+            if entered_stale:
+                rec = obs_trace.active()
+                if rec is not None:
+                    rec.device_instant(
+                        "governor:stale-safety", now_s,
+                        track="governor", value=measured,
+                    )
             safe = plant.grid.best_under(
                 cfg.stale_shed_frac * cfg.cap_w / max(n, 1),
                 max_batch=plant.demand_batch,
@@ -471,6 +490,7 @@ class PowerCapGovernor:
                 self._last_switch_s = now_s
                 self.n_switches += 1
                 switched = True
+                self._note_switch(safe, now_s, "stale-shed")
             status = GovernorStatus(
                 now_s, measured, cfg.cap_w, plant.point, switched, stale=True
             )
@@ -533,9 +553,25 @@ class PowerCapGovernor:
                 plant.apply(cand, now_s)
                 self._last_switch_s = now_s
                 self.n_switches += 1
+                self._note_switch(cand, now_s, "down" if downshift else "up")
         status = GovernorStatus(now_s, measured, budget, plant.point, switched)
         self.history.append(status)
         return status
+
+    def _note_switch(self, point: OperatingPoint, now_s: float, reason: str) -> None:
+        """Obs hooks for one rung switch (no-ops when tracing is disabled)."""
+        rec = obs_trace.active()
+        if rec is not None:
+            rec.device_instant(
+                f"governor:switch:{reason} dvfs={point.dvfs_index} b={point.batch}",
+                now_s, track="governor", value=point.watts,
+            )
+        reg = obs_metrics.active()
+        if reg is not None:
+            reg.counter(
+                "governor_switches_total", "operating-point switches",
+                reason=reason,
+            ).inc()
 
     def run(
         self,

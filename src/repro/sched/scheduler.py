@@ -42,6 +42,9 @@ import math
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, Sequence
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 from .policies import Policy, SchedContext
 
 if TYPE_CHECKING:  # pragma: no cover
@@ -414,6 +417,15 @@ class ContinuousBatch(_SloCore):
             admitted.append((slot, req))
         if not admitted and room > 0 and not (self.committed_j or self.inflight_j):
             self._reject_hopeless()
+        if admitted:
+            rec = obs_trace.active()
+            if rec is not None:
+                rec.instant("sched:admit", track="sched", value=float(len(admitted)))
+            reg = obs_metrics.active()
+            if reg is not None:
+                reg.counter("sched_admitted_total", "requests admitted").inc(
+                    len(admitted)
+                )
         return admitted
 
     # ------------------------------------------------------------ billing
@@ -502,6 +514,18 @@ class ContinuousBatch(_SloCore):
         else:
             req.evicted = True
             self.evicted.append(req)
+        rec = obs_trace.active()
+        if rec is not None:
+            rec.instant(
+                "sched:retire:requeue" if requeue else "sched:retire:evict",
+                track="sched", value=float(rid),
+            )
+        reg = obs_metrics.active()
+        if reg is not None:
+            reg.counter(
+                "sched_retired_total", "requests evicted or requeued",
+                mode="requeue" if requeue else "evict",
+            ).inc()
         return req
 
     # --------------------------------------------------------- settlement
@@ -517,6 +541,15 @@ class ContinuousBatch(_SloCore):
         sealed = self._cur
         self.intervals.append(sealed)
         self._cur = IntervalRecord(index=sealed.index + 1)
+        rec = obs_trace.active()
+        if rec is not None:
+            rec.instant(
+                f"sched:seal interval={sealed.index}", track="sched",
+                value=float(sealed.decoded_tokens),
+            )
+        reg = obs_metrics.active()
+        if reg is not None:
+            reg.counter("sched_intervals_sealed_total", "step intervals sealed").inc()
         return sealed
 
     def _settle(self, rec: IntervalRecord, energy_j: float, from_measurement: bool) -> None:
@@ -536,6 +569,23 @@ class ContinuousBatch(_SloCore):
             self.overhead_j += rec.measured_j
         if from_measurement and rec.decoded_tokens:
             self.pricer.update(rec.decoded_tokens, rec.measured_j)
+        trec = obs_trace.active()
+        if trec is not None:
+            trec.instant(
+                f"sched:{'settle' if from_measurement else 'release'}"
+                f" interval={rec.index}",
+                track="sched", value=rec.measured_j,
+            )
+        reg = obs_metrics.active()
+        if reg is not None:
+            reg.counter(
+                "sched_intervals_settled_total",
+                "intervals settled (measured) or released (predicted)",
+                mode="measured" if from_measurement else "released",
+            ).inc()
+            reg.counter(
+                "sched_settled_joules_total", "energy landed on intervals",
+            ).inc(rec.measured_j)
 
     def settle_interval(self, index: int, measured_j: float) -> None:
         """Land the attributed energy of one sealed step interval.

@@ -38,6 +38,15 @@ for up to ``holdover_s`` (``holdover=True``); the reading is flagged
 (the power-cap governor) must treat a stale reading as a safety event,
 not a number.
 
+Observability under degradation (mirrored in the README table): every
+health transition lands one ``health:<from>-><to>`` trace instant plus a
+``fleet_health_transitions_total`` increment; stale / holdover readings
+are counted per reading (``fleet_stale_reads_total`` /
+``fleet_holdover_reads_total``) while stale entry/exit are *edge* events
+on the trace timeline; the signature watchdog skips stale/lost devices
+(``watchdog_skipped_total``) and freezes their cursors, so recovery
+resumes from fresh data instead of re-judging the past.
+
 This module deliberately avoids importing `repro.core` at module scope —
 `repro.core.host` imports `repro.stream.ring`, and keeping this side lazy
 keeps the package import-cycle free.
@@ -50,6 +59,9 @@ from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, Iterable, Mapping
 
 import numpy as np
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 from .aggregate import WindowStats, window_stats
 from .ring import FrameBlock
@@ -178,6 +190,8 @@ class FleetMonitor:
         )
         self._last_good: tuple[float, float] | None = None  # (time, power_w)
         self._rr = 0  # round-robin cursor
+        self._last_health: dict[str, str] = {}  # for obs transition events
+        self._stale_streak = False  # edge-trigger for stale-read events
         if sensors:
             for name, ps in sensors.items():
                 self.add(name, ps)
@@ -187,6 +201,12 @@ class FleetMonitor:
         if name in self._sensors:
             raise ValueError(f"duplicate device name {name!r}")
         self._sensors[name] = sensor
+        # label the receiver's own trace events with the fleet name
+        if getattr(sensor, "obs_name", None) is None:
+            try:
+                sensor.obs_name = name
+            except AttributeError:  # duck-typed sensor with __slots__
+                pass
 
     def __len__(self) -> int:
         return len(self._sensors)
@@ -414,6 +434,23 @@ class FleetMonitor:
                 receiver_alive=alive,
                 dropped_frames=int(getattr(ps, "dropped_frames", 0)),
             )
+            prev = self._last_health.get(name)
+            if prev != state:
+                self._last_health[name] = state
+                if prev is not None:  # first sighting is not a transition
+                    rec = obs_trace.active()
+                    if rec is not None:
+                        rec.device_instant(
+                            f"health:{prev}->{state}", now,
+                            track=f"health:{name}", value=staleness,
+                        )
+                    reg = obs_metrics.active()
+                    if reg is not None:
+                        reg.counter(
+                            "fleet_health_transitions_total",
+                            "device health state changes",
+                            device=name, to=state,
+                        ).inc()
         return out
 
     def fleet_power(
@@ -452,6 +489,7 @@ class FleetMonitor:
             stale = quorum < self.min_quorum_frac
             if not stale:
                 self._last_good = (now, power)
+            self._note_reading(now, power, quorum, stale, holdover=False)
             return FleetPowerReading(
                 power_w=power,
                 raw_power_w=raw,
@@ -466,6 +504,7 @@ class FleetMonitor:
         if self._last_good is not None:
             t_good, p_good = self._last_good
             age = max(now - t_good, 0.0)
+            self._note_reading(now, p_good, 0.0, True, holdover=age <= self.holdover_s)
             return FleetPowerReading(
                 power_w=p_good,
                 raw_power_w=0.0,
@@ -477,6 +516,7 @@ class FleetMonitor:
                 time_s=now,
                 data_age_s=age,
             )
+        self._note_reading(now, 0.0, 0.0, True, holdover=False)
         return FleetPowerReading(
             power_w=0.0,
             raw_power_w=0.0,
@@ -488,6 +528,39 @@ class FleetMonitor:
             time_s=now,
             data_age_s=math.inf,
         )
+
+    def _note_reading(
+        self, now: float, power_w: float, quorum: float, stale: bool, holdover: bool
+    ) -> None:
+        """Obs hooks for one `fleet_power` reading (no-ops when disabled).
+
+        Stale entry/exit are *edge* events on the trace timeline (a 1 kHz
+        control loop would otherwise flood the ring); counters accumulate
+        per reading so scrape-side rates stay meaningful.
+        """
+        reg = obs_metrics.active()
+        if reg is not None:
+            reg.counter("fleet_power_reads_total", "fleet_power readings").inc()
+            if stale:
+                reg.counter(
+                    "fleet_stale_reads_total",
+                    "fleet_power readings flagged stale (quorum below floor)",
+                ).inc()
+            if holdover:
+                reg.counter(
+                    "fleet_holdover_reads_total",
+                    "stale readings served from the held last-good value",
+                ).inc()
+            reg.gauge("fleet_power_w", "latest fleet power estimate").set(power_w)
+            reg.gauge("fleet_quorum_frac", "latest healthy-device fraction").set(quorum)
+        if stale != self._stale_streak:
+            self._stale_streak = stale
+            rec = obs_trace.active()
+            if rec is not None:
+                rec.device_instant(
+                    "fleet:stale-enter" if stale else "fleet:stale-exit",
+                    now, track="fleet", value=quorum,
+                )
 
     def window_power_w(self, window_s: float | None = None, poll: bool = True) -> float:
         """Fleet-summed trailing-window mean power — the governor's fast hook.

@@ -1,0 +1,171 @@
+"""Report renderers and dump-text parsing (the consumer-facing I/O edges).
+
+Covers `attrib.report` (text / CSV / JSON emitters and `write_report`
+dispatch) and the error paths of `stream.textio.parse_dump` — the two
+surfaces other tools consume, so their formats and failure modes are
+pinned here rather than implied by the happy-path parity tests.
+"""
+import csv
+import io
+import json
+
+import numpy as np
+import pytest
+
+from repro.attrib.attribute import EnergyLedger
+from repro.attrib.report import (
+    render_csv,
+    render_json,
+    render_text,
+    write_report,
+)
+from repro.stream.textio import format_dump_block, parse_dump
+
+
+def _ledger(skipped: int = 0) -> EnergyLedger:
+    led = EnergyLedger(trace_energy_j=20.0, t0_s=0.0, t1_s=2.0,
+                       skipped_spans=skipped)
+    led.add_occurrence("attn", 6.0, 0.5, 200.0)
+    led.add_occurrence("attn", 6.0, 0.5, 210.0)
+    led.add_occurrence("ffn", 3.0, 0.4, 150.0)
+    led.add_occurrence("gap", 1.0, 0.6, 30.0)
+    return led  # total 16 J of the 20 J trace window -> 80 %
+
+
+# ------------------------------------------------------------- render_text
+def test_render_text_header_and_ranking():
+    text = render_text(_ledger())
+    lines = text.splitlines()
+    assert lines[0] == (
+        "# energy ledger: 16.000 J attributed (80.0% of trace window)"
+    )
+    # ranked biggest-first: attn (12 J), ffn (3 J), gap (1 J)
+    names = [ln.split()[0] for ln in lines[2:]]
+    assert names == ["attn", "ffn", "gap"]
+    # attn row: 2 occurrences, 12 J, 75 % share
+    assert lines[2].split()[1:4] == ["2", "12.000", "75.0%"]
+
+
+def test_render_text_top_truncation_footer():
+    text = render_text(_ledger(), top=1)
+    assert "ffn" not in text
+    # the 2 hidden entries sum to 4 J
+    assert text.splitlines()[-1] == "... 2 more entries, 4.000 J"
+
+
+def test_render_text_skipped_spans_footer():
+    text = render_text(_ledger(skipped=3), title="case study")
+    assert text.startswith("# case study:")
+    assert text.splitlines()[-1] == (
+        "# 3 spans skipped (too few samples or history evicted)"
+    )
+    assert "spans skipped" not in render_text(_ledger())
+
+
+def test_render_text_empty_ledger():
+    text = render_text(EnergyLedger())
+    assert "0.000 J attributed (0.0% of trace window)" in text
+    assert len(text.splitlines()) == 2  # header + column row only
+
+
+# -------------------------------------------------------------- render_csv
+def test_render_csv_schema_and_rows():
+    rows = list(csv.DictReader(io.StringIO(render_csv(_ledger()))))
+    assert [r["name"] for r in rows] == ["attn", "ffn", "gap"]
+    attn = rows[0]
+    assert int(attn["count"]) == 2
+    assert float(attn["energy_j"]) == pytest.approx(12.0)
+    assert float(attn["share"]) == pytest.approx(0.75)
+    assert float(attn["j_per_occurrence"]) == pytest.approx(6.0)
+    assert float(attn["avg_w"]) == pytest.approx(12.0)
+    assert float(attn["peak_w"]) == pytest.approx(210.0)  # max over occurrences
+
+
+# ------------------------------------------------------------- render_json
+def test_render_json_roundtrip():
+    doc = json.loads(render_json(_ledger(skipped=1)))
+    assert doc["total_energy_j"] == pytest.approx(16.0)
+    assert doc["trace_energy_j"] == pytest.approx(20.0)
+    assert doc["attributed_fraction"] == pytest.approx(0.8)
+    assert (doc["t0_s"], doc["t1_s"]) == (0.0, 2.0)
+    assert doc["skipped_spans"] == 1
+    assert [e["name"] for e in doc["entries"]] == ["attn", "ffn", "gap"]
+
+
+def test_render_json_indent():
+    assert "\n" not in render_json(_ledger())
+    assert render_json(_ledger(), indent=2).count("\n") > 5
+
+
+# ------------------------------------------------------------ write_report
+def test_write_report_to_path(tmp_path):
+    for fmt, probe in (("text", "# energy ledger"), ("csv", "name,count"),
+                       ("json", '"total_energy_j"')):
+        p = tmp_path / f"report.{fmt}"
+        write_report(_ledger(), str(p), fmt=fmt)
+        assert probe in p.read_text()
+
+
+def test_write_report_to_file_like():
+    buf = io.StringIO()
+    write_report(_ledger(), buf, fmt="csv")
+    assert buf.getvalue().startswith("name,count,energy_j")
+
+
+def test_write_report_unknown_format():
+    with pytest.raises(ValueError, match="unknown report format 'yaml'"):
+        write_report(_ledger(), io.StringIO(), fmt="yaml")
+
+
+# -------------------------------------------------------------- parse_dump
+def test_parse_dump_roundtrip_with_formatter():
+    n = 16
+    t = np.linspace(0.0, 0.015, n)
+    pairs = np.arange(n, dtype=np.int64) % 4
+    v = np.full(n, 12.0625)
+    a = np.linspace(0.5, 2.0, n)
+    w = v * a
+    text = format_dump_block(t, pairs, v, a, w)
+    rt, rp, rv, ra, rw = parse_dump(text)[:5]
+    assert rp.dtype == np.int64 and list(rp) == list(pairs)
+    # round-trip within the dump's fixed-point quantisation
+    np.testing.assert_allclose(rt, t, atol=5e-7)
+    np.testing.assert_allclose(rv, v, atol=5e-5)
+    np.testing.assert_allclose(ra, a, atol=5e-5)
+    np.testing.assert_allclose(rw, w, atol=5e-5)
+
+
+def test_parse_dump_markers_comments_blanks():
+    text = (
+        "# continuous dump\n"
+        "\n"
+        "0.000100 0 12.0000 1.0000 12.0000\n"
+        "M S 0.000150\n"
+        "0.000200 1 12.0000 2.0000 24.0000\n"
+        "   \n"
+        "M E 0.000250\n"
+    )
+    t, pairs, v, a, w, markers = parse_dump(text)
+    assert t.size == 2 and list(pairs) == [0, 1]
+    assert markers == [("S", 0.00015), ("E", 0.00025)]
+
+
+def test_parse_dump_malformed_row_raises():
+    with pytest.raises(ValueError, match="malformed dump row"):
+        parse_dump("0.1 0 12.0 1.0\n")  # 4 fields
+    with pytest.raises(ValueError, match=r"'0\.1 0 12\.0 1\.0 12\.0 junk'"):
+        parse_dump("0.1 0 12.0 1.0 12.0 junk\n")  # 6 fields, repr in message
+
+
+def test_parse_dump_non_numeric_field_raises():
+    with pytest.raises(ValueError):
+        parse_dump("0.1 0 twelve 1.0 12.0\n")
+
+
+def test_parse_dump_empty_input():
+    t, pairs, v, a, w, markers = parse_dump("")
+    assert t.size == pairs.size == v.size == a.size == w.size == 0
+    assert t.shape == (0,) and markers == []
+    # comments/markers only is also an empty frame set
+    t2, _, _, _, _, markers2 = parse_dump("# nothing\nM S 1.0\n")
+    assert t2.size == 0 and markers2 == [("S", 1.0)]

@@ -1,0 +1,243 @@
+"""Signature watchdog and part-time-sampler baseline over live fleets.
+
+A shrunk version of the ``benchmarks/obs_overhead`` watchdog scenario:
+two devices replay the same serve step (gap/A/gap/B/gap/C) and one runs
+a single occurrence of kernel B at 1.5x power.  The 20 kHz watchdog must
+flag exactly that window, stay quiet on the clean device, and the 10 Hz
+`PartTimeSampler` must miss the excursion entirely.  Degraded-telemetry
+semantics (stale devices skipped, cursor frozen) and the sampler's unit
+behaviour are pinned separately.
+"""
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.attrib.attribute import KernelSpan
+from repro.attrib.signatures import SignatureLibrary, build_library
+from repro.core import ConstantLoad
+from repro.core.dut import TraceLoad
+from repro.obs.trace import DEVICE
+from repro.obs.watch import Anomaly, PartTimeSampler, SignatureWatchdog
+from repro.stream import make_virtual_fleet
+
+STEP_PATTERN = [
+    ("gap", 4e-3, 40.0),
+    ("A", 6e-3, 80.0),
+    ("gap", 4e-3, 40.0),
+    ("B", 8e-3, 150.0),
+    ("gap", 4e-3, 40.0),
+    ("C", 6e-3, 110.0),
+]
+STEP_S = sum(d for _, d, _ in STEP_PATTERN)  # 32 ms
+N_STEPS = 14
+WARM_STEPS = 4
+TAMPER_STEP = 9
+TAMPER_FACTOR = 1.5
+
+
+def _pattern_arrays(n_steps, tamper_step=None):
+    eps = 1e-6
+    ts, ws = [0.0], [STEP_PATTERN[0][2]]
+    t = 0.0
+    for k in range(n_steps):
+        for name, dur, w in STEP_PATTERN:
+            if k == tamper_step and name == "B":
+                w *= TAMPER_FACTOR
+            ts += [t + eps, t + dur]
+            ws += [w, w]
+            t += dur
+    return np.asarray(ts), np.asarray(ws)
+
+
+def _tamper_window():
+    offs = 0.0
+    for name, dur, _ in STEP_PATTERN:
+        if name == "B":
+            break
+        offs += dur
+    t0 = TAMPER_STEP * STEP_S + offs
+    return t0, t0 + dict((n, d) for n, d, _ in STEP_PATTERN)["B"]
+
+
+@pytest.fixture(scope="module")
+def scenario():
+    """Run the two-device tamper scenario once; share the outcome."""
+    obs.disable()
+    rec, reg = obs.enable()
+    clean_t, clean_w = _pattern_arrays(N_STEPS)
+    tamp_t, tamp_w = _pattern_arrays(N_STEPS, tamper_step=TAMPER_STEP)
+    fleet = make_virtual_fleet(
+        [TraceLoad(times_s=clean_t, watts=clean_w),
+         TraceLoad(times_s=tamp_t, watts=tamp_w)],
+        ring_capacity=1 << 16,
+    )
+    try:
+        warm_s = WARM_STEPS * STEP_S
+        fleet.advance(warm_s)
+        block = fleet["dev0"].ring.window(0.0, warm_s)
+        spans = []
+        for k in range(WARM_STEPS):
+            t = k * STEP_S
+            for name, dur, _ in STEP_PATTERN:
+                spans.append(KernelSpan(name, t, t + dur))
+                t += dur
+        lib = build_library(block.times_s, block.total_watts, spans)
+
+        dog = SignatureWatchdog(fleet, lib)
+        dog.check()  # attach cursors
+        sampler = PartTimeSampler(
+            lambda t: float(np.interp(t, tamp_t, tamp_w)), rate_hz=10.0
+        )
+        now, total_s = warm_s, N_STEPS * STEP_S
+        while now < total_s - 1e-9:
+            step = min(2 * STEP_S, total_s - now)
+            fleet.advance(step)
+            now += step
+            sampler.poll(now)
+            dog.check()
+        # no new ring data: repeated checks must not re-raise anomalies
+        idle_news = [dog.check(), dog.check()]
+    finally:
+        fleet.close()
+        obs.disable()
+    return dict(dog=dog, sampler=sampler, rec=rec, reg=reg,
+                idle_news=idle_news)
+
+
+def test_watchdog_flags_tampered_kernel(scenario):
+    t0, t1 = _tamper_window()
+    dog = scenario["dog"]
+    hits = [a for a in dog.anomalies
+            if a.device == "dev1" and a.t0_s < t1 and a.t1_s > t0]
+    assert hits, f"no anomaly overlapping [{t0:.3f}, {t1:.3f}) s"
+    a = hits[0]
+    assert a.kind == "power-deviation" and a.name == "B"
+    # mean power lands near 1.5x the signature's expectation
+    assert a.expected_w == pytest.approx(150.0, rel=0.1)
+    assert a.mean_w / a.expected_w == pytest.approx(TAMPER_FACTOR, rel=0.15)
+    assert a.duration_s == pytest.approx(a.t1_s - a.t0_s)
+
+
+def test_watchdog_clean_device_quiet_no_strays(scenario):
+    dog = scenario["dog"]
+    t0, t1 = _tamper_window()
+    assert [a for a in dog.anomalies if a.device == "dev0"] == []
+    strays = [a for a in dog.anomalies
+              if a.device == "dev1" and not (a.t0_s < t1 and a.t1_s > t0)]
+    assert strays == []
+    assert dog.n_segments > 2 * (N_STEPS - WARM_STEPS)  # really judged shapes
+
+
+def test_watchdog_idle_checks_raise_nothing_new(scenario):
+    assert scenario["idle_news"] == [[], []]
+
+
+def test_part_time_sampler_misses_the_excursion(scenario):
+    sampler = scenario["sampler"]
+    honest_peak = max(w for _, _, w in STEP_PATTERN)
+    assert len(sampler.samples) >= 3
+    # the 8 ms excursion (225 W) lands between 100 ms samples
+    assert sampler.detect(0.0, honest_peak * 1.1) == []
+    assert max(sampler.values) <= honest_peak * 1.1
+
+
+def test_watchdog_emits_obs_series(scenario):
+    reg, rec, dog = scenario["reg"], scenario["rec"], scenario["dog"]
+    assert reg.get_value("watchdog_checks_total") == float(dog.n_checks)
+    flagged = reg.get_value("watchdog_anomalies_total",
+                            device="dev1", kind="power-deviation")
+    assert flagged == float(len(dog.anomalies))
+    spans = [e for e in rec.events()
+             if e.name.startswith("anomaly:power-deviation")]
+    assert len(spans) == len(dog.anomalies)
+    assert all(e.track == "watchdog:dev1" and e.clock == DEVICE for e in spans)
+
+
+# --------------------------------------------------------- degraded fleet
+def test_watchdog_skips_stale_device_and_freezes_cursor():
+    from repro.faultlab import Disconnect, Scenario, inject
+
+    t = np.linspace(0.0, 0.01, 64)
+    lib = build_library(t, np.full(64, 50.0), [KernelSpan("k", 0.0, 0.01)])
+    fleet = make_virtual_fleet(
+        [ConstantLoad(12.0, 2.0), ConstantLoad(12.0, 3.0)],
+        stale_after_s=0.05, lost_after_s=10.0,
+    )
+    obs.disable()
+    _rec, reg = obs.enable()
+    try:
+        inject(fleet, Scenario(faults=(Disconnect(0.05, 5.0, devices=("dev0",)),)))
+        fleet.advance(0.04)
+        dog = SignatureWatchdog(fleet, lib)
+        dog.check()  # both healthy: cursors attach
+        assert set(dog._cursors) == {"dev0", "dev1"}
+        frozen = dog._cursors["dev0"].t_s
+        fleet.advance(0.3)  # dev0 goes silent and turns stale
+        assert fleet.device_health()["dev0"].state == "stale"
+        dog.check()
+        dog.check()
+        assert reg.get_value("watchdog_skipped_total",
+                             device="dev0", state="stale") == 2.0
+        assert dog._cursors["dev0"].t_s == frozen  # cursor did not move
+        assert all(a.device != "dev0" for a in dog.anomalies)
+    finally:
+        fleet.close()
+        obs.disable()
+
+
+# ------------------------------------------------------------- unit tier
+def test_watchdog_rejects_empty_library():
+    fleet = make_virtual_fleet([ConstantLoad(12.0, 1.0)])
+    try:
+        with pytest.raises(ValueError, match="non-empty signature library"):
+            SignatureWatchdog(fleet, SignatureLibrary())
+    finally:
+        fleet.close()
+
+
+def test_judge_flags_unknown_signature():
+    from types import SimpleNamespace
+
+    t = np.linspace(0.0, 0.01, 64)
+    lib = build_library(t, np.full(64, 50.0), [KernelSpan("k", 0.0, 0.01)])
+    fleet = make_virtual_fleet([ConstantLoad(12.0, 1.0)])
+    try:
+        # a strict matcher: any measurable shape distance is "unknown"
+        dog = SignatureWatchdog(fleet, lib, max_distance=1e-6)
+        w = np.abs(np.linspace(-100.0, 100.0, 64)) + 20.0
+        seg = SimpleNamespace(t0_s=0.0, t1_s=0.01, mean_w=float(w.mean()))
+        dog._judge("dev0", seg, t, w)
+        (a,) = dog.anomalies
+        assert a.kind == "unknown-signature" and a.name == "?"
+        assert a.distance > dog.max_distance
+        assert a.expected_w is None
+    finally:
+        fleet.close()
+
+
+def test_sampler_rate_validation():
+    with pytest.raises(ValueError, match="rate_hz"):
+        PartTimeSampler(lambda t: 0.0, rate_hz=0.0)
+
+
+def test_sampler_poll_schedule_and_detect():
+    sampler = PartTimeSampler(lambda t: 100.0 * t, rate_hz=10.0)
+    assert sampler.poll(0.25) == 3  # samples at 0.0, 0.1, 0.2
+    assert sampler.poll(0.25) == 0  # nothing newly due
+    assert sampler.poll(0.5) == 3  # 0.3, 0.4, 0.5
+    assert [t for t, _ in sampler.samples] == pytest.approx(
+        [0.0, 0.1, 0.2, 0.3, 0.4, 0.5])
+    assert sampler.values == pytest.approx([0.0, 10.0, 20.0, 30.0, 40.0, 50.0])
+    assert sampler.detect(5.0, 45.0) == [(0.0, 0.0), (0.5, 50.0)]
+
+
+def test_sampler_phase_offsets_schedule():
+    sampler = PartTimeSampler(lambda t: 1.0, rate_hz=10.0, phase_s=0.05)
+    sampler.poll(0.2)
+    assert [t for t, _ in sampler.samples] == pytest.approx([0.05, 0.15])
+
+
+def test_anomaly_duration():
+    a = Anomaly("dev0", "unknown-signature", "?", 1.0, 1.25, 0.9, 80.0)
+    assert a.duration_s == pytest.approx(0.25)
+    assert a.expected_w is None

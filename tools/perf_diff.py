@@ -1,7 +1,18 @@
-"""Compare two dry-run JSONs (baseline vs hillclimb iteration).
+"""Compare perf artifacts across runs.
 
-    python tools/perf_diff.py grok1_314b train_4k baseline h1_moesort
+Two modes:
+
+* dry-run roofline diff (positional, the original mode):
+
+      python tools/perf_diff.py grok1_314b train_4k baseline h1_moesort
+
+* benchmark report diff (``--bench``): compare two ``--json`` documents
+  written by any gated benchmark (`benchmarks/common.BenchReport`) and
+  print a per-metric delta table plus any gate flips:
+
+      python tools/perf_diff.py --bench old.json new.json
 """
+import argparse
 import json
 import sys
 
@@ -23,8 +34,8 @@ def load(arch, shape, tag, mesh="pod16x16"):
         return json.load(f)
 
 
-def main():
-    arch, shape, tag_a, tag_b = sys.argv[1:5]
+def dryrun_diff(argv):
+    arch, shape, tag_a, tag_b = argv[:4]
     a = load(arch, shape, tag_a)
     b = load(arch, shape, tag_b)
     ra, rb = a["roofline"], b["roofline"]
@@ -36,7 +47,76 @@ def main():
     print(f"  bottleneck             {ra['bottleneck']:>12s} -> {rb['bottleneck']:>12s}")
     ta, tb = a["memory"].get("temp_size_in_bytes", 0), b["memory"].get("temp_size_in_bytes", 0)
     print(f"  temp_mem_GB            {ta/1e9:12.2f} -> {tb/1e9:12.2f}")
+    return 0
+
+
+def bench_diff(path_a: str, path_b: str) -> int:
+    """Delta table between two BenchReport JSON documents.
+
+    Returns nonzero when the newer run regressed: its overall ``ok``
+    went false, or any gate that passed before now fails.
+    """
+    with open(path_a) as fh:
+        a = json.load(fh)
+    with open(path_b) as fh:
+        b = json.load(fh)
+    name_a = a.get("benchmark", "?")
+    name_b = b.get("benchmark", "?")
+    if name_a != name_b:
+        print(f"warning: comparing different benchmarks "
+              f"({name_a!r} vs {name_b!r})", file=sys.stderr)
+    print(f"{name_b}:  {path_a}  ->  {path_b}")
+
+    ma, mb = a.get("metrics", {}), b.get("metrics", {})
+    width = max((len(k) for k in set(ma) | set(mb)), default=10)
+    for key in sorted(set(ma) | set(mb)):
+        if key not in ma:
+            print(f"  {key:<{width}}            (new) -> "
+                  f"{mb[key]['value']:12.3f}")
+            continue
+        if key not in mb:
+            print(f"  {key:<{width}} {ma[key]['value']:12.3f} -> (gone)")
+            continue
+        va, vb = ma[key]["value"], mb[key]["value"]
+        delta = (vb - va) / va * 100 if va else float("nan")
+        note = mb[key].get("derived", "")
+        print(f"  {key:<{width}} {va:12.3f} -> {vb:12.3f} ({delta:+8.1f}%)"
+              f"{'  ' + note if note else ''}")
+
+    ga = {g["name"]: g for g in a.get("gates", [])}
+    gb = {g["name"]: g for g in b.get("gates", [])}
+    regressions = []
+    for key in sorted(set(ga) | set(gb)):
+        pa = ga.get(key, {}).get("passed")
+        pb = gb.get(key, {}).get("passed")
+        if pa == pb and pb is not False:
+            continue
+        mark = {True: "ok", False: "FAIL", None: "-"}
+        print(f"  gate {key:<{max(width - 5, 1)}} {mark[pa]:>12} -> {mark[pb]}")
+        if pa is not False and pb is False:
+            regressions.append(key)
+    for f in b.get("failures", []):
+        print(f"  failure: {f}")
+
+    ok_a, ok_b = a.get("ok", True), b.get("ok", True)
+    if regressions or (ok_a and not ok_b):
+        print(f"REGRESSION: {', '.join(regressions) or 'overall ok -> failed'}")
+        return 1
+    print(f"ok: {'pass' if ok_b else 'still failing'} "
+          f"(was {'pass' if ok_a else 'failing'})")
+    return 0
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if argv and argv[0] == "--bench":
+        ap = argparse.ArgumentParser(prog="perf_diff --bench")
+        ap.add_argument("baseline", help="older BenchReport JSON")
+        ap.add_argument("candidate", help="newer BenchReport JSON")
+        args = ap.parse_args(argv[1:])
+        return bench_diff(args.baseline, args.candidate)
+    return dryrun_diff(argv)
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())
