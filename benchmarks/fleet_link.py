@@ -1,0 +1,226 @@
+"""Fleet link benchmark: N socket links at 20 kHz each, loss-free.
+
+Gates the `repro.net` transport the way the receiver benchmark gates the
+decode hot path:
+
+* **clean sustain** — a `FleetHead` over N wall-clock-driven virtual
+  devices (one `DeviceServer`, one TCP link per device) must hold every
+  link at the device's native 20 kHz frame rate with *zero* dropped
+  frames and *zero* resync-discarded bytes: after the run each link's
+  ring must be gap-free (every inter-frame delta exactly one 50 µs
+  frame) and must have landed ≥ 90 % of the frames the wall clock
+  generated (backpressure may delay the tail, never drop it);
+* **disconnect → reacquire** — one link is severed mid-run
+  (`DeviceServer.drop`); its device must be reported ``lost`` while
+  down, reacquire automatically (reconnects ≥ 1, ``healthy``, fresh
+  frames landing), and every *other* link must ride through untouched
+  (still gap-free, still zero drops).
+
+    PYTHONPATH=src python -m benchmarks.fleet_link [--smoke] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import ConstantLoad, make_device
+from repro.core.firmware import FRAME_US
+from repro.net import DeviceServer, FleetHead
+
+from .common import BenchReport, add_json_arg
+
+TICK_US = FRAME_US  # one frame per 50 µs: 20 kHz
+
+
+def _build(n_devices: int):
+    devices = {
+        f"dev{i}": make_device(
+            ["pcie8pin-20a"], ConstantLoad(12.0, 2.0 + 0.25 * i), seed=i
+        )
+        for i in range(n_devices)
+    }
+    server = DeviceServer(devices, drive=True)
+    head = FleetHead(
+        {name: server.endpoint for name in devices},
+        window_s=0.05,
+        ring_capacity=1 << 16,
+        stale_after_s=0.05,
+        lost_after_s=0.25,
+    )
+    return server, head
+
+
+def _link_report(head: FleetHead, name: str) -> dict:
+    ps = head[name]
+    block = ps.ring.latest()
+    diffs = np.diff(block.times_s) if len(block) > 1 else np.array([])
+    frame_s = TICK_US * 1e-6
+    return {
+        "frames": len(block),
+        "dropped_frames": int(ps.dropped_frames),
+        "dropped_bytes": int(ps.dropped_bytes),
+        "gap_free": bool(
+            len(diffs) and np.allclose(diffs, frame_s, rtol=0, atol=1e-9)
+        ),
+        "max_gap_us": float(diffs.max() * 1e6) if len(diffs) else 0.0,
+    }
+
+
+def bench_clean_sustain(n_devices: int, seconds: float, report: BenchReport) -> list[str]:
+    failures: list[str] = []
+    server, head = _build(n_devices)
+    try:
+        t0 = time.perf_counter()
+        head.run_for(seconds, tick_s=0.001)
+        wall = time.perf_counter() - t0
+        # stop generating (the server reads `drive` every tick), then drain
+        # the in-flight tail: delayed is fine, dropped is not
+        server.drive = False
+        deadline = time.monotonic() + 30.0
+        while time.monotonic() < deadline:
+            n = head.poll()
+            if n == 0 and all(
+                head[name].device.buffered_chunks == 0
+                for name in head.endpoints
+            ):
+                break
+            time.sleep(0.002)
+        total_frames = 0
+        expect = seconds * 1e6 / TICK_US
+        for name in sorted(head.endpoints):
+            link = _link_report(head, name)
+            total_frames += link["frames"]
+            if not report.gate(
+                f"clean:{name}:zero-drops",
+                link["dropped_frames"] == 0 and link["dropped_bytes"] == 0,
+                value=link["dropped_frames"] + link["dropped_bytes"],
+                limit=0,
+            ):
+                failures.append(f"{name}: dropped {link}")
+            if not report.gate(
+                f"clean:{name}:gap-free",
+                link["gap_free"],
+                value=link["max_gap_us"],
+                limit=TICK_US,
+                detail="every inter-frame delta must be one 50 µs frame",
+            ):
+                failures.append(f"{name}: stream gap ({link['max_gap_us']:.1f} µs)")
+            if not report.gate(
+                f"clean:{name}:rate",
+                link["frames"] >= 0.9 * expect,
+                value=link["frames"],
+                limit=0.9 * expect,
+                detail="ring frames vs wall-clock 20 kHz",
+            ):
+                failures.append(
+                    f"{name}: {link['frames']} frames < 90% of {expect:.0f}"
+                )
+        report.emit(
+            "fleet_link_frames_per_s", total_frames / wall,
+            f"{n_devices} links, {seconds:.2f} s wall",
+        )
+        report.emit(
+            "fleet_link_khz_per_link", total_frames / wall / n_devices / 1e3,
+            "per-link sustained decode rate",
+        )
+        bp = sum(
+            head.link_stats()[n]["backpressure_waits"] for n in head.endpoints
+        )
+        report.record("fleet_link_backpressure_waits", bp)
+    finally:
+        head.close()
+        server.close()
+    return failures
+
+
+def bench_disconnect_reacquire(
+    n_devices: int, seconds: float, report: BenchReport
+) -> list[str]:
+    failures: list[str] = []
+    server, head = _build(n_devices)
+    victim = "dev0"
+    try:
+        head.run_for(seconds / 2, tick_s=0.001)
+        server.drop(victim)
+        # observe the lost state (poll without the reconnect maintenance)
+        saw_lost = False
+        deadline = time.monotonic() + 30.0
+        while time.monotonic() < deadline:
+            head.monitor.poll_all()
+            if head.device_health()[victim].state == "lost":
+                saw_lost = True
+                break
+            time.sleep(0.002)
+        if not report.gate("disconnect:lost-reported", saw_lost):
+            failures.append(f"{victim} never reported lost after drop")
+        # now reacquire: full poll() redials and restreams
+        h0 = head[victim].ring.head
+        t_down = time.monotonic()
+        reacquired = False
+        deadline = time.monotonic() + 30.0
+        while time.monotonic() < deadline:
+            head.poll()
+            if (
+                head.device_health()[victim].healthy
+                and head[victim].ring.head > h0 + 50
+            ):
+                reacquired = True
+                break
+            time.sleep(0.002)
+        reacquire_s = time.monotonic() - t_down
+        if not report.gate("disconnect:reacquired", reacquired):
+            failures.append(f"{victim} did not reacquire within 30 s")
+        report.emit("fleet_link_reacquire_ms", reacquire_s * 1e3,
+                    "lost -> healthy with fresh frames")
+        if not report.gate(
+            "disconnect:reconnect-counted", head.reconnects[victim] >= 1,
+            value=head.reconnects[victim], limit=1,
+        ):
+            failures.append(f"{victim} reconnects not counted")
+        head.run_for(seconds / 4, tick_s=0.001)
+        # every *other* link must ride through untouched
+        for name in sorted(head.endpoints):
+            if name == victim:
+                continue
+            link = _link_report(head, name)
+            ok = (
+                link["dropped_frames"] == 0
+                and link["dropped_bytes"] == 0
+                and link["gap_free"]
+            )
+            if not report.gate(f"disconnect:{name}:unaffected", ok):
+                failures.append(f"{name} disturbed by {victim} drop: {link}")
+    finally:
+        head.close()
+        server.close()
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (4 links, short)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="override the link count")
+    add_json_arg(ap)
+    args = ap.parse_args(argv)
+
+    n_devices = args.devices or (4 if args.smoke else 16)
+    seconds = 0.4 if args.smoke else 1.5
+    report = BenchReport(
+        "fleet_link", {"devices": n_devices, "seconds": seconds,
+                       "smoke": bool(args.smoke)},
+    )
+    failures = bench_clean_sustain(n_devices, seconds, report)
+    failures += bench_disconnect_reacquire(n_devices, seconds, report)
+    ok = report.finish(failures, args.json)
+    for f in failures:
+        print(f"FAIL: {f}")
+    print(f"fleet_link: {'ok' if ok else 'FAILED'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

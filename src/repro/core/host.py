@@ -122,6 +122,13 @@ class PowerSensor:
         self._thread: threading.Thread | None = None
         self._thread_stop = threading.Event()
         self._thread_error: BaseException | None = None
+        # receiver generation: each started thread captures the current
+        # value; a thread detached past its join timeout (a "zombie"
+        # wedged inside device.read) is fenced by bumping it, so any
+        # batch the zombie eventually returns with is dropped, never
+        # interleaved with the restarted receiver's stream
+        self._recv_gen = 0
+        self._fenced_bytes = 0
         self.ring = FrameRing(ring_capacity, MAX_PAIRS)
 
         # ---- connect handshake: version + config download ----
@@ -244,8 +251,32 @@ class PowerSensor:
     # ------------------------------------------------------------ the receiver
     def poll(self) -> int:
         """Parse everything the device has produced. Returns #frames seen."""
+        return max(self._poll_locked(None), 0)
+
+    def _poll_locked(self, gen: int | None) -> int:
+        """One receive pass under the lock, fenced by a generation token.
+
+        ``gen`` is the receiver thread's captured generation (None for
+        direct callers).  A stale token means this thread was detached by
+        `stop_thread` while wedged — its batch is dropped (counted in
+        ``fenced_bytes``), never interleaved — and -1 tells the thread
+        loop to exit.  The token is re-checked *after* ``device.read()``
+        because that is exactly where a zombie blocks while being fenced.
+        """
         with self._lock:
-            buf = self._residual + self.device.read()
+            if gen is not None and gen != self._recv_gen:
+                return -1
+            data = self.device.read()
+            if gen is not None and gen != self._recv_gen:
+                self._fenced_bytes += len(data)
+                rec = obs_trace.active()
+                if rec is not None and data:
+                    rec.counter(
+                        "rx.fenced_bytes", float(len(data)),
+                        track=f"rx:{getattr(self, 'obs_name', 'dev')}",
+                    )
+                return -1
+            buf = self._residual + data
             ids, vals, marks, consumed = protocol.decode_packets(buf)
             self._residual = buf[consumed:]
             # bytes consumed without yielding packets were resync discards:
@@ -264,9 +295,9 @@ class PowerSensor:
             # A batch may end mid-frame (tiny transport reads split packets
             # across polls).  Data packets stranded *before* the next poll's
             # first timestamp used to be discarded; instead, hold the
-            # trailing incomplete frame back (re-encoded into the residual)
-            # so the next poll completes it.  Full-frame polls — the steady
-            # state — take the `tail >= expected` branch and pay nothing.
+            # trailing incomplete frame back in the residual so the next
+            # poll completes it.  Full-frame polls — the steady state —
+            # take the `tail >= expected` branch and pay nothing.
             is_ts = protocol.is_timestamp(ids, marks)
             ts_pos = np.flatnonzero(is_ts)
             if ts_pos.size:
@@ -279,12 +310,21 @@ class PowerSensor:
                 if not self._ch_enabled[0] and np.any(ids[last_ts + 1 :] == 0):
                     expected += 1
                 if tail < expected:
-                    self._residual = (
-                        protocol.encode_packets(
+                    # With zero junk in this batch every decoded packet
+                    # sits at a 2-byte-aligned offset, so the held frame
+                    # is a straight byte slice — no decode→re-encode
+                    # round trip, and the discard accounting balances by
+                    # construction (the held bytes re-enter both
+                    # `consumed` and `2*ids.size` on the next poll).
+                    # Junk interleaving the batch loses the alignment;
+                    # only then re-encode the decoded packets.
+                    if junk == 0:
+                        held = buf[2 * last_ts : consumed]
+                    else:
+                        held = protocol.encode_packets(
                             ids[last_ts:], vals[last_ts:], marks[last_ts:]
                         )
-                        + self._residual
-                    )
+                    self._residual = held + self._residual
                     ids, vals, marks, is_ts = (
                         ids[:last_ts], vals[:last_ts], marks[:last_ts], is_ts[:last_ts],
                     )
@@ -298,6 +338,17 @@ class PowerSensor:
         return self._dropped_bytes
 
     @property
+    def fenced_bytes(self) -> int:
+        """Bytes read by a superseded (zombie) receiver thread and dropped.
+
+        A receiver detached past its join timeout may return from a
+        wedged ``device.read()`` much later; its batch is discarded to
+        keep the restarted receiver's stream uninterleaved, and the
+        discard is counted here instead of vanishing.
+        """
+        return self._fenced_bytes
+
+    @property
     def dropped_frames(self) -> int:
         """Malformed frames discarded by the receiver (never silent).
 
@@ -306,6 +357,18 @@ class PowerSensor:
         with no preceding timestamp after a corruption or reconnect).
         """
         return self._dropped_packets + (self._dropped_bytes + 1) // 2
+
+    def detach_residual(self) -> bytes:
+        """Drop any half-assembled packet bytes; returns what was held.
+
+        For transport reconnects (`repro.net.FleetHead`): a severed byte
+        stream's trailing fragment no longer aligns with the fresh link's
+        first bytes, so carrying it across would force a resync discard
+        on the first post-reconnect poll.
+        """
+        with self._lock:
+            out, self._residual = self._residual, b""
+            return out
 
     def _convert_regular(self, ids, vals, marks, per, n_frames):
         """Reshape-based conversion for a frame-regular batch: no packet
@@ -552,20 +615,35 @@ class PowerSensor:
         """
         if self._thread is not None:
             return
-        self._thread_stop.clear()
+        # fresh per-thread stop event and generation token: reusing the
+        # previous event would let a detached-but-wedged zombie observe
+        # the `clear()` and come back to life, and the bumped generation
+        # fences any batch the zombie eventually returns with
+        stop = threading.Event()
+        self._thread_stop = stop
         self._thread_error = None
+        self._recv_gen += 1
+        gen = self._recv_gen
 
         def _run() -> None:
             import time as _time
 
             try:
-                while not self._thread_stop.is_set():
+                while not stop.is_set():
+                    if gen != self._recv_gen:
+                        return  # fenced before we even touch the device
                     if real_time_factor > 0:
                         self.device.advance(tick_s * real_time_factor)
-                    self.poll()
+                    if "poll" in self.__dict__:
+                        # instance-patched poll (wrappers, fault tests):
+                        # honour it — fencing only guards the stock path
+                        self.poll()
+                    elif self._poll_locked(gen) < 0:
+                        return  # a newer receiver owns the stream now
                     _time.sleep(tick_s if real_time_factor > 0 else 0.001)
             except BaseException as exc:  # receiver died mid-poll: surface it
-                self._thread_error = exc
+                if gen == self._recv_gen:
+                    self._thread_error = exc
 
         self._thread = threading.Thread(target=_run, daemon=True)
         self._thread.start()
@@ -596,12 +674,19 @@ class PowerSensor:
         hanging the caller forever.  A receiver that died mid-poll has its
         exception returned (and kept on `thread_error`) rather than being
         silently discarded with the thread handle.
+
+        A detached receiver is also *fenced*: the generation token is
+        bumped — deliberately without taking ``self._lock``, which the
+        wedged thread may hold inside ``device.read()`` — so whatever
+        batch it eventually returns with is dropped, not interleaved
+        with a subsequently restarted receiver's stream.
         """
         if self._thread is None:
             return self._thread_error
         self._thread_stop.set()
         self._thread.join(timeout_s)
         if self._thread.is_alive():
+            self._recv_gen += 1
             self._thread_error = TimeoutError(
                 f"receiver thread did not join within {timeout_s} s"
             )

@@ -1,0 +1,102 @@
+"""Measurement-campaign launcher: run a declarative plan against a fleet.
+
+Executes a :class:`repro.net.MeasurementPlan` — remote receivers and/or
+local virtual rigs served through the loopback `DeviceServer` — with the
+plan's safety interlocks armed (``vmax``, ``max_hours``,
+``abort_on_anomaly``).
+
+Usage:
+    python -m repro.launch.campaign --demo                 # built-in plan
+    python -m repro.launch.campaign --plan plan.json
+    python -m repro.launch.campaign --plan plan.json --dry-run
+    python -m repro.launch.campaign --demo --json out.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.net import Interlocks, MeasurementPlan, PlanDevice, run_plan
+
+
+def demo_plan(duration_s: float = 0.5) -> MeasurementPlan:
+    """A self-contained two-rig virtual campaign (no hardware needed)."""
+    return MeasurementPlan(
+        name="demo",
+        devices=(
+            PlanDevice(name="rig0", load="constant", volts=12.0, amps=3.0),
+            PlanDevice(name="rig1", load="square", volts=12.0, amps=6.0),
+        ),
+        duration_s=duration_s,
+        window_s=0.1,
+        tick_s=0.02,
+        interlocks=Interlocks(vmax_v=13.0, max_hours=0.01),
+    )
+
+
+def describe(plan: MeasurementPlan) -> str:
+    lines = [f"plan {plan.name!r}: {plan.duration_s:.3g} s, "
+             f"window {plan.window_s:.3g} s, tick {plan.tick_s:.3g} s"]
+    for d in plan.devices:
+        where = d.endpoint or f"virtual {d.load} {d.volts:g} V / {d.amps:g} A"
+        lines.append(f"  {d.name}: {where} ({d.module})")
+    il = plan.interlocks
+    lines.append(
+        f"  interlocks: vmax={il.vmax_v} max_hours={il.max_hours} "
+        f"abort_on_anomaly={il.abort_on_anomaly}"
+    )
+    if plan.scenario:
+        lines.append(f"  fault scenario: {plan.scenario}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    src = ap.add_mutually_exclusive_group(required=True)
+    src.add_argument("--plan", help="path to a MeasurementPlan JSON file")
+    src.add_argument("--demo", action="store_true",
+                     help="run the built-in two-rig virtual demo plan")
+    ap.add_argument("--duration", type=float, default=None,
+                    help="override the plan's duration_s")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="validate and describe the plan, then exit")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the PlanResult as JSON")
+    args = ap.parse_args(argv)
+
+    if args.demo:
+        plan = demo_plan()
+    else:
+        with open(args.plan) as fh:
+            plan = MeasurementPlan.from_json(fh.read())
+    if args.duration is not None:
+        plan = MeasurementPlan.from_dict(
+            {**plan.to_dict(), "duration_s": args.duration}
+        )
+
+    print(describe(plan))
+    if args.dry_run:
+        return 0
+
+    result = run_plan(plan)
+    status = "ABORTED" if result.aborted else "completed"
+    print(
+        f"{status}: {result.elapsed_s:.3f} s, {result.n_readings} readings, "
+        f"mean {result.mean_power_w:.2f} W, peak {result.peak_power_w:.2f} W"
+    )
+    if result.reason:
+        print(f"  reason: {result.reason}")
+    for name, st in sorted(result.health.items()):
+        ls = result.link_stats.get(name, {})
+        print(f"  {name}: {st}, {ls.get('frames', 0)} frames, "
+              f"{ls.get('reconnects', 0)} reconnects")
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(result.to_dict(), fh, indent=2)
+        print(f"wrote {args.json}")
+    return 1 if result.aborted else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,32 @@
+"""`repro.net` — the networked fleet control plane.
+
+Moves the device link out of process memory: a :class:`DeviceServer`
+serves any in-process `VirtualDevice` (live firmware, `ReplayDevice`,
+`FaultyTransport`-wrapped, ...) over a framed TCP / Unix socket, and a
+:class:`SocketDevice` client exposes the exact `VirtualDevice` transport
+surface on the other end — so `PowerSensor`, `FaultyTransport` and
+`SessionRecorder` work over the wire unmodified.  :class:`FleetHead`
+aggregates N remote links into one `FleetMonitor` view with per-link
+health, bounded buffers with backpressure accounting, and automatic
+reconnect; :func:`run_plan` executes declarative measurement campaigns
+with safety interlocks on top.
+"""
+from .device import SocketDevice
+from .fleet import FleetHead
+from .link import Framer, pack_frame, parse_endpoint
+from .plan import Interlocks, MeasurementPlan, PlanDevice, PlanResult, run_plan
+from .server import DeviceServer
+
+__all__ = [
+    "DeviceServer",
+    "FleetHead",
+    "Framer",
+    "Interlocks",
+    "MeasurementPlan",
+    "PlanDevice",
+    "PlanResult",
+    "SocketDevice",
+    "pack_frame",
+    "parse_endpoint",
+    "run_plan",
+]

@@ -1,0 +1,304 @@
+"""SocketDevice: the `VirtualDevice` transport surface over a socket.
+
+The client end of a `DeviceServer` link.  It exposes exactly the surface
+the host library already consumes — ``write`` / ``read`` / ``t_s`` /
+``pending_bytes`` (plus a no-op ``advance``: time flows on the server) —
+so `PowerSensor`, `FaultyTransport` and `SessionRecorder` run over the
+wire unmodified.
+
+Chunk discipline (what makes socket replay bit-identical to in-process):
+
+* every server-side ``device.read()`` result travels as one ``DATA``
+  frame and — for replayed streams — is served to the host as one
+  chunk: ``read()`` never merges bytes across replay chunk boundaries,
+  because the receiver's arrival-clock re-anchor shifts a *whole* poll
+  batch uniformly and a chunk spanning a recorded wrap gap would be
+  re-anchored wrongly.  Live (wall-clock-driven) links advertise a
+  continuous byte stream in the WELCOME, and there ``read()`` *does*
+  coalesce the queued backlog into one batch — decode cost then scales
+  with frames, not server ticks, which is what lets one head sustain
+  16 × 20 kHz links;
+* ``t_s`` is the stamp of the chunk currently being served (set when the
+  chunk is taken up, exactly when `ReplayDevice`'s cursor moves), so it
+  vouches only for delivered data;
+* ``pending_bytes`` reports the *remainder of the current chunk* only —
+  queued future chunks are invisible, mirroring the in-process devices
+  whose next chunk does not exist until the next ``read()``.
+
+Reads **block** while the connect handshake is in flight (the host reads
+version/config replies byte-by-byte and treats an empty read as a string
+terminator) and turn non-blocking — permanently — once the first
+``CMD_START_STREAM`` is written; the client tracks that by parsing the
+command grammar it forwards.  (Config blocks are downloaded exactly once,
+at connect; after that an empty read must mean "no frames yet", not
+"wait 5 s", or every post-stop drain poll would stall.)
+
+The receive queue is bounded: when full, the reader thread stops pulling
+from the socket (kernel buffers fill, the server sees backpressure) and
+the stall is counted in ``backpressure_waits`` — frames are delayed,
+never dropped.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+from collections import deque
+
+from repro.core.protocol import (
+    CMD_MARKER,
+    CMD_READ_CONFIG,
+    CMD_START_STREAM,
+    CMD_STOP_STREAM,
+    CMD_VERSION,
+    CMD_WRITE_CONFIG,
+    CONFIG_BLOCK_SIZE,
+)
+from repro.obs import metrics as obs_metrics
+
+from . import link
+
+
+class SocketDevice:
+    """Client transport: one remote device served by a `DeviceServer`."""
+
+    def __init__(
+        self,
+        endpoint: str,
+        device: str = "dev0",
+        connect_timeout_s: float = 5.0,
+        reply_timeout_s: float = 5.0,
+        max_buffered_chunks: int = 256,
+    ):
+        self.endpoint = endpoint
+        self.name = device
+        self.reply_timeout_s = float(reply_timeout_s)
+        self.max_buffered_chunks = int(max_buffered_chunks)
+        self.backpressure_waits = 0  # reader stalls on the full queue
+        self.rx_bytes = 0
+        self.streaming = False
+        self._handshake = True  # reads block until the first START_STREAM
+        self._cmd_tail = bytearray()  # command-grammar parse carry-over
+        self._chunks: deque[tuple[bytes, float]] = deque()
+        self._cur = bytearray()  # remainder of the chunk being served
+        self._t_s = 0.0
+        self._eof = False
+        self._error: BaseException | None = None
+        self._cond = threading.Condition()
+        self._stop = threading.Event()
+
+        self._sock = link.connect(endpoint, timeout_s=connect_timeout_s)
+        self._sock.sendall(link.pack_frame(link.T_HELLO, device.encode()))
+        fr = link.recv_frame(self._sock)
+        if fr is None:
+            raise link.LinkError(f"server closed during handshake for {device!r}")
+        ftype, payload = fr
+        if ftype == link.T_ERR:
+            raise link.LinkError(payload.decode(errors="replace"))
+        if ftype != link.T_WELCOME:
+            raise link.LinkError(f"expected WELCOME, got frame type {ftype}")
+        # '\x00live' suffix: the served device is wall-clock driven, so its
+        # byte stream is continuous and queued chunks may be coalesced into
+        # one poll batch (the re-anchor stamps the batch end; the in-band
+        # 10-bit timestamps place everything before it).  Replayed streams
+        # never set it — their chunk boundaries carry recorded time gaps.
+        self.coalesce = payload.endswith(b"\x00live")
+        self._sock.settimeout(0.2)  # reader loop stays interruptible
+        self._reader = threading.Thread(target=self._recv_loop, daemon=True)
+        self._reader.start()
+
+    # ------------------------------------------------------------ link reader
+    def _recv_loop(self) -> None:
+        # incremental framing (not recv_frame): a socket timeout mid-frame
+        # must keep the partial bytes buffered, or the stream desyncs
+        framer = link.Framer()
+        try:
+            while not self._stop.is_set():
+                try:
+                    data = self._sock.recv(1 << 16)
+                except socket.timeout:
+                    continue
+                if not data:
+                    if framer.pending:
+                        raise link.LinkError(
+                            f"server closed mid-frame to {self.name!r}"
+                        )
+                    raise ConnectionError(f"server closed link to {self.name!r}")
+                for ftype, payload in framer.feed(data):
+                    self._handle_frame(ftype, payload)
+        except BaseException as exc:
+            with self._cond:
+                if not self._stop.is_set():
+                    self._error = exc
+                self._cond.notify_all()
+
+    def _handle_frame(self, ftype: int, payload: bytes) -> None:
+        if ftype == link.T_DATA:
+            t_s, chunk = link.unpack_data(payload)
+            self.rx_bytes += len(chunk)
+            with self._cond:
+                # bounded buffer: stop draining the socket instead of
+                # dropping — the sender blocks, we count
+                stalled = False
+                while (
+                    len(self._chunks) >= self.max_buffered_chunks
+                    and not self._stop.is_set()
+                ):
+                    if not stalled:
+                        stalled = True
+                        self.backpressure_waits += 1
+                        reg = obs_metrics.active()
+                        if reg is not None:
+                            reg.counter(
+                                "link_backpressure_waits_total",
+                                "reader stalls on a full receive queue",
+                                device=self.name,
+                            ).inc()
+                    self._cond.wait(0.05)
+                self._chunks.append((chunk, t_s))
+                self._cond.notify_all()
+        elif ftype in (link.T_EOF, link.T_BYE):
+            with self._cond:
+                self._eof = True
+                self._cond.notify_all()
+        elif ftype == link.T_ERR:
+            raise ConnectionError(payload.decode(errors="replace"))
+
+    # ------------------------------------------------------------ host surface
+    def write(self, data: bytes) -> None:
+        """Forward host command bytes; track the streaming state locally."""
+        self._track_commands(data)
+        if self._error is not None:
+            raise self._error
+        try:
+            self._sock.sendall(link.pack_frame(link.T_CMD, data))
+        except OSError as exc:
+            self._error = exc
+            raise
+
+    def _track_commands(self, data: bytes) -> None:
+        """Parse the forwarded command grammar just enough to know whether
+        the host is mid-handshake (replies expected: reads must block) or
+        streaming (reads must be non-blocking)."""
+        buf = self._cmd_tail
+        buf.extend(data)
+        while buf:
+            cmd = bytes(buf[:1])
+            if cmd == CMD_START_STREAM:
+                self.streaming = True
+                self._handshake = False
+                del buf[:1]
+            elif cmd == CMD_STOP_STREAM:
+                self.streaming = False
+                del buf[:1]
+            elif cmd in (CMD_VERSION,):
+                del buf[:1]
+            elif cmd in (CMD_READ_CONFIG, CMD_MARKER):
+                if len(buf) < 2:
+                    return
+                del buf[:2]
+            elif cmd == CMD_WRITE_CONFIG:
+                if len(buf) < 2 + CONFIG_BLOCK_SIZE:
+                    return
+                del buf[: 2 + CONFIG_BLOCK_SIZE]
+            else:
+                del buf[:1]
+
+    def read(self, max_bytes: int | None = None) -> bytes:
+        with self._cond:
+            if not self._cur:
+                self._take_chunk(block=self._handshake)
+            if self.coalesce and not self._handshake and self._chunks:
+                # live link: fold the whole backlog into one poll batch so
+                # decode cost scales with frames, not with server ticks
+                while self._chunks and len(self._cur) < (1 << 22):
+                    chunk, t_s = self._chunks.popleft()
+                    self._cur.extend(chunk)
+                    self._t_s = t_s
+                self._cond.notify_all()  # frees a backpressured reader
+            if not self._cur:
+                # drained: a dead link surfaces only once delivered data
+                # has been fully consumed — bytes outrun the error
+                if self._error is not None:
+                    raise self._error
+                return b""
+            if max_bytes is None or max_bytes >= len(self._cur):
+                out = bytes(self._cur)
+                self._cur.clear()
+            else:
+                out = bytes(self._cur[:max_bytes])
+                del self._cur[:max_bytes]
+            if max_bytes is not None and len(out) < max_bytes and self._handshake:
+                # a handshake reply split across chunks: keep gathering —
+                # there are no stream frames yet, so crossing chunk
+                # boundaries cannot disturb the re-anchor contract
+                while len(out) < max_bytes:
+                    self._take_chunk(block=True)
+                    if not self._cur:
+                        break
+                    need = max_bytes - len(out)
+                    out += bytes(self._cur[:need])
+                    del self._cur[:need]
+            return out
+
+    def _take_chunk(self, block: bool) -> None:
+        """Pop the next queued chunk into the serving slot (cond held)."""
+        if not self._chunks and block:
+            deadline = self.reply_timeout_s
+            while (
+                not self._chunks
+                and self._error is None
+                and not self._eof
+                and deadline > 0
+            ):
+                self._cond.wait(0.05)
+                deadline -= 0.05
+        if self._chunks:
+            chunk, t_s = self._chunks.popleft()
+            self._cur.extend(chunk)
+            self._t_s = t_s
+            self._cond.notify_all()  # frees a backpressured reader
+
+    def advance(self, dt_s: float) -> None:
+        """No-op: a remote device's time flows on the server."""
+
+    @property
+    def t_s(self) -> float:
+        """Device clock of the chunk being served (vouches for it only)."""
+        return self._t_s
+
+    @property
+    def pending_bytes(self) -> int:
+        """Unconsumed remainder of the *current* chunk (queued future
+        chunks are invisible, mirroring the in-process transports)."""
+        return len(self._cur)
+
+    @property
+    def buffered_chunks(self) -> int:
+        """Chunks queued behind the current one (link-stats visibility)."""
+        return len(self._chunks)
+
+    @property
+    def exhausted(self) -> bool:
+        """The server signalled EOF and every delivered byte was consumed."""
+        with self._cond:
+            return self._eof and not self._chunks and not self._cur
+
+    @property
+    def error(self) -> BaseException | None:
+        return self._error
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            self._sock.sendall(link.pack_frame(link.T_BYE))
+        except OSError:
+            pass
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self._sock.close()
+        with self._cond:
+            self._cond.notify_all()
+        if self._reader.is_alive():
+            self._reader.join(2.0)

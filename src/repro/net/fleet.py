@@ -1,0 +1,184 @@
+"""FleetHead: N remote device links aggregated into one fleet view.
+
+Builds a `SocketDevice` + unmodified `PowerSensor` per endpoint and owns
+a `FleetMonitor` over them, so every fleet query — quorum power, health,
+marker intervals, snapshots — works over the wire exactly as it does in
+process.  On top of the monitor it adds the parts only a *networked*
+fleet needs:
+
+* **per-link health**: the monitor's healthy / stale / lost states apply
+  unchanged; a link whose socket dies raises out of ``poll()`` and maps
+  to ``lost`` via the monitor's ``_safe_poll`` contract (the error stays
+  visible in ``poll_errors`` until the link reacquires);
+* **reconnect with backoff**: ``poll()`` notices lost links and redials
+  them (exponential backoff between attempts).  On reacquire the sensor's
+  partial-frame residual is detached — bytes in flight at the disconnect
+  are gone for good, and stitching a stale half-frame onto the new byte
+  stream would desynchronise the decoder — and the stream restarts; the
+  arrival-clock re-anchor then places the first new batch correctly from
+  the link's fresh chunk stamps;
+* **bounded buffers**: every link's receive queue is capped
+  (``max_buffered_chunks``); a slow head stalls the link reader (counted
+  in each device's ``backpressure_waits``) instead of dropping frames;
+* **link stats**: one dict per link — endpoint, health, reconnects,
+  backpressure, buffered chunks, received bytes — for dashboards and the
+  `benchmarks/fleet_link.py` gate.
+"""
+from __future__ import annotations
+
+import time
+from typing import Mapping
+
+from repro.stream.fleet import FleetMonitor
+
+from .device import SocketDevice
+from .link import LinkError
+
+
+class FleetHead:
+    """Aggregate N `DeviceServer` links into one `FleetMonitor` view."""
+
+    def __init__(
+        self,
+        endpoints: Mapping[str, str],
+        window_s: float = 1.0,
+        ring_capacity: int = 1 << 16,
+        reconnect: bool = True,
+        backoff_s: float = 0.05,
+        max_backoff_s: float = 2.0,
+        max_buffered_chunks: int = 256,
+        connect_timeout_s: float = 5.0,
+        **monitor_kwargs,
+    ):
+        from repro.core.host import PowerSensor  # lazy: mirrors stream.fleet
+
+        self.endpoints = dict(endpoints)
+        self.reconnect = bool(reconnect)
+        self.backoff_s = float(backoff_s)
+        self.max_backoff_s = float(max_backoff_s)
+        self.max_buffered_chunks = int(max_buffered_chunks)
+        self.connect_timeout_s = float(connect_timeout_s)
+        self._ring_capacity = int(ring_capacity)
+        self.reconnects: dict[str, int] = {name: 0 for name in self.endpoints}
+        self._backoff: dict[str, float] = {}
+        self._next_retry: dict[str, float] = {}
+        self.monitor = FleetMonitor(window_s=window_s, **monitor_kwargs)
+        self._PowerSensor = PowerSensor
+        for name in self.endpoints:
+            dev = self._dial(name)
+            self.monitor.add(
+                name, PowerSensor(dev, ring_capacity=self._ring_capacity)
+            )
+
+    def _dial(self, name: str) -> SocketDevice:
+        return SocketDevice(
+            self.endpoints[name],
+            device=name,
+            connect_timeout_s=self.connect_timeout_s,
+            max_buffered_chunks=self.max_buffered_chunks,
+        )
+
+    # ------------------------------------------------------------ polling
+    def poll(self) -> int:
+        """Drain every link, then service any lost ones (reconnect path)."""
+        n = self.monitor.poll_all()
+        self._maintain()
+        return n
+
+    def run_for(self, seconds: float, tick_s: float = 0.001) -> int:
+        """Wall-clock receive loop: poll all links every ``tick_s``."""
+        total = 0
+        deadline = time.monotonic() + float(seconds)
+        while time.monotonic() < deadline:
+            total += self.poll()
+            time.sleep(tick_s)
+        return total
+
+    def _maintain(self) -> None:
+        """Redial lost links, with exponential backoff per link."""
+        if not self.reconnect:
+            return
+        errors = self.monitor.poll_errors
+        if not errors:
+            return
+        now = time.monotonic()
+        for name in errors:
+            if name not in self.endpoints:
+                continue
+            if now < self._next_retry.get(name, 0.0):
+                continue
+            try:
+                dev = self._dial(name)
+            except (OSError, LinkError):
+                backoff = self._backoff.get(name, self.backoff_s)
+                self._next_retry[name] = now + backoff
+                self._backoff[name] = min(backoff * 2.0, self.max_backoff_s)
+                continue
+            ps = self.monitor[name]
+            old = ps.device
+            try:
+                old.close()
+            except OSError:
+                pass
+            # bytes in flight at the disconnect are unrecoverable; a stale
+            # partial frame stitched onto the fresh stream would shift the
+            # decoder's packet alignment for the rest of the session
+            ps.detach_residual()
+            ps.device = dev
+            ps.start_streaming()
+            self.reconnects[name] += 1
+            self._backoff.pop(name, None)
+            self._next_retry.pop(name, None)
+
+    # ------------------------------------------------------------ queries
+    def device_health(self):
+        return self.monitor.device_health()
+
+    def fleet_power(self, window_s: float | None = None, poll: bool = True):
+        reading = self.monitor.fleet_power(window_s, poll=poll)
+        if poll:
+            self._maintain()
+        return reading
+
+    def link_stats(self) -> dict[str, dict]:
+        """Per-link transport counters + health, keyed by device name."""
+        health = self.monitor.device_health()
+        out: dict[str, dict] = {}
+        for name in self.endpoints:
+            ps = self.monitor[name]
+            dev = ps.device
+            out[name] = {
+                "endpoint": self.endpoints[name],
+                "state": health[name].state,
+                "reconnects": self.reconnects[name],
+                "backpressure_waits": int(
+                    getattr(dev, "backpressure_waits", 0)
+                ),
+                "buffered_chunks": int(getattr(dev, "buffered_chunks", 0)),
+                "rx_bytes": int(getattr(dev, "rx_bytes", 0)),
+                "dropped_bytes": int(ps.dropped_bytes),
+                "dropped_frames": int(ps.dropped_frames),
+                "frames": len(ps.ring),
+            }
+        return out
+
+    def __getitem__(self, name: str):
+        return self.monitor[name]
+
+    def __len__(self) -> int:
+        return len(self.monitor)
+
+    def close(self) -> None:
+        for name in self.endpoints:
+            ps = self.monitor[name]
+            try:
+                ps.stop_thread()
+            except Exception:
+                pass
+            dev = ps.device
+            close = getattr(dev, "close", None)
+            if close is not None:
+                try:
+                    close()
+                except OSError:
+                    pass

@@ -1,0 +1,143 @@
+"""Wire framing for the device link: typed length-prefixed frames.
+
+The socket carries the *existing* device-link byte protocol — the 2-byte
+sensor packets of `repro.core.protocol` — untouched inside ``DATA``
+frames, plus a thin control vocabulary around it.  Each frame is
+
+    ``<u8 type> <u32le payload_len> <payload>``
+
+and a ``DATA`` payload is ``<f64le device_t_s> <raw stream bytes>``: the
+server stamps every chunk with the serving device's clock *after* the
+chunk was produced, so the client can mirror the in-process transport
+contract exactly — ``t_s`` vouches only for delivered bytes, and chunk
+boundaries (which the receiver's arrival-clock re-anchor keys on) survive
+the wire bit-for-bit.
+
+:class:`Framer` is the incremental parser both ends share: feed it
+arbitrary byte dribbles (partial sends, coalesced sends) and complete
+frames fall out in order.
+"""
+from __future__ import annotations
+
+import socket
+import struct
+
+HDR = struct.Struct("<BI")
+T_S = struct.Struct("<d")
+
+#: frame types
+T_HELLO = 1  #: client → server: payload = requested device name (utf-8)
+T_WELCOME = 2  #: server → client: name being served (+ b"\0live" if driven)
+T_CMD = 3  #: client → server: raw host→device command bytes
+T_DATA = 4  #: server → client: f64le device t_s + raw stream bytes
+T_EOF = 5  #: server → client: a replayed device is exhausted
+T_BYE = 6  #: either side: orderly shutdown of the link
+T_ERR = 7  #: server → client: utf-8 error message, link closes after
+
+#: a frame bigger than this is a protocol violation, not a big read
+MAX_PAYLOAD = 1 << 24
+
+
+class LinkError(ConnectionError):
+    """The peer violated the link framing or refused the handshake."""
+
+
+def pack_frame(ftype: int, payload: bytes = b"") -> bytes:
+    return HDR.pack(ftype, len(payload)) + payload
+
+
+def pack_data(t_s: float, chunk: bytes) -> bytes:
+    """One stream chunk stamped with the device clock that vouches for it."""
+    return pack_frame(T_DATA, T_S.pack(t_s) + chunk)
+
+
+def unpack_data(payload: bytes) -> tuple[float, bytes]:
+    if len(payload) < T_S.size:
+        raise LinkError(f"DATA frame too short: {len(payload)} bytes")
+    return T_S.unpack_from(payload)[0], payload[T_S.size :]
+
+
+class Framer:
+    """Incremental frame parser: bytes in (any split), frames out."""
+
+    def __init__(self):
+        self._buf = bytearray()
+
+    def feed(self, data: bytes) -> list[tuple[int, bytes]]:
+        """Append raw bytes; return every frame completed by them."""
+        self._buf.extend(data)
+        out: list[tuple[int, bytes]] = []
+        while len(self._buf) >= HDR.size:
+            ftype, n = HDR.unpack_from(self._buf)
+            if n > MAX_PAYLOAD:
+                raise LinkError(f"frame payload {n} exceeds {MAX_PAYLOAD}")
+            if len(self._buf) < HDR.size + n:
+                break
+            payload = bytes(self._buf[HDR.size : HDR.size + n])
+            del self._buf[: HDR.size + n]
+            out.append((ftype, payload))
+        return out
+
+    @property
+    def pending(self) -> int:
+        """Bytes buffered awaiting the rest of a frame."""
+        return len(self._buf)
+
+
+def recv_exact(sock: socket.socket, n: int) -> bytes | None:
+    """Read exactly ``n`` bytes, riding out partial recvs; None on EOF."""
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            return None if not buf else _eof_mid_frame(len(buf), n)
+        buf.extend(chunk)
+    return bytes(buf)
+
+
+def _eof_mid_frame(got: int, want: int) -> bytes:
+    raise LinkError(f"peer closed mid-frame ({got}/{want} bytes)")
+
+
+def recv_frame(sock: socket.socket) -> tuple[int, bytes] | None:
+    """Blocking read of one whole frame; None on orderly EOF."""
+    hdr = recv_exact(sock, HDR.size)
+    if hdr is None:
+        return None
+    ftype, n = HDR.unpack(hdr)
+    if n > MAX_PAYLOAD:
+        raise LinkError(f"frame payload {n} exceeds {MAX_PAYLOAD}")
+    payload = recv_exact(sock, n) if n else b""
+    if payload is None:
+        raise LinkError("peer closed between header and payload")
+    return ftype, payload
+
+
+# --------------------------------------------------------------- endpoints
+def parse_endpoint(endpoint: str) -> tuple[str, tuple]:
+    """``tcp:host:port`` or ``unix:/path`` → (family, connect address)."""
+    if endpoint.startswith("unix:"):
+        return "unix", (endpoint[len("unix:") :],)
+    if endpoint.startswith("tcp:"):
+        host, _, port = endpoint[len("tcp:") :].rpartition(":")
+        if not host or not port:
+            raise ValueError(f"malformed tcp endpoint {endpoint!r}")
+        return "tcp", (host, int(port))
+    raise ValueError(f"endpoint must be tcp:host:port or unix:/path, got {endpoint!r}")
+
+
+def connect(endpoint: str, timeout_s: float = 5.0) -> socket.socket:
+    """Open a client socket to a `DeviceServer` endpoint."""
+    kind, addr = parse_endpoint(endpoint)
+    if kind == "unix":
+        sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    else:
+        sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    sock.settimeout(timeout_s)
+    try:
+        sock.connect(addr if kind == "tcp" else addr[0])
+    except OSError:
+        sock.close()
+        raise
+    return sock

@@ -1,0 +1,276 @@
+"""Declarative measurement plans with safety interlocks.
+
+A :class:`MeasurementPlan` is a JSON-serialisable description of one
+measurement campaign — which devices (remote endpoints and/or local
+virtual rigs), for how long, at what aggregation window, under which
+fault scenario — plus :class:`Interlocks`, the hard safety envelope:
+
+``vmax_v``
+    any device reporting an instantaneous rail voltage above this trips
+    an immediate abort (an over-voltage rail is a hardware event, not a
+    data-quality question);
+``max_hours``
+    a wall-clock ceiling on the whole campaign, applied regardless of
+    the plan's nominal duration (runaway campaigns stop themselves);
+``abort_on_anomaly``
+    wires the fleet to `repro.obs.SignatureWatchdog`: the first
+    anomalous power segment (unknown signature, or a known kernel
+    running at deviant power) aborts the run.  Requires a signature
+    library — refusing to run is better than pretending to watch.
+
+:func:`run_plan` executes a plan against a `FleetHead`: remote devices
+dial their endpoints; virtual devices are served through an in-process
+loopback `DeviceServer` (``drive=True``), so a campaign exercises the
+*identical* socket path whether the rig is across the lab or in-process.
+A plan's ``scenario`` names a `repro.faultlab` shipped scenario injected
+on top of the (socket) transports — chaos campaigns over the wire.
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import asdict, dataclass, field
+
+from .fleet import FleetHead
+from .server import DeviceServer
+
+
+@dataclass(frozen=True)
+class Interlocks:
+    """The safety envelope a running campaign must stay inside."""
+
+    vmax_v: float | None = None
+    max_hours: float | None = None
+    abort_on_anomaly: bool = False
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Interlocks":
+        return cls(
+            vmax_v=d.get("vmax_v"),
+            max_hours=d.get("max_hours"),
+            abort_on_anomaly=bool(d.get("abort_on_anomaly", False)),
+        )
+
+
+@dataclass(frozen=True)
+class PlanDevice:
+    """One fleet member: a remote endpoint, or a local virtual rig."""
+
+    name: str
+    endpoint: str | None = None  # remote receiver; None → virtual rig
+    module: str = "pcie8pin-20a"
+    load: str = "constant"  # 'constant' | 'square' (virtual rigs only)
+    volts: float = 12.0
+    amps: float = 3.0
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PlanDevice":
+        return cls(
+            name=d["name"],
+            endpoint=d.get("endpoint"),
+            module=d.get("module", "pcie8pin-20a"),
+            load=d.get("load", "constant"),
+            volts=float(d.get("volts", 12.0)),
+            amps=float(d.get("amps", 3.0)),
+        )
+
+    def make_load(self):
+        from repro.core import ConstantLoad, SquareWaveLoad
+
+        if self.load == "constant":
+            return ConstantLoad(self.volts, self.amps)
+        if self.load == "square":
+            return SquareWaveLoad(
+                volts=self.volts, amps_lo=0.3 * self.amps, amps_hi=self.amps
+            )
+        raise ValueError(f"unknown virtual load kind {self.load!r}")
+
+
+@dataclass(frozen=True)
+class MeasurementPlan:
+    """A declarative, JSON-round-trippable measurement campaign."""
+
+    name: str
+    devices: tuple[PlanDevice, ...]
+    duration_s: float = 1.0
+    window_s: float = 0.25
+    tick_s: float = 0.01
+    interlocks: Interlocks = field(default_factory=Interlocks)
+    scenario: str | None = None  # a repro.faultlab shipped scenario name
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "MeasurementPlan":
+        return cls(
+            name=d["name"],
+            devices=tuple(PlanDevice.from_dict(x) for x in d.get("devices", ())),
+            duration_s=float(d.get("duration_s", 1.0)),
+            window_s=float(d.get("window_s", 0.25)),
+            tick_s=float(d.get("tick_s", 0.01)),
+            interlocks=Interlocks.from_dict(d.get("interlocks", {})),
+            scenario=d.get("scenario"),
+        )
+
+    @classmethod
+    def from_json(cls, text: str) -> "MeasurementPlan":
+        return cls.from_dict(json.loads(text))
+
+
+@dataclass
+class PlanResult:
+    """What one campaign run produced, and whether it finished."""
+
+    plan: str
+    completed: bool
+    aborted: bool
+    reason: str | None
+    elapsed_s: float
+    n_readings: int
+    mean_power_w: float
+    peak_power_w: float
+    n_anomalies: int
+    health: dict[str, str]
+    link_stats: dict[str, dict]
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+def run_plan(
+    plan: MeasurementPlan,
+    watchdog_library=None,
+    real_time_factor: float = 1.0,
+    on_reading=None,
+) -> PlanResult:
+    """Execute a plan: dial/serve the fleet, measure, enforce interlocks.
+
+    ``watchdog_library`` (a `repro.attrib.SignatureLibrary`) is required
+    when the plan sets ``abort_on_anomaly`` — the watchdog cannot judge
+    power segments against nothing, and a silently-disarmed interlock is
+    worse than an error.  ``on_reading(elapsed_s, reading)`` is called
+    once per tick with the live `FleetPowerReading`.
+    """
+    locks = plan.interlocks
+    if locks.abort_on_anomaly and watchdog_library is None:
+        raise ValueError(
+            "plan sets abort_on_anomaly but no signature library was given"
+        )
+    if not plan.devices:
+        raise ValueError(f"plan {plan.name!r} has no devices")
+
+    from repro.core import PowerSensor, make_device  # noqa: F401  (loads below)
+
+    # virtual rigs are served through an in-process loopback server so the
+    # campaign runs the identical socket path as a remote fleet
+    server: DeviceServer | None = None
+    virtual = [d for d in plan.devices if d.endpoint is None]
+    endpoints: dict[str, str] = {}
+    if virtual:
+        devices = {
+            d.name: make_device([d.module], d.make_load(), seed=i * 1009)
+            for i, d in enumerate(virtual)
+        }
+        server = DeviceServer(
+            devices, drive=True, real_time_factor=real_time_factor
+        )
+        for d in virtual:
+            endpoints[d.name] = server.endpoint
+    for d in plan.devices:
+        if d.endpoint is not None:
+            endpoints[d.name] = d.endpoint
+
+    head = FleetHead(endpoints, window_s=plan.window_s)
+    watchdog = None
+    if locks.abort_on_anomaly:
+        from repro.obs.watch import SignatureWatchdog
+
+        watchdog = SignatureWatchdog(head.monitor, watchdog_library)
+    if plan.scenario is not None:
+        from repro.faultlab import inject, shipped_scenarios
+
+        scenarios = shipped_scenarios(plan.duration_s)
+        if plan.scenario not in scenarios:
+            head.close()
+            if server is not None:
+                server.close()
+            raise ValueError(
+                f"unknown scenario {plan.scenario!r}; "
+                f"shipped: {sorted(scenarios)}"
+            )
+        inject(head.monitor, scenarios[plan.scenario])
+
+    aborted = False
+    reason: str | None = None
+    powers: list[float] = []
+    n_anomalies = 0
+    t0 = time.monotonic()
+    last = t0
+    try:
+        while True:
+            time.sleep(plan.tick_s)
+            now = time.monotonic()
+            dt, last = now - last, now
+            elapsed = now - t0
+            # drive fault windows (and any wall-clock transport shims);
+            # a plain SocketDevice ignores this — time flows on the server
+            for name in endpoints:
+                head[name].device.advance(dt)
+            head.poll()
+            reading = head.fleet_power(plan.window_s, poll=False)
+            if not reading.stale:
+                powers.append(reading.power_w)
+            if on_reading is not None:
+                on_reading(elapsed, reading)
+            # ---- interlocks ----
+            if locks.vmax_v is not None:
+                for name in endpoints:
+                    volts = head[name].read().instant_volts
+                    worst = max(volts) if volts else 0.0
+                    if worst > locks.vmax_v:
+                        aborted = True
+                        reason = (
+                            f"vmax interlock: {name} at {worst:.3f} V "
+                            f"> {locks.vmax_v:.3f} V"
+                        )
+                        break
+            if not aborted and locks.max_hours is not None:
+                if elapsed > locks.max_hours * 3600.0:
+                    aborted = True
+                    reason = f"max_hours interlock: ran {elapsed:.1f} s"
+            if not aborted and watchdog is not None:
+                fresh = watchdog.check()
+                n_anomalies += len(fresh)
+                if fresh:
+                    a = fresh[0]
+                    aborted = True
+                    reason = (
+                        f"anomaly interlock: {a.kind} on {a.device} "
+                        f"at {a.t0_s:.4f}s ({a.mean_w:.2f} W)"
+                    )
+            if aborted or elapsed >= plan.duration_s:
+                break
+        elapsed = time.monotonic() - t0
+        health = {n: h.state for n, h in head.device_health().items()}
+        links = head.link_stats()
+    finally:
+        head.close()
+        if server is not None:
+            server.close()
+    return PlanResult(
+        plan=plan.name,
+        completed=not aborted,
+        aborted=aborted,
+        reason=reason,
+        elapsed_s=elapsed,
+        n_readings=len(powers),
+        mean_power_w=sum(powers) / len(powers) if powers else 0.0,
+        peak_power_w=max(powers) if powers else 0.0,
+        n_anomalies=n_anomalies,
+        health=health,
+        link_stats=links,
+    )

@@ -1,0 +1,313 @@
+"""DeviceServer: serve in-process `VirtualDevice`s over sockets.
+
+One server owns a registry of named devices — live firmware devices,
+`ReplayDevice`s, `FaultyTransport`-wrapped stacks, anything with the
+``write`` / ``read`` / ``t_s`` transport surface — and serves each to at
+most one connection at a time.  The connection loop
+
+* forwards every ``CMD`` frame payload to ``device.write`` (the raw
+  host→device command bytes, untouched);
+* pumps ``device.read()`` results to the client as one ``DATA`` frame
+  per chunk, stamped with the device clock *after* the chunk was
+  produced — chunk boundaries are load-bearing (the receiver's
+  arrival-clock re-anchor fires at them) and survive the wire exactly;
+* optionally *drives* wall-clock devices: with ``drive=True`` a server
+  clock thread advances **every** device by the elapsed wall time
+  (scaled by ``real_time_factor``) whether or not a client is attached
+  — a real sensor's clock does not stop when the host disconnects.
+  Bytes a device emits while unserved are discarded, exactly like UART
+  output nobody is reading, so a reconnecting client resumes at the
+  *current* device clock instead of a stale one;
+* applies slow-consumer backpressure: the outgoing queue is bounded by
+  ``max_out_bytes`` and the pump *pauses reading the device* while it is
+  full (counted per connection in ``backpressure_events``), so a slow
+  client delays frames instead of dropping them;
+* announces ``EOF`` once a replayed device reports ``exhausted``.
+
+``drop(name)`` severs a device's active connection — the handle chaos
+tests and benchmarks use to exercise the client's `lost` → reacquire
+path.
+"""
+from __future__ import annotations
+
+import os
+import select
+import socket
+import tempfile
+import threading
+import time
+from typing import Mapping
+
+from . import link
+
+
+class _Conn:
+    """One client connection being served (internal bookkeeping)."""
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self.name: str | None = None
+        self.backpressure_events = 0
+        self.tx_bytes = 0
+        self.dropped = False  # severed via DeviceServer.drop()
+
+
+class DeviceServer:
+    """Serve a registry of named in-process devices over one socket."""
+
+    def __init__(
+        self,
+        devices: Mapping[str, object],
+        endpoint: str = "tcp:127.0.0.1:0",
+        tick_s: float = 0.001,
+        drive: bool = False,
+        real_time_factor: float = 1.0,
+        max_out_bytes: int = 1 << 20,
+    ):
+        self.devices = dict(devices)
+        self.tick_s = float(tick_s)
+        self.drive = bool(drive)
+        self.real_time_factor = float(real_time_factor)
+        self.max_out_bytes = int(max_out_bytes)
+        self._lock = threading.Lock()
+        # one lock per device: the clock thread and the serving connection
+        # both touch it (advance vs read/write)
+        self._dev_locks = {name: threading.Lock() for name in self.devices}
+        self._busy: dict[str, _Conn] = {}
+        self._conns: list[_Conn] = []
+        self._threads: list[threading.Thread] = []
+        self._stop = threading.Event()
+        self._unix_path: str | None = None
+
+        kind, addr = link.parse_endpoint(endpoint)
+        if kind == "unix":
+            path = addr[0]
+            if path == "auto":
+                fd, path = tempfile.mkstemp(prefix="repro-net-", suffix=".sock")
+                os.close(fd)
+                os.unlink(path)
+            self._unix_path = path
+            self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            self._sock.bind(path)
+            self.endpoint = f"unix:{path}"
+        else:
+            self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+            self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+            self._sock.bind(addr)
+            host, port = self._sock.getsockname()[:2]
+            self.endpoint = f"tcp:{host}:{port}"
+        self._sock.listen(16)
+        self._sock.settimeout(0.2)
+        self._acceptor = threading.Thread(target=self._accept_loop, daemon=True)
+        self._acceptor.start()
+        self._driver = threading.Thread(target=self._drive_loop, daemon=True)
+        self._driver.start()
+
+    # ------------------------------------------------------------ clock
+    def _drive_loop(self) -> None:
+        """Advance every device by wall time while ``drive`` is set.
+
+        Time flows here, not in the connection loops: a device keeps its
+        clock (and keeps emitting, if streaming) across disconnects.
+        Output produced while no connection is serving the device is
+        read and discarded — unread UART bytes do not accumulate.
+        """
+        last_wall = time.monotonic()
+        while not self._stop.is_set():
+            time.sleep(self.tick_s)
+            now = time.monotonic()
+            dt = (now - last_wall) * self.real_time_factor
+            last_wall = now
+            if not self.drive or dt <= 0:
+                continue
+            for name, dev in self.devices.items():
+                with self._dev_locks[name]:
+                    # busy check under the device lock: a claim that
+                    # happened-before this acquire is visible, so we
+                    # never discard a served client's reply bytes
+                    with self._lock:
+                        served = name in self._busy
+                    dev.advance(dt)
+                    if not served:
+                        while dev.read():
+                            pass
+
+    # ------------------------------------------------------------ accept
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                sock, _ = self._sock.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                return
+            if sock.family == socket.AF_INET:
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            conn = _Conn(sock)
+            with self._lock:
+                self._conns.append(conn)
+                t = threading.Thread(
+                    target=self._serve_conn, args=(conn,), daemon=True
+                )
+                self._threads.append(t)
+            t.start()
+
+    # ------------------------------------------------------------ one link
+    def _claim(self, conn: _Conn, name: str) -> object | None:
+        with self._lock:
+            dev = self.devices.get(name)
+            if dev is None:
+                self._send_err(conn, f"unknown device {name!r}")
+                return None
+            if name in self._busy:
+                self._send_err(conn, f"device {name!r} is busy")
+                return None
+            self._busy[name] = conn
+            conn.name = name
+            return dev
+
+    @staticmethod
+    def _send_err(conn: _Conn, msg: str) -> None:
+        try:
+            conn.sock.sendall(link.pack_frame(link.T_ERR, msg.encode()))
+        except OSError:
+            pass
+
+    def _serve_conn(self, conn: _Conn) -> None:
+        sock = conn.sock
+        framer = link.Framer()
+        out = bytearray()
+        dev = None
+        dev_lock = None
+        eof_sent = False
+        paused = False
+        try:
+            sock.setblocking(False)
+            while not self._stop.is_set() and not conn.dropped:
+                try:
+                    r, w, _ = select.select(
+                        [sock], [sock] if out else [], [], self.tick_s
+                    )
+                except (OSError, ValueError):
+                    return
+                if r:
+                    try:
+                        data = sock.recv(1 << 16)
+                    except (BlockingIOError, InterruptedError):
+                        data = None
+                    except OSError:
+                        return
+                    else:
+                        if not data:
+                            return  # peer closed
+                    for ftype, payload in framer.feed(data or b""):
+                        if ftype == link.T_HELLO:
+                            dev = self._claim(conn, payload.decode())
+                            if dev is None:
+                                return
+                            dev_lock = self._dev_locks[conn.name]
+                            # a driven (live) device's byte stream is
+                            # continuous, so the client may coalesce
+                            # chunks; replayed chunk boundaries are
+                            # semantic (recorded gaps) and must survive
+                            welcome = payload + (
+                                b"\x00live" if self.drive else b""
+                            )
+                            out += link.pack_frame(link.T_WELCOME, welcome)
+                        elif ftype == link.T_CMD and dev is not None:
+                            with dev_lock:
+                                dev.write(payload)
+                        elif ftype == link.T_BYE:
+                            return
+                if dev is None:
+                    continue
+                # pump chunks — pausing, not dropping, when the client
+                # (or the wire) cannot keep up
+                if len(out) >= self.max_out_bytes:
+                    if not paused:
+                        paused = True
+                        conn.backpressure_events += 1
+                else:
+                    paused = False
+                    with dev_lock:
+                        while len(out) < self.max_out_bytes:
+                            chunk = dev.read()
+                            if not chunk:
+                                break
+                            out += link.pack_data(
+                                float(getattr(dev, "t_s", 0.0)), chunk
+                            )
+                        if not eof_sent and getattr(dev, "exhausted", False):
+                            out += link.pack_frame(link.T_EOF)
+                            eof_sent = True
+                if out:
+                    try:
+                        n = sock.send(memoryview(out)[: 1 << 18])
+                    except (BlockingIOError, InterruptedError):
+                        n = 0
+                    except OSError:
+                        return
+                    if n:
+                        conn.tx_bytes += n
+                        del out[:n]
+        finally:
+            with self._lock:
+                if conn.name is not None and self._busy.get(conn.name) is conn:
+                    del self._busy[conn.name]
+                if conn in self._conns:
+                    self._conns.remove(conn)
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    # ------------------------------------------------------------ control
+    def drop(self, name: str) -> bool:
+        """Sever the active connection serving ``name`` (chaos handle)."""
+        with self._lock:
+            conn = self._busy.get(name)
+        if conn is None:
+            return False
+        conn.dropped = True
+        try:
+            conn.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        return True
+
+    def stats(self) -> dict[str, dict]:
+        """Per-active-link counters, keyed by device name."""
+        with self._lock:
+            return {
+                name: {
+                    "backpressure_events": conn.backpressure_events,
+                    "tx_bytes": conn.tx_bytes,
+                }
+                for name, conn in self._busy.items()
+            }
+
+    def serving(self, name: str) -> bool:
+        with self._lock:
+            return name in self._busy
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        with self._lock:
+            conns = list(self._conns)
+        for conn in conns:
+            try:
+                conn.sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+        for t in list(self._threads):
+            t.join(2.0)
+        if self._acceptor.is_alive():
+            self._acceptor.join(2.0)
+        if self._driver.is_alive():
+            self._driver.join(2.0)
+        if self._unix_path and os.path.exists(self._unix_path):
+            os.unlink(self._unix_path)

@@ -20,17 +20,29 @@ consume the same `FrameBlock`s that `interval()` reads).
 
 Degraded-telemetry semantics (the contract `repro.faultlab` tests):
 
-=========  ==============================  =================================
-state      entered when                    effect on fleet queries
-=========  ==============================  =================================
-healthy    frames younger than             contributes its windowed power
-           ``stale_after_s``
-stale      no frames for                   excluded from `fleet_power`; the
-           ``stale_after_s``               healthy sum is rescaled by the
-                                           known fleet fraction (quorum)
-lost       no frames for ``lost_after_s``  excluded, and counted against
-           *or* its receiver thread died   ``min_quorum_frac``
-=========  ==============================  =================================
+=============  ==============================  =================================
+state          entered when                    effect on fleet queries
+=============  ==============================  =================================
+healthy        frames younger than             contributes its windowed power
+               ``stale_after_s``
+stale          no frames for                   excluded from `fleet_power`; the
+               ``stale_after_s``               healthy sum is rescaled by the
+                                               known fleet fraction (quorum)
+lost           no frames for ``lost_after_s``  excluded, and counted against
+               *or* its receiver thread died   ``min_quorum_frac``
+link-lost      its transport ``read()``        mapped to ``lost`` immediately
+(lost)         raised out of a fleet poll      (the poller survives; the error
+               (socket died mid-poll)          is held until a later poll
+                                               succeeds — reacquire — and is
+                                               surfaced via `stop_threads`)
+backpressure   a bounded link buffer filled    no frame loss and no health
+               (`repro.net` receive queues,    change: the reader pauses, the
+               server send windows)            sender blocks on the socket,
+                                               and the stall is *counted*
+                                               (``backpressure_waits``), so a
+                                               slow consumer shows up in link
+                                               stats instead of as drops
+=============  ==============================  =================================
 
 When *no* device is healthy, `fleet_power` holds the last good reading
 for up to ``holdover_s`` (``holdover=True``); the reading is flagged
@@ -189,6 +201,9 @@ class FleetMonitor:
             5.0 * self.stale_after_s if holdover_s is None else float(holdover_s)
         )
         self._last_good: tuple[float, float] | None = None  # (time, power_w)
+        # transports whose read() raised out of a fleet poll: the device
+        # is reported `lost` (not crashed-silent) until a poll succeeds
+        self._poll_errors: dict[str, BaseException] = {}
         self._rr = 0  # round-robin cursor
         self._last_health: dict[str, str] = {}  # for obs transition events
         self._stale_streak = False  # edge-trigger for stale-read events
@@ -219,6 +234,38 @@ class FleetMonitor:
         return list(self._sensors)
 
     # ------------------------------------------------------------ polling
+    def _safe_poll(self, name: str, ps: "PowerSensor") -> int:
+        """Poll one device; a raising transport maps to `lost`, not a crash.
+
+        A socket that dies mid-``read()`` raises out of ``poll()``; killing
+        the whole fleet poller for one bad link would silently freeze every
+        *other* device's ring.  The error is recorded (driving the device's
+        health to ``lost``, surfaced later by `stop_threads`) and cleared
+        again by the first successful poll — the reacquire path.
+        """
+        try:
+            n = ps.poll()
+        except BaseException as exc:
+            fresh = name not in self._poll_errors
+            self._poll_errors[name] = exc
+            reg = obs_metrics.active()
+            if reg is not None:
+                reg.counter(
+                    "fleet_poll_errors_total",
+                    "transport read() failures escaping a device poll",
+                    device=name,
+                ).inc()
+            if fresh:
+                rec = obs_trace.active()
+                if rec is not None:
+                    rec.device_instant(
+                        f"link:poll-error:{type(exc).__name__}",
+                        self._now_s(), track=f"health:{name}",
+                    )
+            return 0
+        self._poll_errors.pop(name, None)
+        return n
+
     def poll(self, k: int = 1) -> int:
         """Drain the next ``k`` devices round-robin. Returns frames seen."""
         names = self.names
@@ -228,11 +275,16 @@ class FleetMonitor:
         for _ in range(min(k, len(names))):
             name = names[self._rr % len(names)]
             self._rr += 1
-            total += self._sensors[name].poll()
+            total += self._safe_poll(name, self._sensors[name])
         return total
 
     def poll_all(self) -> int:
         return self.poll(len(self._sensors))
+
+    @property
+    def poll_errors(self) -> dict[str, BaseException]:
+        """Live view of per-device transport errors (cleared on reacquire)."""
+        return dict(self._poll_errors)
 
     def start_threads(self, real_time_factor: float = 0.0, tick_s: float = 0.01) -> None:
         """One lightweight receiver thread per device (§III-C, per device)."""
@@ -247,7 +299,7 @@ class FleetMonitor:
         `window_power_w` kept serving its frozen ring forever.  The errors
         are also warned so unchecked callers still get a signal.
         """
-        errors: dict[str, BaseException] = {}
+        errors: dict[str, BaseException] = dict(self._poll_errors)
         for name, ps in self._sensors.items():
             try:
                 err = ps.stop_thread(timeout_s=timeout_s)
@@ -419,7 +471,9 @@ class FleetMonitor:
             staleness = max(now - last, 0.0) if len(ps.ring) else (
                 now if now > 0 else 0.0
             )
-            alive = bool(getattr(ps, "receiver_ok", True))
+            alive = bool(getattr(ps, "receiver_ok", True)) and (
+                name not in self._poll_errors
+            )
             if not alive or staleness > self.lost_after_s:
                 state = "lost"
             elif staleness > self.stale_after_s:
@@ -471,8 +525,8 @@ class FleetMonitor:
         """
         window_s = self.window_s if window_s is None else float(window_s)
         if poll:
-            for ps in self._sensors.values():
-                ps.poll()
+            for name, ps in self._sensors.items():
+                self._safe_poll(name, ps)
         now = self._now_s() if now_s is None else float(now_s)
         health = self.device_health(now)
         n_total = len(self._sensors)
@@ -585,7 +639,7 @@ class FleetMonitor:
         out: dict[str, float] = {}
         for name, ps in self._sensors.items():
             if poll:
-                ps.poll()
+                self._safe_poll(name, ps)
             out[name] = self._locked_ring_read(
                 ps, lambda: ps.ring.tail_mean_watts(window_s)
             )

@@ -153,6 +153,137 @@ def test_stop_threads_joins_with_timeout():
     fleet.close()
 
 
+class _WedgeTransport:
+    """Pass-through transport whose read() can be gated shut, wedging the
+    receiver thread inside the poll lock — the zombie-poller scenario."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.gate = threading.Event()
+        self.gate.set()  # open: pass-through
+        self.wedged = threading.Event()  # a reader is stuck on the gate
+
+    def write(self, data):
+        self.inner.write(data)
+
+    def read(self, max_bytes=None):
+        if not self.gate.is_set():
+            self.wedged.set()
+            self.gate.wait()
+        return self.inner.read(max_bytes)
+
+    def advance(self, dt_s):
+        self.inner.advance(dt_s)
+
+    @property
+    def t_s(self):
+        return self.inner.t_s
+
+    @property
+    def pending_bytes(self):
+        return getattr(self.inner, "pending_bytes", 0)
+
+
+def test_restarted_receiver_fences_zombie_poller():
+    """A receiver detached past its join timeout must not interleave its
+    stale batch into the ring once a fresh receiver is running: the
+    generation fence drops the zombie's frames (counted, not silent)."""
+    from repro.core import ConstantLoad, PowerSensor, make_device
+
+    ps = PowerSensor(make_device(["pcie8pin-20a"], ConstantLoad(12.0, 3.0)))
+    wedge = _WedgeTransport(ps.device)
+    ps.device = wedge
+
+    # wedge the receiver inside device.read() — it holds ps._lock there
+    wedge.gate.clear()
+    ps.start_thread()
+    assert wedge.wedged.wait(5.0)
+    # queue real frames behind the gate (the zombie will read them later)
+    wedge.inner.advance(0.01)
+    h0 = ps.ring.head
+
+    err = ps.stop_thread(timeout_s=0.05)
+    assert isinstance(err, TimeoutError)
+    ps.start_thread()  # restarted receiver: blocks on the lock for now
+    assert ps.receiver_ok  # the timeout error was cleared by the restart
+
+    wedge.gate.set()  # zombie's read() returns ... into the fence
+    deadline = time.time() + 5.0
+    while ps.fenced_bytes == 0 and time.time() < deadline:
+        time.sleep(0.005)
+    assert ps.fenced_bytes > 0  # the zombie's batch was dropped, counted
+    assert ps.ring.head == h0  # ... and never landed in the ring
+    assert ps.stop_thread() is None  # the new receiver shuts down cleanly
+
+    # the stream resumes cleanly through the restarted path
+    wedge.inner.advance(0.01)
+    ps.poll()
+    assert ps.ring.head > h0
+    ps.close()
+
+
+class _DeadLinkTransport:
+    """Transport whose read() raises — a socket that died mid-stream."""
+
+    def __init__(self, inner, exc):
+        self.inner = inner
+        self.exc = exc
+        self.broken = True
+
+    def write(self, data):
+        if not self.broken:
+            self.inner.write(data)
+
+    def read(self, max_bytes=None):
+        if self.broken:
+            raise self.exc
+        return self.inner.read(max_bytes)
+
+    def advance(self, dt_s):
+        self.inner.advance(dt_s)
+
+    @property
+    def t_s(self):
+        return self.inner.t_s
+
+    @property
+    def pending_bytes(self):
+        return 0 if self.broken else getattr(self.inner, "pending_bytes", 0)
+
+
+def test_transport_read_error_maps_to_lost_not_crash():
+    """A transport read() raising out of a fleet poll must not kill the
+    poller: the device goes `lost`, the error surfaces via stop_threads,
+    and a later successful poll reacquires it."""
+    fleet = _fleet(2)
+    fleet.run_for(0.1)
+    boom = ConnectionError("link reset by peer")
+    inner = fleet["dev0"].device
+    fleet["dev0"].device = _DeadLinkTransport(inner, boom)
+
+    # round-robin polling survives the raising link (dev1 keeps flowing)
+    before = fleet["dev1"].ring.head
+    fleet.run_for(0.05)
+    assert fleet["dev1"].ring.head > before
+    h = fleet.device_health()
+    assert h["dev0"].state == "lost"
+    assert not h["dev0"].receiver_alive
+    assert h["dev1"].state == "healthy"
+    r = fleet.fleet_power(poll=True)  # must not raise either
+    assert r.n_healthy == 1
+    with pytest.warns(RuntimeWarning, match="dev0"):
+        errors = fleet.stop_threads()
+    assert errors["dev0"] is boom
+
+    # reacquire: the link comes back, the first good poll clears the error
+    fleet["dev0"].device.broken = False
+    fleet.run_for(0.05)
+    assert fleet.device_health()["dev0"].state == "healthy"
+    assert fleet.poll_errors == {}
+    assert fleet.stop_threads() == {}
+    fleet.close()
+
+
 def test_stop_thread_returns_none_on_clean_shutdown():
     fleet = _fleet(1)
     fleet.start_threads()

@@ -1,0 +1,430 @@
+"""`repro.net` tier: framing, loopback conformance, backpressure, plans.
+
+The load-bearing test here is the golden-corpus parity sweep: every
+committed golden scenario replayed through ``DeviceServer`` →
+``SocketDevice`` → an *unmodified* ``PowerSensor`` must produce rings,
+markers, and drop counters bit-identical to the in-process replay path.
+"""
+import hashlib
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import ConstantLoad, PowerSensor, make_device
+from repro.core.protocol import CMD_START_STREAM
+from repro.net import (
+    DeviceServer,
+    FleetHead,
+    Framer,
+    Interlocks,
+    MeasurementPlan,
+    PlanDevice,
+    SocketDevice,
+    pack_frame,
+    parse_endpoint,
+    run_plan,
+)
+from repro.net import link as net_link
+from repro.replay import TraceArchive
+from repro.replay.replay import ReplayDevice, replay_sensor
+
+GOLDEN_SCENARIOS = [
+    "serve-wave",
+    "serve-churn",
+    "governor-step",
+    "chaos-dropout",
+    "chaos-disconnect",
+]
+
+
+def _wait(predicate, timeout_s=10.0, tick_s=0.002):
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        if predicate():
+            return True
+        time.sleep(tick_s)
+    return predicate()
+
+
+# ---------------------------------------------------------------- framing
+def test_framer_reassembles_one_byte_dribble():
+    frames = [
+        (net_link.T_HELLO, b"dev0"),
+        (net_link.T_DATA, b"\x00" * 8 + b"payload"),
+        (net_link.T_EOF, b""),
+        (net_link.T_CMD, bytes(range(256))),
+    ]
+    wire = b"".join(pack_frame(t, p) for t, p in frames)
+    fr = Framer()
+    out = []
+    for i in range(len(wire)):  # worst-case partial sends: 1 byte each
+        out.extend(fr.feed(wire[i : i + 1]))
+    assert out == frames
+    assert fr.pending == 0
+
+
+def test_framer_mixed_splits_and_coalesced_feeds():
+    frames = [(net_link.T_DATA, bytes([i]) * i) for i in range(1, 40)]
+    wire = b"".join(pack_frame(t, p) for t, p in frames)
+    for step in (3, 7, 64, len(wire)):
+        fr = Framer()
+        out = []
+        for i in range(0, len(wire), step):
+            out.extend(fr.feed(wire[i : i + step]))
+        assert out == frames, step
+
+
+def test_framer_rejects_oversized_payload():
+    fr = Framer()
+    bad = net_link.HDR.pack(net_link.T_DATA, net_link.MAX_PAYLOAD + 1)
+    with pytest.raises(net_link.LinkError):
+        fr.feed(bad)
+
+
+def test_parse_endpoint():
+    assert parse_endpoint("tcp:127.0.0.1:9000") == ("tcp", ("127.0.0.1", 9000))
+    assert parse_endpoint("unix:/tmp/x.sock") == ("unix", ("/tmp/x.sock",))
+    with pytest.raises(ValueError):
+        parse_endpoint("udp:127.0.0.1:9000")
+    with pytest.raises(ValueError):
+        parse_endpoint("tcp:9000")
+
+
+# ---------------------------------------------------------------- loopback
+def test_handshake_and_live_stream_over_tcp():
+    inner = make_device(["pcie8pin-20a"], ConstantLoad(12.0, 3.0))
+    srv = DeviceServer({"dev0": inner}, drive=True)
+    dev = SocketDevice(srv.endpoint, device="dev0")
+    try:
+        ps = PowerSensor(dev)
+        assert ps.version.startswith("ps3")
+        assert len(ps.configs) == 8  # full EEPROM download crossed the wire
+        assert _wait(lambda: (ps.poll(), len(ps.ring))[1] > 400)
+        # command traffic interleaved with live stream traffic
+        ps.mark("A")
+        assert _wait(lambda: (ps.poll(), ps.markers)[1])
+        assert ps.markers[0][0] == "A"
+        assert ps.dropped_bytes == 0
+        assert ps.dropped_frames == 0
+        st = ps.read()
+        assert st.total_watts == pytest.approx(36.0, rel=0.2)
+        ps.stop_streaming()  # post-stop drain poll must not stall
+    finally:
+        dev.close()
+        srv.close()
+
+
+def test_unix_socket_endpoint():
+    inner = make_device(["pcie8pin-20a"], ConstantLoad(12.0, 2.0))
+    srv = DeviceServer({"dev0": inner}, endpoint="unix:auto", drive=True)
+    assert srv.endpoint.startswith("unix:")
+    dev = SocketDevice(srv.endpoint, device="dev0")
+    try:
+        ps = PowerSensor(dev)
+        assert _wait(lambda: (ps.poll(), len(ps.ring))[1] > 100)
+        assert ps.dropped_bytes == 0
+    finally:
+        dev.close()
+        srv.close()
+
+
+def test_unknown_device_refused():
+    srv = DeviceServer({"dev0": make_device(["pcie8pin-20a"], ConstantLoad())})
+    try:
+        with pytest.raises(net_link.LinkError, match="unknown device"):
+            SocketDevice(srv.endpoint, device="nope")
+    finally:
+        srv.close()
+
+
+def test_busy_device_refused():
+    srv = DeviceServer({"dev0": make_device(["pcie8pin-20a"], ConstantLoad())})
+    dev = SocketDevice(srv.endpoint, device="dev0")
+    try:
+        with pytest.raises(net_link.LinkError, match="busy"):
+            SocketDevice(srv.endpoint, device="dev0")
+    finally:
+        dev.close()
+        srv.close()
+
+
+# ------------------------------------------------------- golden conformance
+def _drain_inprocess(trace):
+    ps = replay_sensor(trace)
+    ps.device.release_all()
+    while True:
+        if ps.poll() == 0 and (ps.device.exhausted or not ps.device.streaming):
+            return ps
+
+
+def _drain_socket(trace, dev_name):
+    cap = max(1 << max(len(trace) - 1, 1).bit_length(), 1024)
+    srv = DeviceServer({dev_name: ReplayDevice(trace)})
+    sdev = SocketDevice(srv.endpoint, device=dev_name)
+    try:
+        ps = PowerSensor(sdev, ring_capacity=cap)
+        ps.expect_markers(trace.marker_chars)
+        assert _wait(
+            lambda: (ps.poll(), sdev.exhausted)[1], timeout_s=30.0, tick_s=0.0
+        )
+        while ps.poll():
+            pass
+        return ps
+    finally:
+        sdev.close()
+        srv.close()
+
+
+@pytest.mark.parametrize("scenario", GOLDEN_SCENARIOS)
+def test_golden_corpus_socket_replay_is_bit_identical(scenario):
+    arc = TraceArchive.load(f"tests/goldens/{scenario}.npz")
+    for dev_name, trace in arc.devices.items():
+        ref = _drain_inprocess(trace)
+        ps = _drain_socket(trace, dev_name)
+        a, b = ref.ring.latest(), ps.ring.latest()
+        assert len(a) == len(b), (scenario, dev_name)
+        assert np.array_equal(a.times_s, b.times_s), (scenario, dev_name)
+        assert np.array_equal(a.volts, b.volts), (scenario, dev_name)
+        assert np.array_equal(a.amps, b.amps), (scenario, dev_name)
+        assert ref.markers == ps.markers, (scenario, dev_name)
+        assert ref.dropped_bytes == ps.dropped_bytes
+        assert ref.dropped_frames == ps.dropped_frames
+        ra, rb = ref.read(), ps.read()
+        assert ra.consumed_joules == rb.consumed_joules
+
+
+# ------------------------------------------------------------ backpressure
+class _Fountain:
+    """A device that streams a deterministic byte pattern on demand."""
+
+    def __init__(self, total_bytes: int, chunk: int = 1 << 16):
+        self._left = int(total_bytes)
+        self._chunk = int(chunk)
+        self._pos = 0
+        self._pattern = bytes(range(256)) * (chunk // 256 + 1)
+        self.digest = hashlib.sha256()
+        self.t_s = 0.0
+        self.pending_bytes = 0
+
+    def write(self, data: bytes) -> None:
+        pass
+
+    def read(self, max_bytes=None) -> bytes:
+        n = min(self._chunk, self._left)
+        if n <= 0:
+            return b""
+        self._left -= n
+        start = self._pos % 256
+        self._pos += n
+        out = self._pattern[start : start + n]
+        self.digest.update(out)
+        self.t_s += n * 1e-6
+        return out
+
+    def advance(self, dt_s: float) -> None:
+        pass
+
+    @property
+    def exhausted(self) -> bool:
+        return self._left <= 0
+
+
+def test_server_slow_consumer_backpressure_no_loss():
+    total = 16 << 20  # enough to fill kernel buffers + server out window
+    fountain = _Fountain(total, chunk=1 << 18)
+    srv = DeviceServer({"dev0": fountain}, max_out_bytes=1 << 17)
+    dev = SocketDevice(srv.endpoint, device="dev0", max_buffered_chunks=1)
+    try:
+        dev.write(CMD_START_STREAM)  # leave handshake mode; reads non-block
+        # do not read: the client queue caps, its reader stalls, kernel
+        # buffers fill, the server's out window fills → pump pauses
+        assert _wait(
+            lambda: srv.stats().get("dev0", {}).get("backpressure_events", 0)
+            > 0,
+            timeout_s=20.0,
+        )
+        assert dev.backpressure_waits > 0
+        # now drain everything: delayed, never dropped
+        digest = hashlib.sha256()
+        got = 0
+        deadline = time.monotonic() + 60.0
+        while got < total and time.monotonic() < deadline:
+            data = dev.read()
+            if not data:
+                time.sleep(0.001)
+                continue
+            digest.update(data)
+            got += len(data)
+        assert got == total
+        assert digest.hexdigest() == fountain.digest.hexdigest()
+        assert _wait(lambda: dev.exhausted, timeout_s=10.0)
+    finally:
+        dev.close()
+        srv.close()
+
+
+def test_client_bounded_buffer_counts_stalls():
+    total = 1 << 20
+    fountain = _Fountain(total, chunk=1 << 14)
+    srv = DeviceServer({"dev0": fountain})
+    dev = SocketDevice(srv.endpoint, device="dev0", max_buffered_chunks=2)
+    try:
+        dev.write(CMD_START_STREAM)
+        assert _wait(lambda: dev.backpressure_waits > 0, timeout_s=20.0)
+        got = 0
+        deadline = time.monotonic() + 30.0
+        while got < total and time.monotonic() < deadline:
+            data = dev.read()
+            got += len(data)
+            if not data:
+                time.sleep(0.001)
+        assert got == total
+        assert dev.buffered_chunks <= 2
+    finally:
+        dev.close()
+        srv.close()
+
+
+# ------------------------------------------------------------ fleet head
+def test_dropped_link_maps_to_lost_then_reacquires():
+    devices = {
+        f"dev{i}": make_device(
+            ["pcie8pin-20a"], ConstantLoad(12.0, 2.0 + i), seed=i
+        )
+        for i in range(2)
+    }
+    srv = DeviceServer(devices, drive=True)
+    head = FleetHead(
+        {n: srv.endpoint for n in devices},
+        window_s=0.05,
+        stale_after_s=0.05,
+        lost_after_s=0.25,
+    )
+    try:
+        head.run_for(0.2)
+        assert all(h.healthy for h in head.device_health().values())
+        srv.drop("dev0")
+        # poll the monitor alone (no reconnect) to observe the lost state
+        assert _wait(
+            lambda: (
+                head.monitor.poll_all(),
+                head.device_health()["dev0"].state,
+            )[1]
+            == "lost",
+            timeout_s=10.0,
+        )
+        assert "dev0" in head.monitor.poll_errors
+        assert head.device_health()["dev1"].healthy
+        reading = head.monitor.fleet_power(poll=False)
+        assert reading.n_healthy == 1
+        # full poll() maintains the fleet: redial, restream, reacquire
+        h0 = head["dev0"].ring.head
+        assert _wait(
+            lambda: (
+                head.poll(),
+                head.device_health()["dev0"].healthy
+                and head["dev0"].ring.head > h0 + 50,
+            )[1],
+            timeout_s=10.0,
+            tick_s=0.005,
+        )
+        assert head.reconnects["dev0"] >= 1
+        assert head.monitor.poll_errors == {}
+        stats = head.link_stats()
+        assert stats["dev0"]["state"] == "healthy"
+        assert stats["dev0"]["reconnects"] >= 1
+        assert stats["dev1"]["reconnects"] == 0
+    finally:
+        head.close()
+        srv.close()
+
+
+# ------------------------------------------------------------ plan runner
+def test_measurement_plan_json_roundtrip():
+    plan = MeasurementPlan(
+        name="campaign-a",
+        devices=(
+            PlanDevice(name="rig0", endpoint="tcp:10.0.0.5:9000"),
+            PlanDevice(name="rig1", load="square", volts=12.0, amps=8.0),
+        ),
+        duration_s=2.5,
+        window_s=0.2,
+        interlocks=Interlocks(vmax_v=13.0, max_hours=1.0, abort_on_anomaly=True),
+        scenario="dropout-burst",
+    )
+    back = MeasurementPlan.from_json(plan.to_json())
+    assert back == plan
+
+
+def test_run_plan_virtual_loopback_completes():
+    plan = MeasurementPlan(
+        name="smoke",
+        devices=(
+            PlanDevice(name="rig0", load="constant", volts=12.0, amps=3.0),
+        ),
+        duration_s=0.25,
+        window_s=0.05,
+        tick_s=0.01,
+    )
+    result = run_plan(plan)
+    assert result.completed and not result.aborted
+    assert result.n_readings > 0
+    assert result.mean_power_w == pytest.approx(36.0, rel=0.2)
+    assert result.health == {"rig0": "healthy"}
+    assert result.link_stats["rig0"]["dropped_frames"] == 0
+
+
+def test_vmax_interlock_aborts():
+    plan = MeasurementPlan(
+        name="overvolt",
+        devices=(
+            PlanDevice(name="rig0", load="constant", volts=12.0, amps=3.0),
+        ),
+        duration_s=5.0,
+        window_s=0.05,
+        tick_s=0.01,
+        interlocks=Interlocks(vmax_v=5.0),  # a 12 V rail must trip this
+    )
+    t0 = time.monotonic()
+    result = run_plan(plan)
+    assert result.aborted
+    assert "vmax" in result.reason
+    assert time.monotonic() - t0 < 4.0  # tripped, not run to completion
+
+
+def test_max_hours_interlock_aborts():
+    plan = MeasurementPlan(
+        name="runaway",
+        devices=(
+            PlanDevice(name="rig0", load="constant", volts=12.0, amps=3.0),
+        ),
+        duration_s=30.0,
+        tick_s=0.01,
+        interlocks=Interlocks(max_hours=0.1 / 3600.0),  # 100 ms ceiling
+    )
+    t0 = time.monotonic()
+    result = run_plan(plan)
+    assert result.aborted
+    assert "max_hours" in result.reason
+    assert time.monotonic() - t0 < 10.0
+
+
+def test_abort_on_anomaly_requires_library():
+    plan = MeasurementPlan(
+        name="watched",
+        devices=(PlanDevice(name="rig0"),),
+        interlocks=Interlocks(abort_on_anomaly=True),
+    )
+    with pytest.raises(ValueError, match="signature library"):
+        run_plan(plan)
+
+
+def test_run_plan_rejects_unknown_scenario():
+    plan = MeasurementPlan(
+        name="bad",
+        devices=(PlanDevice(name="rig0"),),
+        scenario="not-a-scenario",
+    )
+    with pytest.raises(ValueError, match="unknown scenario"):
+        run_plan(plan)
