@@ -1,0 +1,270 @@
+"""Fleet decode benchmark: pooled fused decode vs per-device polling.
+
+The pooled decoder exists to amortise the receiver's fixed per-poll
+numpy overhead across the whole fleet — at head-node scale (64 links,
+~20 frames per link per 1 ms tick) that overhead, not the arithmetic, is
+the bottleneck.  This benchmark replays identical pre-recorded chunked
+traffic through both paths and gates:
+
+* **speedup** — the pooled path must decode ≥ 4× the per-device path's
+  frames/s on small-chunk fleet traffic;
+* **conformance** — both runs must agree *bit-for-bit* on every device's
+  accumulated energy (the fused pass is a pure reorganisation of the
+  same float ops, not an approximation);
+* **golden replay** (``--replay``) — every committed golden scenario
+  drained through a pooled `FleetMonitor` must reproduce the in-process
+  per-device reference energies exactly.
+
+    PYTHONPATH=src python -m benchmarks.fleet_decode [--smoke] [--replay]
+                                                     [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.core import ConstantLoad, PowerSensor, make_device
+from repro.stream import FleetMonitor
+
+from .common import BenchReport, add_json_arg
+
+GOLDEN_SCENARIOS = [
+    "serve-wave",
+    "serve-churn",
+    "governor-step",
+    "chaos-dropout",
+    "chaos-disconnect",
+]
+
+CHUNK_S = 0.001  # 1 ms head ticks: ~20 frames per link per poll
+
+
+class _ScriptDevice:
+    """Serve pre-recorded ``(bytes, t_s)`` chunks, one per ``read()``.
+
+    Replays the exact same wire traffic into both decode paths with zero
+    generation cost inside the timed region.
+    """
+
+    def __init__(self, chunks):
+        self._chunks = chunks
+        self._i = 0
+        self.t_s = 0.0
+
+    def write(self, data: bytes) -> None:
+        pass
+
+    def read(self, max_bytes=None) -> bytes:
+        if self._i >= len(self._chunks):
+            return b""
+        data, t_s = self._chunks[self._i]
+        self._i += 1
+        self.t_s = t_s
+        return data
+
+    def advance(self, dt_s: float) -> None:
+        pass
+
+    @property
+    def pending_bytes(self) -> int:
+        return 0
+
+    @property
+    def exhausted(self) -> bool:
+        return self._i >= len(self._chunks)
+
+
+def _build(n_devices: int, n_chunks: int) -> dict[str, PowerSensor]:
+    """N sensors whose transports replay freshly recorded chunk scripts.
+
+    Each sensor handshakes against its own deterministic virtual device
+    (seeded), then the device is swapped for a script of that device's
+    subsequent traffic — so two `_build` calls with the same arguments
+    produce byte-identical streams into independent sensors.
+    """
+    sensors: dict[str, PowerSensor] = {}
+    for i in range(n_devices):
+        inner = make_device(
+            ["pcie8pin-20a"], ConstantLoad(12.0, 2.0 + 0.1 * (i % 8)), seed=i
+        )
+        ps = PowerSensor(inner, ring_capacity=1 << 14)
+        chunks = []
+        for _ in range(n_chunks):
+            inner.advance(CHUNK_S)
+            chunks.append((inner.read(), inner.t_s))
+        ps.device = _ScriptDevice(chunks)
+        sensors[f"dev{i}"] = ps
+    return sensors
+
+
+def _drain_solo(sensors) -> tuple[int, float]:
+    frames = 0
+    t0 = time.perf_counter()
+    while True:
+        got = 0
+        for ps in sensors.values():
+            got += ps.poll()
+        frames += got
+        if got == 0:
+            break
+    return frames, time.perf_counter() - t0
+
+
+def _drain_pooled(monitor) -> tuple[int, float]:
+    frames = 0
+    t0 = time.perf_counter()
+    while True:
+        got = monitor.poll_all()
+        frames += got
+        if got == 0:
+            break
+    return frames, time.perf_counter() - t0
+
+
+def bench_speedup(
+    n_devices: int,
+    n_chunks: int,
+    min_ratio: float,
+    report: BenchReport,
+    reps: int = 3,
+) -> list[str]:
+    failures: list[str] = []
+
+    # best-of-N per path: each rep replays freshly built identical
+    # traffic, and the max rate stands in for the undisturbed machine —
+    # a single timed pass is far too exposed to scheduler noise for a
+    # ratio gate
+    solo_rate = pooled_rate = 0.0
+    solo_frames = pooled_frames = 0
+    solo = monitor = None
+    for _ in range(max(int(reps), 1)):
+        solo = _build(n_devices, n_chunks)
+        solo_frames, wall = _drain_solo(solo)
+        if wall > 0:
+            solo_rate = max(solo_rate, solo_frames / wall)
+        monitor = FleetMonitor(_build(n_devices, n_chunks))
+        monitor.enable_pool()
+        pooled_frames, wall = _drain_pooled(monitor)
+        if wall > 0:
+            pooled_rate = max(pooled_rate, pooled_frames / wall)
+    ratio = pooled_rate / solo_rate if solo_rate > 0 else 0.0
+    report.emit(
+        "fleet_decode_solo_frames_per_s", solo_rate,
+        f"{n_devices} links, per-device polling",
+    )
+    report.emit(
+        "fleet_decode_pooled_frames_per_s", pooled_rate,
+        f"{n_devices} links, fused pooled decode",
+    )
+    report.emit("fleet_decode_speedup", ratio, "pooled / per-device")
+    report.record("fleet_decode_pool_fused_frames", monitor.pool.fused_frames)
+
+    if not report.gate(
+        "decode:frame-count", solo_frames == pooled_frames,
+        value=pooled_frames, limit=solo_frames,
+    ):
+        failures.append(
+            f"frame counts diverge: solo {solo_frames} vs pooled {pooled_frames}"
+        )
+    if not report.gate(
+        "decode:fused-path-used", monitor.pool.fused_frames == pooled_frames,
+        value=monitor.pool.fused_frames, limit=pooled_frames,
+        detail="clean uniform traffic must not hit the fallback",
+    ):
+        failures.append("pooled run fell back to the solo decode path")
+    mismatched = [
+        name
+        for name in solo
+        if solo[name].read().consumed_joules
+        != monitor[name].read().consumed_joules
+    ]
+    if not report.gate(
+        "decode:energy-bit-identical", not mismatched, value=len(mismatched),
+        limit=0,
+    ):
+        failures.append(f"pooled energies diverge on {mismatched}")
+    if not report.gate(
+        "decode:speedup", ratio >= min_ratio, value=ratio, limit=min_ratio,
+        detail="pooled decoded-frames/s over per-device decoded-frames/s",
+    ):
+        failures.append(
+            f"pooled speedup {ratio:.2f}x below the {min_ratio:.1f}x gate"
+        )
+    return failures
+
+
+def bench_replay_conformance(report: BenchReport) -> list[str]:
+    """Golden corpus through a pooled FleetMonitor vs the solo reference."""
+    from repro.replay import TraceArchive
+    from repro.replay.replay import replay_sensor
+
+    failures: list[str] = []
+    for scenario in GOLDEN_SCENARIOS:
+        arc = TraceArchive.load(f"tests/goldens/{scenario}.npz")
+        refs: dict[str, float] = {}
+        for name, trace in arc.devices.items():
+            ps = replay_sensor(trace)
+            ps.device.release_all()
+            while not (
+                ps.poll() == 0
+                and (ps.device.exhausted or not ps.device.streaming)
+            ):
+                pass
+            refs[name] = ps.read().consumed_joules
+
+        monitor = FleetMonitor()
+        for name, trace in arc.devices.items():
+            ps = replay_sensor(trace)
+            ps.device.release_all()
+            monitor.add(name, ps)
+        monitor.enable_pool()
+        while True:
+            n = monitor.poll_all()
+            if n == 0 and all(
+                monitor[name].device.exhausted
+                or not monitor[name].device.streaming
+                for name in arc.devices
+            ):
+                break
+        for name in arc.devices:
+            ok = monitor[name].read().consumed_joules == refs[name]
+            if not report.gate(f"replay:{scenario}:{name}:joules", ok):
+                failures.append(
+                    f"{scenario}/{name}: pooled replay energy diverges"
+                )
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (full fleet width, short)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="override the link count")
+    ap.add_argument("--chunks", type=int, default=None,
+                    help="override the 1 ms chunks per link")
+    ap.add_argument("--replay", action="store_true",
+                    help="also gate golden-corpus pooled conformance")
+    add_json_arg(ap)
+    args = ap.parse_args(argv)
+
+    # the speedup comes from amortising per-poll overhead across fleet
+    # *width*, so smoke keeps the full 64 links and shortens the run
+    n_devices = args.devices or 64
+    n_chunks = args.chunks or (60 if args.smoke else 300)
+    report = BenchReport(
+        "fleet_decode",
+        {"devices": n_devices, "chunks": n_chunks, "smoke": bool(args.smoke)},
+    )
+    failures = bench_speedup(n_devices, n_chunks, 4.0, report)
+    if args.replay:
+        failures += bench_replay_conformance(report)
+    ok = report.finish(failures, args.json)
+    for f in failures:
+        print(f"FAIL: {f}")
+    print(f"fleet_decode: {'ok' if ok else 'FAILED'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,7 +1,8 @@
-"""Fleet link benchmark: N socket links at 20 kHz each, loss-free.
+"""Fleet link benchmark: 64 socket links at 20 kHz each, loss-free.
 
 Gates the `repro.net` transport the way the receiver benchmark gates the
-decode hot path:
+decode hot path (the head decodes all links through the pooled fused
+pass — see `benchmarks/fleet_decode.py` for the decode-cost gate):
 
 * **clean sustain** — a `FleetHead` over N wall-clock-driven virtual
   devices (one `DeviceServer`, one TCP link per device) must hold every
@@ -76,17 +77,31 @@ def bench_clean_sustain(n_devices: int, seconds: float, report: BenchReport) -> 
         head.run_for(seconds, tick_s=0.001)
         wall = time.perf_counter() - t0
         # stop generating (the server reads `drive` every tick), then drain
-        # the in-flight tail: delayed is fine, dropped is not
+        # the in-flight tail: delayed is fine, dropped is not.  Quiescence
+        # must hold across the *whole* path — client chunk buffers AND the
+        # server's per-link out-queues — and must hold for a settle window,
+        # because the client side can look momentarily idle while the
+        # server pump is still moving the device backlog onto the wire.
         server.drive = False
-        deadline = time.monotonic() + 30.0
+        deadline = time.monotonic() + 60.0
+        quiet = 0
         while time.monotonic() < deadline:
             n = head.poll()
-            if n == 0 and all(
-                head[name].device.buffered_chunks == 0
-                for name in head.endpoints
-            ):
+            stats = server.stats()
+            idle = (
+                not server.driving
+                and n == 0
+                and all(
+                    head[name].device.buffered_chunks == 0
+                    for name in head.endpoints
+                )
+                and all(s["pending_out_bytes"] == 0 for s in stats.values())
+            )
+            quiet = quiet + 1 if idle else 0
+            if quiet >= 25:
                 break
-            time.sleep(0.002)
+            if idle:
+                time.sleep(0.002)
         total_frames = 0
         expect = seconds * 1e6 / TICK_US
         for name in sorted(head.endpoints):
@@ -207,7 +222,7 @@ def main(argv=None) -> int:
     add_json_arg(ap)
     args = ap.parse_args(argv)
 
-    n_devices = args.devices or (4 if args.smoke else 16)
+    n_devices = args.devices or (4 if args.smoke else 64)
     seconds = 0.4 if args.smoke else 1.5
     report = BenchReport(
         "fleet_link", {"devices": n_devices, "seconds": seconds,

@@ -129,6 +129,10 @@ class PowerSensor:
         # interleaved with the restarted receiver's stream
         self._recv_gen = 0
         self._fenced_bytes = 0
+        # True while a PooledDecoder owns this sensor's current byte batch
+        # (phase A took the residual; phase C publishes).  Direct polls
+        # meanwhile are no-ops instead of interleaving a second decode.
+        self._pool_batch = False
         self.ring = FrameRing(ring_capacity, MAX_PAIRS)
 
         # ---- connect handshake: version + config download ----
@@ -155,6 +159,9 @@ class PowerSensor:
         self._lin_a, self._lin_b, self._ch_enabled, self._ch_is_volt = (
             protocol.conversion_tables(self.configs)
         )
+        # bumped on every table refresh so the pooled decoder can cheaply
+        # invalidate its stacked per-device conversion cache
+        self._conv_gen = getattr(self, "_conv_gen", 0) + 1
         # pairs with an enabled voltage/current channel: only these may hold
         # a last-observed value — disabled pairs must read 0, not a stale hold
         self._pair_has_v = np.zeros(MAX_PAIRS, dtype=bool)
@@ -266,6 +273,10 @@ class PowerSensor:
         with self._lock:
             if gen is not None and gen != self._recv_gen:
                 return -1
+            if self._pool_batch:
+                # a PooledDecoder holds this sensor's in-flight batch; a
+                # second decode here would interleave with its publish
+                return 0
             data = self.device.read()
             if gen is not None and gen != self._recv_gen:
                 self._fenced_bytes += len(data)
@@ -276,61 +287,72 @@ class PowerSensor:
                         track=f"rx:{getattr(self, 'obs_name', 'dev')}",
                     )
                 return -1
-            buf = self._residual + data
-            ids, vals, marks, consumed = protocol.decode_packets(buf)
-            self._residual = buf[consumed:]
-            # bytes consumed without yielding packets were resync discards:
-            # count them instead of silently swallowing the corruption
-            junk = consumed - 2 * int(ids.size)
-            if junk > 0:
-                self._dropped_bytes += junk
-                rec = obs_trace.active()
-                if rec is not None:
-                    rec.counter(
-                        "rx.dropped_bytes", float(junk),
-                        track=f"rx:{getattr(self, 'obs_name', 'dev')}",
+            return self._ingest(self._residual + data)
+
+    def _ingest(self, buf: bytes) -> int:
+        """Decode + frame-assemble one byte batch (receiver lock held).
+
+        The single-device slow path shared by `poll()` and the pooled
+        decoder's irregular-batch fallback: packet decode with resync
+        accounting, trailing-incomplete-frame hold-back, then `_process`.
+        The caller owns ``buf`` — any prior residual must already be
+        prepended (and cleared), because the hold-back re-enters what it
+        keeps through ``self._residual``.
+        """
+        ids, vals, marks, consumed = protocol.decode_packets(buf)
+        self._residual = buf[consumed:]
+        # bytes consumed without yielding packets were resync discards:
+        # count them instead of silently swallowing the corruption
+        junk = consumed - 2 * int(ids.size)
+        if junk > 0:
+            self._dropped_bytes += junk
+            rec = obs_trace.active()
+            if rec is not None:
+                rec.counter(
+                    "rx.dropped_bytes", float(junk),
+                    track=f"rx:{getattr(self, 'obs_name', 'dev')}",
+                )
+        if ids.size == 0:
+            return 0
+        # A batch may end mid-frame (tiny transport reads split packets
+        # across polls).  Data packets stranded *before* the next poll's
+        # first timestamp used to be discarded; instead, hold the
+        # trailing incomplete frame back in the residual so the next
+        # poll completes it.  Full-frame polls — the steady state —
+        # take the `tail >= expected` branch and pay nothing.
+        is_ts = protocol.is_timestamp(ids, marks)
+        ts_pos = np.flatnonzero(is_ts)
+        if ts_pos.size:
+            last_ts = int(ts_pos[-1])
+            tail = ids.size - 1 - last_ts
+            expected = int(self._ch_enabled.sum())
+            # a disabled ch0 still carries markers as inserted bare
+            # sensor-0 packets (right after the timestamp), making
+            # those frames one packet longer than the enabled count
+            if not self._ch_enabled[0] and np.any(ids[last_ts + 1 :] == 0):
+                expected += 1
+            if tail < expected:
+                # With zero junk in this batch every decoded packet
+                # sits at a 2-byte-aligned offset, so the held frame
+                # is a straight byte slice — no decode→re-encode
+                # round trip, and the discard accounting balances by
+                # construction (the held bytes re-enter both
+                # `consumed` and `2*ids.size` on the next poll).
+                # Junk interleaving the batch loses the alignment;
+                # only then re-encode the decoded packets.
+                if junk == 0:
+                    held = buf[2 * last_ts : consumed]
+                else:
+                    held = protocol.encode_packets(
+                        ids[last_ts:], vals[last_ts:], marks[last_ts:]
                     )
-            if ids.size == 0:
-                return 0
-            # A batch may end mid-frame (tiny transport reads split packets
-            # across polls).  Data packets stranded *before* the next poll's
-            # first timestamp used to be discarded; instead, hold the
-            # trailing incomplete frame back in the residual so the next
-            # poll completes it.  Full-frame polls — the steady state —
-            # take the `tail >= expected` branch and pay nothing.
-            is_ts = protocol.is_timestamp(ids, marks)
-            ts_pos = np.flatnonzero(is_ts)
-            if ts_pos.size:
-                last_ts = int(ts_pos[-1])
-                tail = ids.size - 1 - last_ts
-                expected = int(self._ch_enabled.sum())
-                # a disabled ch0 still carries markers as inserted bare
-                # sensor-0 packets (right after the timestamp), making
-                # those frames one packet longer than the enabled count
-                if not self._ch_enabled[0] and np.any(ids[last_ts + 1 :] == 0):
-                    expected += 1
-                if tail < expected:
-                    # With zero junk in this batch every decoded packet
-                    # sits at a 2-byte-aligned offset, so the held frame
-                    # is a straight byte slice — no decode→re-encode
-                    # round trip, and the discard accounting balances by
-                    # construction (the held bytes re-enter both
-                    # `consumed` and `2*ids.size` on the next poll).
-                    # Junk interleaving the batch loses the alignment;
-                    # only then re-encode the decoded packets.
-                    if junk == 0:
-                        held = buf[2 * last_ts : consumed]
-                    else:
-                        held = protocol.encode_packets(
-                            ids[last_ts:], vals[last_ts:], marks[last_ts:]
-                        )
-                    self._residual = held + self._residual
-                    ids, vals, marks, is_ts = (
-                        ids[:last_ts], vals[:last_ts], marks[:last_ts], is_ts[:last_ts],
-                    )
-                    if ids.size == 0:
-                        return 0
-            return self._process(ids, vals, marks, is_ts)
+                self._residual = held + self._residual
+                ids, vals, marks, is_ts = (
+                    ids[:last_ts], vals[:last_ts], marks[:last_ts], is_ts[:last_ts],
+                )
+                if ids.size == 0:
+                    return 0
+        return self._process(ids, vals, marks, is_ts)
 
     @property
     def dropped_bytes(self) -> int:
@@ -501,20 +523,45 @@ class PowerSensor:
         self._last_ts10 = int(ts_vals[-1])
         self._device_time_us = float(times[-1])
 
-        dt_s = FRAME_US / 1e6
         times_s = times / 1e6
 
         if regular:
             volts, amps, mk_frames = self._convert_regular(ids, vals, marks, per, n_frames)
         else:
             volts, amps, mk_frames = self._convert_generic(ids, vals, marks, is_ts, ts_idx, n_frames)
+        watts = volts * amps
+        return self._commit_batch(times_s, volts, amps, watts, mk_frames)
+
+    def _commit_batch(
+        self,
+        times_s: np.ndarray,
+        volts: np.ndarray,
+        amps: np.ndarray,
+        watts: np.ndarray,
+        mk_frames: np.ndarray,
+        wtot: np.ndarray | None = None,
+        e_seg: np.ndarray | None = None,
+    ) -> int:
+        """Publish one converted frame batch (receiver lock held).
+
+        The shared tail of `_process` and the pooled decoder's phase C:
+        energy integration, held instantaneous values, ring append, marker
+        pairing, dump, and obs counters.  The arrays may be slices of a
+        pooled fleet batch — everything here copies or reduces them, the
+        per-device energy reduction runs over the contiguous per-device
+        slice (identical summation order to a standalone batch).  ``wtot``
+        and ``e_seg`` optionally carry that batch's per-frame totals and
+        per-pair frame sum precomputed by the pooled decoder's fused
+        reductions — same operands, same order, bit-identical values.
+        """
+        n_frames = len(times_s)
         self._inst_v = volts[-1].copy()
         self._inst_i = amps[-1].copy()
 
-        watts = volts * amps
-        self._energy += watts.sum(axis=0) * dt_s
+        dt_s = FRAME_US / 1e6
+        self._energy += (watts.sum(axis=0) if e_seg is None else e_seg) * dt_s
         self._n_samples += n_frames
-        self.ring.append(times_s, volts, amps, watts)
+        self.ring.append(times_s, volts, amps, watts, wtot=wtot)
 
         if mk_frames.size:
             t_marks = times_s[np.minimum(mk_frames, n_frames - 1)]

@@ -258,6 +258,19 @@ class SocketDevice:
             self._t_s = t_s
             self._cond.notify_all()  # frees a backpressured reader
 
+    def read_batch(self) -> tuple[bytes, float, int]:
+        """One atomic ``(data, t_s, pending_bytes)`` capture for pooled polls.
+
+        `PooledDecoder` needs the arrival stamp and pending count that
+        belong to *this* read's chunk; taking them as separate property
+        reads after `read()` would race the reader thread queueing the
+        next chunk.  One pass under the condition keeps the triple
+        consistent — and saves two lock round-trips per device per tick.
+        """
+        with self._cond:
+            data = self.read()
+            return data, self._t_s, len(self._cur)
+
     def advance(self, dt_s: float) -> None:
         """No-op: a remote device's time flows on the server."""
 

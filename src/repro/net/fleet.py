@@ -48,6 +48,7 @@ class FleetHead:
         max_backoff_s: float = 2.0,
         max_buffered_chunks: int = 256,
         connect_timeout_s: float = 5.0,
+        pooled: bool = True,
         **monitor_kwargs,
     ):
         from repro.core.host import PowerSensor  # lazy: mirrors stream.fleet
@@ -69,6 +70,11 @@ class FleetHead:
             self.monitor.add(
                 name, PowerSensor(dev, ring_capacity=self._ring_capacity)
             )
+        if pooled:
+            # the fused fleet-wide decode path: every poll drains all N
+            # links' coalesced backlogs in one numpy pass (bit-identical
+            # to per-device polling; see repro.stream.pool)
+            self.monitor.enable_pool()
 
     def _dial(self, name: str) -> SocketDevice:
         return SocketDevice(
@@ -126,6 +132,10 @@ class FleetHead:
             ps.detach_residual()
             ps.device = dev
             ps.start_streaming()
+            # reacquired: restart the health grace window so the link is
+            # not still `lost` (old frozen frames) while the fresh stream
+            # spins up — see FleetMonitor.note_attach
+            self.monitor.note_attach(name)
             self.reconnects[name] += 1
             self._backoff.pop(name, None)
             self._next_retry.pop(name, None)

@@ -49,6 +49,7 @@ class _Conn:
         self.name: str | None = None
         self.backpressure_events = 0
         self.tx_bytes = 0
+        self.out = bytearray()  # framed, not yet handed to the kernel
         self.dropped = False  # severed via DeviceServer.drop()
 
 
@@ -73,6 +74,7 @@ class DeviceServer:
         # one lock per device: the clock thread and the serving connection
         # both touch it (advance vs read/write)
         self._dev_locks = {name: threading.Lock() for name in self.devices}
+        self._driving = bool(drive)
         self._busy: dict[str, _Conn] = {}
         self._conns: list[_Conn] = []
         self._threads: list[threading.Thread] = []
@@ -111,26 +113,40 @@ class DeviceServer:
         clock (and keeps emitting, if streaming) across disconnects.
         Output produced while no connection is serving the device is
         read and discarded — unread UART bytes do not accumulate.
+
+        Flipping ``drive`` off does *not* lose time: at fleet scale one
+        sweep over every device can take a sizeable fraction of a
+        second, so the sweep that observes the ``True → False`` edge
+        still applies the full wall ``dt`` accrued up to that moment (a
+        clock stops when it is stopped, not one tick earlier).  The
+        ``driving`` property stays ``True`` until that catch-up sweep
+        has finished.
         """
         last_wall = time.monotonic()
+        driving = self.drive
         while not self._stop.is_set():
             time.sleep(self.tick_s)
             now = time.monotonic()
             dt = (now - last_wall) * self.real_time_factor
             last_wall = now
-            if not self.drive or dt <= 0:
+            want = self.drive
+            if not want and not driving:
+                self._driving = False
                 continue
-            for name, dev in self.devices.items():
-                with self._dev_locks[name]:
-                    # busy check under the device lock: a claim that
-                    # happened-before this acquire is visible, so we
-                    # never discard a served client's reply bytes
-                    with self._lock:
-                        served = name in self._busy
-                    dev.advance(dt)
-                    if not served:
-                        while dev.read():
-                            pass
+            if dt > 0:
+                for name, dev in self.devices.items():
+                    with self._dev_locks[name]:
+                        # busy check under the device lock: a claim that
+                        # happened-before this acquire is visible, so we
+                        # never discard a served client's reply bytes
+                        with self._lock:
+                            served = name in self._busy
+                        dev.advance(dt)
+                        if not served:
+                            while dev.read():
+                                pass
+            driving = want
+            self._driving = want
 
     # ------------------------------------------------------------ accept
     def _accept_loop(self) -> None:
@@ -176,7 +192,7 @@ class DeviceServer:
     def _serve_conn(self, conn: _Conn) -> None:
         sock = conn.sock
         framer = link.Framer()
-        out = bytearray()
+        out = conn.out  # shared so stats() can report the pending depth
         dev = None
         dev_lock = None
         eof_sent = False
@@ -282,9 +298,19 @@ class DeviceServer:
                 name: {
                     "backpressure_events": conn.backpressure_events,
                     "tx_bytes": conn.tx_bytes,
+                    "pending_out_bytes": len(conn.out),
                 }
                 for name, conn in self._busy.items()
             }
+
+    @property
+    def driving(self) -> bool:
+        """True while the clock thread still owes the devices drive time.
+
+        Stays set after ``drive = False`` until the catch-up sweep that
+        observed the edge has applied the final wall ``dt``.
+        """
+        return self._driving
 
     def serving(self, name: str) -> bool:
         with self._lock:

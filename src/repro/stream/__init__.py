@@ -14,7 +14,12 @@ feeding live consumers:
   states (healthy / stale / lost), quorum-rescaled `fleet_power` with
   holdover semantics and an explicit staleness flag — see the
   degraded-telemetry table in `repro.stream.fleet`'s docstring and the
-  fault-injection lab in `repro.faultlab` that exercises it.
+  fault-injection lab in `repro.faultlab` that exercises it;
+* `PooledDecoder` — the fleet-scale receive path: accumulates raw bytes
+  from N links and decodes every frame-regular device in one fused numpy
+  pass (stacked per-device conversion tables), publishing to the rings
+  via their seqlock so hot readers stay lock-free.  Bit-identical to
+  per-device polling; enable with `FleetMonitor.enable_pool()`.
 """
 from .aggregate import (
     WindowStats,
@@ -33,6 +38,7 @@ from .fleet import (
     IntervalStats,
     make_virtual_fleet,
 )
+from .pool import PooledDecoder, PoolResult
 from .ring import FrameBlock, FrameRing
 
 __all__ = [
@@ -51,4 +57,6 @@ __all__ = [
     "make_virtual_fleet",
     "FrameBlock",
     "FrameRing",
+    "PooledDecoder",
+    "PoolResult",
 ]

@@ -35,6 +35,14 @@ link-lost      its transport ``read()``        mapped to ``lost`` immediately
                (socket died mid-poll)          is held until a later poll
                                                succeeds — reacquire — and is
                                                surfaced via `stop_threads`)
+attach-grace   the device was just added, or   staleness is measured from the
+(healthy)      `FleetHead` reacquired its      *attach time*, not from an
+               link (`note_attach`)            empty ring's epoch — a fresh
+                                               device gets ``stale_after_s``
+                                               of grace to deliver its first
+                                               frame instead of being born
+                                               ``lost`` (and emitting a bogus
+                                               lost→healthy transition)
 backpressure   a bounded link buffer filled    no frame loss and no health
                (`repro.net` receive queues,    change: the reader pauses, the
                server send windows)            sender blocks on the socket,
@@ -43,6 +51,22 @@ backpressure   a bounded link buffer filled    no frame loss and no health
                                                slow consumer shows up in link
                                                stats instead of as drops
 =============  ==============================  =================================
+
+Lock-free reader rules (what `fleet_power` / `window_power_w` see while
+the receiver — solo or pooled — is mid-publish):
+
+* `FrameRing.append` runs under the receiver lock and brackets its slice
+  writes with a seqlock ``version`` counter (odd while mutating).  Hot
+  readers (`tail_mean_watts`) take **no lock**: they snapshot the version,
+  reduce, and retry if the version moved.  A reader therefore never
+  observes a torn frame — each individual slice store is atomic under the
+  GIL, and any read that overlapped a publish is discarded and retried;
+* health scans read preallocated per-device mirrors (``last_time_s``,
+  ``head``) that the ring updates *after* the version counter closes, so
+  a mirror value never refers to frames that are not yet readable;
+* block readers (`marker_window`, `snapshot`, `tail_window`) still take
+  the receiver lock — they return multi-array copies whose consistency a
+  version counter alone cannot vouch for.
 
 When *no* device is healthy, `fleet_power` holds the last good reading
 for up to ``holdover_s`` (``holdover=True``); the reading is flagged
@@ -76,7 +100,7 @@ from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 
 from .aggregate import WindowStats, window_stats
-from .ring import FrameBlock
+from .ring import FrameBlock, FrameRing
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.core.host import PowerSensor, State
@@ -207,6 +231,22 @@ class FleetMonitor:
         self._rr = 0  # round-robin cursor
         self._last_health: dict[str, str] = {}  # for obs transition events
         self._stale_streak = False  # edge-trigger for stale-read events
+        # attach times: health grace windows start here, not at frame 0
+        self._attach_t: dict[str, float] = {}
+        # preallocated per-device vectors for the health/power hot path:
+        # rings mirror (last_time_s, head) into slots via bind_stats, so a
+        # 1 kHz fleet_power tick does vector arithmetic instead of a dict
+        # loop over N dataclasses (see _health_vectors)
+        self._vnames: list[str] = []
+        self._vsensors: list = []
+        self._v_last_t = np.zeros(0)
+        self._v_head = np.zeros(0, dtype=np.int64)
+        self._v_attach = np.zeros(0)
+        self._v_err = np.zeros(0, dtype=bool)
+        self._v_alive = np.zeros(0, dtype=bool)
+        self._prev_code = np.zeros(0, dtype=np.int8)  # -1 = never sighted
+        self._unmirrored: list[int] = []  # duck rings without bind_stats
+        self._pool = None  # optional PooledDecoder (see enable_pool)
         if sensors:
             for name, ps in sensors.items():
                 self.add(name, ps)
@@ -222,6 +262,53 @@ class FleetMonitor:
                 sensor.obs_name = name
             except AttributeError:  # duck-typed sensor with __slots__
                 pass
+        self._rebuild_vectors()
+        # health grace starts now: a device joining a long-running fleet
+        # must not be born `lost` just because its ring is still empty
+        self.note_attach(name)
+
+    def note_attach(self, name: str) -> None:
+        """(Re)start ``name``'s health grace window at the fleet's now.
+
+        Called on `add` and by `FleetHead` after a redial reacquires a
+        link: staleness is measured from this attach time (or the newest
+        frame, whichever is later), so a fresh or reacquired device gets
+        ``stale_after_s`` to deliver its first frame instead of reading
+        ``staleness = now`` off an empty/frozen ring and instantly
+        classifying `lost` (which also emitted a spurious lost→healthy
+        transition on the first frame).
+        """
+        t = self._now_s()
+        self._attach_t[name] = t
+        i = self._vnames.index(name) if name in self._sensors else -1
+        if i >= 0:
+            self._v_attach[i] = t
+
+    def _rebuild_vectors(self) -> None:
+        """Rebuild the preallocated health mirrors after membership changes."""
+        names = list(self._sensors)
+        self._vnames = names
+        self._vsensors = [self._sensors[nm] for nm in names]
+        n = len(names)
+        self._v_last_t = np.zeros(n)
+        self._v_head = np.zeros(n, dtype=np.int64)
+        self._v_attach = np.array(
+            [self._attach_t.get(nm, 0.0) for nm in names]
+        ) if n else np.zeros(0)
+        self._v_err = np.array([nm in self._poll_errors for nm in names], dtype=bool)
+        self._v_alive = np.ones(n, dtype=bool)
+        code_of = {"healthy": 0, "stale": 1, "lost": 2}
+        self._prev_code = np.array(
+            [code_of.get(self._last_health.get(nm), -1) for nm in names],
+            dtype=np.int8,
+        )
+        self._unmirrored = []
+        for i, ps in enumerate(self._vsensors):
+            ring = getattr(ps, "ring", None)
+            if ring is not None and hasattr(ring, "bind_stats"):
+                ring.bind_stats(self._v_last_t, self._v_head, i)
+            else:
+                self._unmirrored.append(i)
 
     def __len__(self) -> int:
         return len(self._sensors)
@@ -246,25 +333,39 @@ class FleetMonitor:
         try:
             n = ps.poll()
         except BaseException as exc:
-            fresh = name not in self._poll_errors
-            self._poll_errors[name] = exc
-            reg = obs_metrics.active()
-            if reg is not None:
-                reg.counter(
-                    "fleet_poll_errors_total",
-                    "transport read() failures escaping a device poll",
-                    device=name,
-                ).inc()
-            if fresh:
-                rec = obs_trace.active()
-                if rec is not None:
-                    rec.device_instant(
-                        f"link:poll-error:{type(exc).__name__}",
-                        self._now_s(), track=f"health:{name}",
-                    )
+            self._mark_poll_error(name, exc)
             return 0
-        self._poll_errors.pop(name, None)
+        self._clear_poll_error(name)
         return n
+
+    def _mark_poll_error(self, name: str, exc: BaseException) -> None:
+        fresh = name not in self._poll_errors
+        self._poll_errors[name] = exc
+        try:
+            self._v_err[self._vnames.index(name)] = True
+        except ValueError:
+            pass
+        reg = obs_metrics.active()
+        if reg is not None:
+            reg.counter(
+                "fleet_poll_errors_total",
+                "transport read() failures escaping a device poll",
+                device=name,
+            ).inc()
+        if fresh:
+            rec = obs_trace.active()
+            if rec is not None:
+                rec.device_instant(
+                    f"link:poll-error:{type(exc).__name__}",
+                    self._now_s(), track=f"health:{name}",
+                )
+
+    def _clear_poll_error(self, name: str) -> None:
+        if self._poll_errors.pop(name, None) is not None:
+            try:
+                self._v_err[self._vnames.index(name)] = False
+            except ValueError:
+                pass
 
     def poll(self, k: int = 1) -> int:
         """Drain the next ``k`` devices round-robin. Returns frames seen."""
@@ -279,7 +380,34 @@ class FleetMonitor:
         return total
 
     def poll_all(self) -> int:
+        if self._pool is not None:
+            res = self._pool.poll()
+            if self._poll_errors:  # reacquired links clear on first success
+                for nm in res.polled:
+                    self._clear_poll_error(nm)
+            for nm, exc in res.errors.items():
+                self._mark_poll_error(nm, exc)
+            return res.frames
         return self.poll(len(self._sensors))
+
+    def enable_pool(self):
+        """Switch `poll_all` to the fused fleet-wide decode path.
+
+        Builds a `repro.stream.pool.PooledDecoder` over this monitor's
+        sensors (membership changes are picked up live).  Decoded output
+        is bit-identical to per-device polling; only the cost changes —
+        one fused numpy pass instead of N full receiver passes.
+        """
+        if self._pool is None:
+            from .pool import PooledDecoder
+
+            self._pool = PooledDecoder(self._sensors)
+        return self._pool
+
+    @property
+    def pool(self):
+        """The attached `PooledDecoder` (None: per-device polling)."""
+        return self._pool
 
     @property
     def poll_errors(self) -> dict[str, BaseException]:
@@ -375,8 +503,13 @@ class FleetMonitor:
         block = self._locked_ring_read(ps, lambda: ps.ring.window(t0, t1))
         if len(block) < 2:
             return None
-        # evicted head: first retained frame starts well after t0
-        frame_dt = block.times_s[1] - block.times_s[0]
+        # evicted head: first retained frame starts well after t0.  The
+        # frame interval is estimated as the *median* inter-frame dt — the
+        # first two frames alone are unreliable exactly when it matters
+        # (a delivery gap at the window's leading edge inflates their dt,
+        # making this check too lenient and silently accepting a window
+        # that is missing its leading coverage)
+        frame_dt = float(np.median(np.diff(block.times_s)))
         if block.times_s[0] - t0 > 2.0 * frame_dt:
             return None
         return t0, t1, block
@@ -450,6 +583,20 @@ class FleetMonitor:
         with lock:
             return fn()
 
+    @classmethod
+    def _ring_tail_mean(cls, ps: "PowerSensor", window_s: float) -> float:
+        """Trailing-window mean power, lock-free where the ring allows it.
+
+        `FrameRing.tail_mean_watts` is seqlock-protected (see the module
+        docstring's lock-free reader rules) so the hot path never takes
+        the receiver lock; duck-typed rings without the version counter
+        keep the locked read.
+        """
+        ring = ps.ring
+        if isinstance(ring, FrameRing):
+            return ring.tail_mean_watts(window_s)
+        return cls._locked_ring_read(ps, lambda: ring.tail_mean_watts(window_s))
+
     def read_all(self) -> dict[str, "State"]:
         return {name: ps.read() for name, ps in self._sensors.items()}
 
@@ -462,49 +609,80 @@ class FleetMonitor:
             best = max(best, ps.ring.last_time_s if t is None else float(t))
         return best
 
+    _STATE_NAMES = ("healthy", "stale", "lost")
+
+    def _health_vectors(self, now: float) -> tuple[np.ndarray, np.ndarray]:
+        """(codes, staleness) over the preallocated per-device mirrors.
+
+        The `fleet_power` hot path: no dict, no dataclasses, no per-device
+        ring attribute reads — the rings mirror (last_time_s, head) into
+        shared slots on every append (`FrameRing.bind_stats`), and health
+        classification is three vector ops.  Codes: 0 healthy / 1 stale /
+        2 lost.  Also emits the health-transition obs events (diffed
+        against the previous codes, so steady state emits nothing).
+        """
+        for i in self._unmirrored:  # duck rings without the stats mirror
+            ring = self._vsensors[i].ring
+            self._v_last_t[i] = ring.last_time_s if len(ring) else 0.0
+            self._v_head[i] = len(ring)
+        has_frames = self._v_head > 0
+        # grace window: staleness runs from the newest frame or the attach
+        # time, whichever is later — never from an empty ring's epoch
+        eff_last = np.where(
+            has_frames,
+            np.maximum(self._v_last_t, self._v_attach),
+            self._v_attach,
+        )
+        staleness = np.maximum(now - eff_last, 0.0)
+        alive = self._v_alive
+        alive[:] = True
+        for i, ps in enumerate(self._vsensors):
+            if not getattr(ps, "receiver_ok", True):
+                alive[i] = False
+        np.logical_and(alive, ~self._v_err, out=alive)
+        codes = np.where(
+            ~alive | (staleness > self.lost_after_s),
+            np.int8(2),
+            np.where(staleness > self.stale_after_s, np.int8(1), np.int8(0)),
+        )
+        changed = np.flatnonzero(codes != self._prev_code)
+        for i in changed:
+            name = self._vnames[i]
+            state = self._STATE_NAMES[codes[i]]
+            prev = self._last_health.get(name)
+            self._last_health[name] = state
+            self._prev_code[i] = codes[i]
+            if prev is not None and prev != state:
+                rec = obs_trace.active()
+                if rec is not None:
+                    rec.device_instant(
+                        f"health:{prev}->{state}", now,
+                        track=f"health:{name}", value=float(staleness[i]),
+                    )
+                reg = obs_metrics.active()
+                if reg is not None:
+                    reg.counter(
+                        "fleet_health_transitions_total",
+                        "device health state changes",
+                        device=name, to=state,
+                    ).inc()
+        return codes, staleness
+
     def device_health(self, now_s: float | None = None) -> dict[str, DeviceHealth]:
         """Per-device health states (see the module docstring table)."""
         now = self._now_s() if now_s is None else float(now_s)
+        codes, staleness = self._health_vectors(now)
         out: dict[str, DeviceHealth] = {}
-        for name, ps in self._sensors.items():
-            last = ps.ring.last_time_s if len(ps.ring) else 0.0
-            staleness = max(now - last, 0.0) if len(ps.ring) else (
-                now if now > 0 else 0.0
-            )
-            alive = bool(getattr(ps, "receiver_ok", True)) and (
-                name not in self._poll_errors
-            )
-            if not alive or staleness > self.lost_after_s:
-                state = "lost"
-            elif staleness > self.stale_after_s:
-                state = "stale"
-            else:
-                state = "healthy"
+        for i, name in enumerate(self._vnames):
+            ps = self._vsensors[i]
             out[name] = DeviceHealth(
                 name=name,
-                state=state,
-                staleness_s=staleness,
-                last_frame_s=last,
-                receiver_alive=alive,
+                state=self._STATE_NAMES[codes[i]],
+                staleness_s=float(staleness[i]),
+                last_frame_s=float(self._v_last_t[i]) if self._v_head[i] > 0 else 0.0,
+                receiver_alive=bool(self._v_alive[i]),
                 dropped_frames=int(getattr(ps, "dropped_frames", 0)),
             )
-            prev = self._last_health.get(name)
-            if prev != state:
-                self._last_health[name] = state
-                if prev is not None:  # first sighting is not a transition
-                    rec = obs_trace.active()
-                    if rec is not None:
-                        rec.device_instant(
-                            f"health:{prev}->{state}", now,
-                            track=f"health:{name}", value=staleness,
-                        )
-                    reg = obs_metrics.active()
-                    if reg is not None:
-                        reg.counter(
-                            "fleet_health_transitions_total",
-                            "device health state changes",
-                            device=name, to=state,
-                        ).inc()
         return out
 
     def fleet_power(
@@ -525,21 +703,20 @@ class FleetMonitor:
         """
         window_s = self.window_s if window_s is None else float(window_s)
         if poll:
-            for name, ps in self._sensors.items():
-                self._safe_poll(name, ps)
+            self.poll_all()
         now = self._now_s() if now_s is None else float(now_s)
-        health = self.device_health(now)
+        codes, _ = self._health_vectors(now)
         n_total = len(self._sensors)
-        healthy = [n for n, h in health.items() if h.healthy]
-        quorum = len(healthy) / n_total if n_total else 0.0
-        if healthy:
-            raw = sum(
-                self._locked_ring_read(
-                    self._sensors[n], lambda ps=self._sensors[n]: ps.ring.tail_mean_watts(window_s)
-                )
-                for n in healthy
-            )
-            power = raw * n_total / len(healthy)
+        healthy_idx = np.flatnonzero(codes == 0)
+        n_healthy = int(healthy_idx.size)
+        quorum = n_healthy / n_total if n_total else 0.0
+        if n_healthy:
+            # lock-free seqlock reads: the governor's tick never contends
+            # with the receiver lock (duck rings fall back to locked reads)
+            raw = 0.0
+            for i in healthy_idx:
+                raw += self._ring_tail_mean(self._vsensors[i], window_s)
+            power = raw * n_total / n_healthy
             stale = quorum < self.min_quorum_frac
             if not stale:
                 self._last_good = (now, power)
@@ -547,7 +724,7 @@ class FleetMonitor:
             return FleetPowerReading(
                 power_w=power,
                 raw_power_w=raw,
-                n_healthy=len(healthy),
+                n_healthy=n_healthy,
                 n_total=n_total,
                 quorum_frac=quorum,
                 stale=stale,
@@ -637,12 +814,12 @@ class FleetMonitor:
         """Per-device trailing-window mean power (same fast path)."""
         window_s = self.window_s if window_s is None else float(window_s)
         out: dict[str, float] = {}
+        if poll and self._pool is not None:
+            self.poll_all()
         for name, ps in self._sensors.items():
-            if poll:
+            if poll and self._pool is None:
                 self._safe_poll(name, ps)
-            out[name] = self._locked_ring_read(
-                ps, lambda: ps.ring.tail_mean_watts(window_s)
-            )
+            out[name] = self._ring_tail_mean(ps, window_s)
         return out
 
     def snapshot(self, window_s: float | None = None) -> FleetSnapshot:

@@ -1,0 +1,510 @@
+"""PooledDecoder: one fused decode pass over a fleet of receiver links.
+
+The per-device receiver (`repro.core.host.PowerSensor`) spends most of a
+poll on fixed numpy-call overhead — `decode_packets`, the frame-regularity
+check, 10-bit timestamp reconstruction, and the affine conversion are each
+a dozen small array ops whose cost barely depends on the batch size.  At
+fleet scale (64+ links ticked at 1 kHz, ~20 frames per link per tick) that
+overhead is the head node's bottleneck, not the arithmetic.
+
+The pooled decoder amortises it across the whole fleet:
+
+* **phase A** (per device, under its receiver lock): take the link's byte
+  batch — residual + everything the transport has queued (`SocketDevice`'s
+  ``\\0live`` coalesced backlog is exactly this input) — plus the arrival
+  stamp, pending count, timestamp state, and held instantaneous values.
+  The sensor's ``_pool_batch`` flag is raised so a concurrent direct
+  ``poll()`` no-ops instead of interleaving a second decode;
+* **phase B** (no locks): concatenate every even, resync-clean buffer and
+  decode it with *one* set of bit ops; devices whose batch is a whole
+  number of constant-layout frames are grouped by frame layout and
+  converted in one fused multiply-add per group, with the per-device
+  affine tables stacked along a device axis.  Timestamp reconstruction
+  runs as one segmented integer cumsum (exact, so per-device float
+  semantics are preserved bit for bit);
+* **phase C** (per device, under its lock): publish each device's slice
+  through `PowerSensor._commit_batch` — the same energy/ring/marker/obs
+  tail the solo receiver uses — and clear the flag.
+
+Anything irregular — odd-length buffers, resync junk, partial trailing
+frames, mixed per-frame layouts, markers on a disabled channel 0 —
+falls back to the device's own `_ingest` (phase C, under its lock), the
+exact code path a solo `poll()` runs.  Every float op on the pooled path
+is elementwise or a per-device contiguous reduction, so the decoded
+times/volts/amps/energies are **bit-identical** to the per-device path;
+`tests/test_pool.py` and the golden corpus pin this.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Mapping
+
+import numpy as np
+
+from repro.obs import metrics as obs_metrics
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.host import PowerSensor
+
+
+@dataclass(slots=True)
+class _Meta:
+    """Cached per-device frame-layout tables (invalidated by config writes)."""
+
+    gen: int  # sensor's _conv_gen when built
+    per: int  # packets per frame (1 timestamp + enabled channels)
+    layout: bytes  # the frame's channel-id row, as bytes (cache key)
+    ch_ids: np.ndarray  # (per-1,) channel id of each data column
+    a_row: np.ndarray  # (per-1,) affine gain per column
+    b_row: np.ndarray  # (per-1,) affine offset per column
+    vcols: np.ndarray  # data columns carrying enabled voltage channels
+    icols: np.ndarray  # data columns carrying enabled current channels
+    vpairs: np.ndarray  # target pair index per vcol
+    ipairs: np.ndarray  # target pair index per icol
+    mk_col: int  # marker-bearing packet column (-1: no channel 0)
+    colkey: tuple  # group key: identical => identical column scatter
+
+
+@dataclass(slots=True)
+class _Batch:
+    """One device's in-flight poll batch (phase A capture)."""
+
+    name: str
+    ps: "PowerSensor"
+    buf: bytes
+    arrival_s: float | None
+    pending: int
+    last_ts10: int | None
+    dev_time_us: float
+    # references captured under the receiver lock: `_commit_batch`
+    # *replaces* these arrays (never mutates in place), so the refs stay
+    # frozen at their phase-A values without copying
+    inst_v: np.ndarray
+    inst_i: np.ndarray
+    has_v: np.ndarray
+    has_i: np.ndarray
+    per: int
+    conv_gen: int
+    lin_a: np.ndarray
+    lin_b: np.ndarray
+    ch_enabled: np.ndarray
+    ch_is_volt: np.ndarray
+    meta: _Meta | None = None
+    committed: bool = False
+
+
+@dataclass
+class PoolResult:
+    """Outcome of one pooled poll."""
+
+    frames: int = 0
+    errors: dict[str, BaseException] = field(default_factory=dict)
+    polled: list[str] = field(default_factory=list)  # successful reads
+    fused_devices: int = 0  # devices decoded on the fused path
+    fallback_devices: int = 0  # devices routed through _ingest
+
+
+class PooledDecoder:
+    """Decode N receiver links' byte batches in one fused numpy pass."""
+
+    def __init__(self, sensors: Mapping[str, "PowerSensor"]):
+        # live reference (e.g. FleetMonitor's dict): membership changes
+        # are picked up on the next poll, no rebuild protocol needed
+        self._sensors = sensors
+        self._meta: dict[str, _Meta] = {}
+        # per-device packets-per-frame, keyed by conversion generation
+        # (saves a numpy reduction per device per poll)
+        self._per: dict[str, tuple[int, int]] = {}
+        # per-group stacked conversion/mask tables, keyed by the member
+        # (name, gen) tuple — stable fleets hit this every poll
+        self._stacks: dict[tuple, tuple] = {}
+        self.polls = 0
+        self.fused_frames = 0
+        self.fallback_batches = 0
+
+    # ------------------------------------------------------------ phase A
+    def _capture(self, result: PoolResult) -> list[_Batch]:
+        batches: list[_Batch] = []
+        for name, ps in self._sensors.items():
+            if not hasattr(ps, "_ingest"):  # duck-typed sensor: solo poll
+                try:
+                    result.frames += int(ps.poll())
+                    result.polled.append(name)
+                except BaseException as exc:
+                    result.errors[name] = exc
+                continue
+            with ps._lock:
+                if ps._pool_batch:  # another pool owns it; skip this tick
+                    continue
+                dev = ps.device
+                try:
+                    read_batch = getattr(dev, "read_batch", None)
+                    if read_batch is not None:
+                        data, arrival_s, pending = read_batch()
+                    else:
+                        data = dev.read()
+                        arrival_s = getattr(dev, "t_s", None)
+                        pending = int(getattr(dev, "pending_bytes", 0) or 0)
+                except BaseException as exc:
+                    result.errors[name] = exc
+                    continue
+                result.polled.append(name)
+                buf = ps._residual + data if ps._residual else data
+                if not buf:
+                    continue
+                ps._residual = b""
+                ps._pool_batch = True
+                gen = ps._conv_gen
+                pc = self._per.get(name)
+                if pc is not None and pc[0] == gen:
+                    per = pc[1]
+                else:
+                    per = 1 + int(ps._ch_enabled.sum())
+                    self._per[name] = (gen, per)
+                batches.append(
+                    _Batch(
+                        name=name,
+                        ps=ps,
+                        buf=buf,
+                        arrival_s=(
+                            None if arrival_s is None else float(arrival_s)
+                        ),
+                        pending=int(pending),
+                        last_ts10=ps._last_ts10,
+                        dev_time_us=ps._device_time_us,
+                        inst_v=ps._inst_v,
+                        inst_i=ps._inst_i,
+                        has_v=ps._pair_has_v,
+                        has_i=ps._pair_has_i,
+                        per=per,
+                        conv_gen=gen,
+                        lin_a=ps._lin_a,
+                        lin_b=ps._lin_b,
+                        ch_enabled=ps._ch_enabled,
+                        ch_is_volt=ps._ch_is_volt,
+                    )
+                )
+        return batches
+
+    # ------------------------------------------------------------ layout meta
+    def _meta_for(
+        self, b: _Batch, row: np.ndarray, layout: bytes | None = None
+    ) -> _Meta:
+        if layout is None:
+            layout = row.tobytes()
+        m = self._meta.get(b.name)
+        if m is not None and m.gen == b.conv_gen and m.layout == layout:
+            return m
+        ch_ids = row.copy()
+        en = b.ch_enabled[ch_ids]
+        iv = b.ch_is_volt[ch_ids]
+        vcols = np.flatnonzero(en & iv)
+        icols = np.flatnonzero(en & ~iv)
+        pair_of = ch_ids >> 1
+        ch0 = np.flatnonzero(ch_ids == 0)
+        m = _Meta(
+            gen=b.conv_gen,
+            per=b.per,
+            layout=layout,
+            ch_ids=ch_ids,
+            a_row=b.lin_a[ch_ids],
+            b_row=b.lin_b[ch_ids],
+            vcols=vcols,
+            icols=icols,
+            vpairs=pair_of[vcols],
+            ipairs=pair_of[icols],
+            mk_col=int(1 + ch0[0]) if ch0.size else -1,
+            colkey=(
+                b.per,
+                layout,
+                vcols.tobytes(),
+                icols.tobytes(),
+            ),
+        )
+        self._meta[b.name] = m
+        return m
+
+    # ------------------------------------------------------------ the poll
+    def poll(self) -> PoolResult:
+        """One pooled receive pass over every link. Never raises for a
+        single bad transport — per-device errors land in ``errors`` (the
+        `FleetMonitor._safe_poll` contract, applied fleet-wide)."""
+        result = PoolResult()
+        self.polls += 1
+        batches = self._capture(result)
+        if not batches:
+            return result
+        try:
+            self._decode(batches, result)
+        finally:
+            # exception safety: un-own anything not yet committed so the
+            # bytes re-enter the stream on the next (solo or pooled) poll
+            for b in batches:
+                if not b.committed:
+                    ps = b.ps
+                    with ps._lock:
+                        ps._pool_batch = False
+                        ps._residual = b.buf + ps._residual
+        reg = obs_metrics.active()
+        if reg is not None:
+            reg.counter("pool_polls_total", "pooled decode passes").inc()
+            if result.frames:
+                reg.counter(
+                    "pool_frames_total", "frames published by pooled polls"
+                ).inc(result.frames)
+            if result.fallback_devices:
+                reg.counter(
+                    "pool_fallback_batches_total",
+                    "per-device batches routed through the solo decode path",
+                ).inc(result.fallback_devices)
+        return result
+
+    def _decode(self, batches: list[_Batch], result: PoolResult) -> None:
+        fallback: list[_Batch] = []
+        pooled: list[_Batch] = []
+        for b in batches:
+            (pooled if not (len(b.buf) & 1) and b.per >= 2 else fallback).append(b)
+
+        ids = vals = marks = is_ts = None
+        if pooled:
+            cat = b"".join(b.buf for b in pooled)
+            arr = np.frombuffer(cat, dtype=np.uint8)
+            a0 = arr[0::2]
+            a1 = arr[1::2]
+            # one resync-cleanliness check for the whole fleet: any dirty
+            # byte routes everything through the solo path (corruption is
+            # a chaos event; its accounting must match `_ingest` exactly)
+            if not bool((a0 & 0x80).all()) or bool((a1 & 0x80).any()):
+                fallback.extend(pooled)
+                pooled = []
+            else:
+                ids = ((a0 >> 3) & 0x7).astype(np.int64)
+                marks = ((a0 >> 6) & 0x1).astype(np.int64)
+                vals = ((a0 & 0x7).astype(np.int64) << 7) | (a1 & 0x7F)
+                is_ts = (ids == 7) & (marks == 1)
+
+        groups: dict[tuple, list[tuple[_Batch, int, int]]] = {}
+        if pooled:
+            lens = np.array([len(b.buf) >> 1 for b in pooled])
+            starts = np.zeros(len(pooled) + 1, dtype=np.int64)
+            np.cumsum(lens, out=starts[1:])
+            pers = np.array([b.per for b in pooled])
+            # uniform-fleet fast path: every device shares one frame length
+            # and one layout row => three whole-array checks replace all
+            # per-device regularity scans
+            uniform = False
+            if int(pers.min()) == int(pers.max()):
+                per = int(pers[0])
+                if ids.size and ids.size % per == 0 and not (lens % per).any():
+                    ts_mat = is_ts.reshape(-1, per)
+                    ids_mat = ids.reshape(-1, per)
+                    uniform = bool(
+                        ts_mat[:, 0].all()
+                        and not ts_mat[:, 1:].any()
+                        and (ids_mat[:, 1:] == ids_mat[0, 1:]).all()
+                    )
+            # uniform fleets share one layout row: hash it to bytes once,
+            # not once per device
+            u_row = ids[1:per] if uniform else None
+            u_layout = u_row.tobytes() if uniform else None
+            for i, b in enumerate(pooled):
+                s, e = int(starts[i]), int(starts[i + 1])
+                if uniform:
+                    b.meta = self._meta_for(b, u_row, u_layout)
+                elif self._segment_regular(b, ids, is_ts, s, e):
+                    b.meta = self._meta_for(b, ids[s + 1 : s + b.per])
+                else:
+                    fallback.append(b)
+                    continue
+                groups.setdefault(b.meta.colkey, []).append((b, s, e))
+
+        for members in groups.values():
+            self._decode_group(members, vals, marks, result)
+            result.fused_devices += len(members)
+
+        for b in fallback:
+            ps = b.ps
+            with ps._lock:
+                ps._pool_batch = False
+                b.committed = True
+                try:
+                    result.frames += max(int(ps._ingest(b.buf)), 0)
+                except BaseException as exc:
+                    result.errors[b.name] = exc
+            result.fallback_devices += 1
+        self.fallback_batches += len(fallback)
+
+    @staticmethod
+    def _segment_regular(b, ids, is_ts, s: int, e: int) -> bool:
+        """`PowerSensor._frames_regular`, applied to one pooled segment."""
+        per = b.per
+        cnt = e - s
+        if cnt == 0 or cnt % per:
+            return False
+        ts_mat = is_ts[s:e].reshape(-1, per)
+        if not ts_mat[:, 0].all() or ts_mat[:, 1:].any():
+            return False
+        return bool((ids[s:e].reshape(-1, per)[:, 1:] == ids[s + 1 : s + per]).all())
+
+    def _decode_group(self, members, vals, marks, result: PoolResult) -> None:
+        """Fused decode of one layout group; publishes per-device slices.
+
+        Every float op here is elementwise (multiply-add, V*I) or a
+        per-device contiguous reduction, and the timestamp math is exact
+        int64 until the final per-element float add — so each device's
+        slice is bit-identical to what its solo receiver would produce.
+        """
+        g = len(members)
+        per = members[0][0].per
+        if g == 1:
+            b, s, e = members[0]
+            g_vals = vals[s:e].reshape(-1, per)
+            g_marks = marks[s:e].reshape(-1, per)
+        else:
+            g_vals = np.concatenate([vals[s:e] for _, s, e in members]).reshape(-1, per)
+            g_marks = np.concatenate([marks[s:e] for _, s, e in members]).reshape(-1, per)
+        n_rows = g_vals.shape[0]
+        rows_per = np.array([(e - s) // per for _, s, e in members])
+        rows0 = int(rows_per[0])
+        # equal row counts let every per-device op below run as a
+        # broadcast over a (g, rows, ·) view instead of np.repeat'ing the
+        # per-device tables out to n_rows — same per-element arithmetic,
+        # no materialised repeats.  Steady fleets hit this every poll.
+        uniform = bool((rows_per == rows0).all())
+        rs = np.zeros(g, dtype=np.int64)
+        np.cumsum(rows_per[:-1], out=rs[1:])
+        last_rows = rs + rows_per - 1
+
+        # one gather pass over the members' captured scalar state
+        has_prev = np.empty(g, dtype=bool)
+        prev = np.empty(g, dtype=np.int64)
+        dev_us = np.empty(g)
+        arrival = np.empty(g)
+        pending = np.empty(g, dtype=np.int64)
+        for i, (b, _, _) in enumerate(members):
+            lt = b.last_ts10
+            has_prev[i] = lt is not None
+            prev[i] = 0 if lt is None else lt
+            dev_us[i] = b.dev_time_us
+            arrival[i] = np.nan if b.arrival_s is None else b.arrival_s
+            pending[i] = b.pending
+
+        # ---- timestamps: one segmented exact-integer cumsum -------------
+        ts_vals = g_vals[:, 0]
+        deltas = np.empty(n_rows, dtype=np.int64)
+        if n_rows > 1:
+            deltas[1:] = (ts_vals[1:] - ts_vals[:-1]) % 1024
+        deltas[0] = 0
+        first_ts = ts_vals[rs]
+        deltas[rs] = np.where(has_prev, (first_ts - prev) % 1024, 0)
+        cum = np.cumsum(deltas)
+        base = np.where(has_prev, dev_us, first_ts.astype(np.float64))
+        if uniform:
+            rel = cum.reshape(g, rows0) - (cum[rs] - deltas[rs])[:, None]
+            times = (base[:, None] + rel).reshape(-1)
+        else:
+            rel = cum - np.repeat(cum[rs] - deltas[rs], rows_per)
+            times = np.repeat(base, rows_per) + rel
+
+        # ---- arrival-clock re-anchor (same rule as `_process`) ----------
+        with np.errstate(invalid="ignore"):
+            wraps = np.floor((arrival * 1e6 - times[last_rows]) / 1024.0 + 0.5)
+        apply = (pending == 0) & np.isfinite(wraps) & (wraps > 0)
+        if apply.any():
+            shift = np.where(apply, wraps * 1024.0, 0.0)
+            if uniform:
+                times = (times.reshape(g, rows0) + shift[:, None]).reshape(-1)
+            else:
+                times = times + np.repeat(shift, rows_per)
+        times_s = times / 1e6
+
+        # ---- conversion: stacked affine tables, one fused multiply-add --
+        meta0 = members[0][0].meta
+        codes = g_vals[:, 1:]
+        skey = tuple((b.name, b.conv_gen) for b, _, _ in members)
+        stacks = self._stacks.get(skey)
+        if stacks is None:
+            if len(self._stacks) > 256:  # churning fleets: bound the cache
+                self._stacks.clear()
+            stacks = (
+                np.stack([b.meta.a_row for b, _, _ in members]),
+                np.stack([b.meta.b_row for b, _, _ in members]),
+                np.stack([b.has_v for b, _, _ in members]),
+                np.stack([b.has_i for b, _, _ in members]),
+            )
+            self._stacks[skey] = stacks
+        a_stack, b_stack, hasv_stack, hasi_stack = stacks
+        # held instantaneous values, same `np.where` as the solo path but
+        # computed once for the whole group (elementwise: bit-identical)
+        held_v = np.where(hasv_stack, np.stack([b.inst_v for b, _, _ in members]), 0.0)
+        held_i = np.where(hasi_stack, np.stack([b.inst_i for b, _, _ in members]), 0.0)
+        n_pairs = held_v.shape[1]
+        e_stack = None
+        if uniform:
+            phys3 = (
+                codes.reshape(g, rows0, per - 1) * a_stack[:, None, :]
+                + b_stack[:, None, :]
+            )
+            volts3 = np.empty((g, rows0, n_pairs))
+            volts3[:] = held_v[:, None, :]
+            amps3 = np.empty((g, rows0, n_pairs))
+            amps3[:] = held_i[:, None, :]
+            if meta0.vcols.size:
+                volts3[:, :, meta0.vpairs] = phys3[:, :, meta0.vcols]
+            if meta0.icols.size:
+                amps3[:, :, meta0.ipairs] = phys3[:, :, meta0.icols]
+            watts3 = volts3 * amps3
+            # per-device energy sums, fused: reducing axis 1 of the
+            # (g, rows, pairs) view adds the same rows in the same
+            # sequential order as each device's own contiguous
+            # `sum(axis=0)` — bit-identical, one numpy call instead of g
+            e_stack = watts3.sum(axis=1)
+            volts = volts3.reshape(n_rows, n_pairs)
+            amps = amps3.reshape(n_rows, n_pairs)
+            watts = watts3.reshape(n_rows, n_pairs)
+        else:
+            phys = codes * np.repeat(a_stack, rows_per, axis=0) + np.repeat(
+                b_stack, rows_per, axis=0
+            )
+            volts = np.repeat(held_v, rows_per, axis=0)
+            amps = np.repeat(held_i, rows_per, axis=0)
+            if meta0.vcols.size:
+                volts[:, meta0.vpairs] = phys[:, meta0.vcols]
+            if meta0.icols.size:
+                amps[:, meta0.ipairs] = phys[:, meta0.icols]
+            watts = volts * amps
+        wtot = watts.sum(axis=1)
+
+        # ---- markers: extracted only when the batch carries any ---------
+        mk_by_dev: dict[int, np.ndarray] = {}
+        if meta0.mk_col >= 0:
+            col = g_marks[:, meta0.mk_col]
+            if col.any():
+                mk_rows = np.flatnonzero(col)
+                dev_of = np.searchsorted(rs, mk_rows, side="right") - 1
+                for d in np.unique(dev_of):
+                    mk_by_dev[int(d)] = mk_rows[dev_of == d] - rs[d]
+        empty_mk = np.empty(0, dtype=np.int64)
+
+        # ---- phase C: per-device publish under each receiver lock -------
+        new_ts10 = ts_vals[last_rows]
+        new_time_us = times[last_rows]
+        for i, (b, _, _) in enumerate(members):
+            r0 = int(rs[i])
+            r1 = r0 + int(rows_per[i])
+            ps = b.ps
+            with ps._lock:
+                ps._pool_batch = False
+                b.committed = True
+                ps._last_ts10 = int(new_ts10[i])
+                ps._device_time_us = float(new_time_us[i])
+                result.frames += ps._commit_batch(
+                    times_s[r0:r1],
+                    volts[r0:r1],
+                    amps[r0:r1],
+                    watts[r0:r1],
+                    mk_by_dev.get(i, empty_mk),
+                    wtot=wtot[r0:r1],
+                    e_seg=None if e_stack is None else e_stack[i],
+                )
+        self.fused_frames += n_rows

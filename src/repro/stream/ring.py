@@ -18,6 +18,7 @@ result while the receiver keeps appending.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 
 import numpy as np
@@ -58,6 +59,17 @@ class FrameRing:
         # power queries (the governor's 1 kHz poll) never copy frame blocks
         self.wtot = np.zeros(self.capacity)
         self.head = 0  # total frames ever appended (monotonic)
+        # seqlock publication counter: odd while an append is mutating the
+        # ring, bumped even once the new head is visible.  Lock-free readers
+        # (`tail_mean_watts`) snapshot it before and after a read and retry
+        # on any change, so they never observe a half-written block — there
+        # is exactly one writer (the receiver, under its own lock), and the
+        # GIL makes each individual counter/slice store atomic
+        self.version = 0
+        # optional fleet stats slot: (last_times, heads, idx) shared arrays
+        # updated after every append so FleetMonitor health scans read
+        # preallocated vectors instead of N ring attributes (see bind_stats)
+        self._stats: tuple[np.ndarray, np.ndarray, int] | None = None
 
     def __len__(self) -> int:
         return min(self.head, self.capacity)
@@ -68,6 +80,19 @@ class FrameRing:
             return 0.0
         return float(self.times_s[(self.head - 1) % self.capacity])
 
+    def bind_stats(
+        self, last_times: np.ndarray, heads: np.ndarray, idx: int
+    ) -> None:
+        """Mirror (last_time_s, head) into shared fleet arrays on append.
+
+        `FleetMonitor` preallocates one slot per device; the ring writes
+        two scalars per append and the fleet health scan becomes pure
+        vector arithmetic instead of N attribute reads under N locks.
+        """
+        self._stats = (last_times, heads, int(idx))
+        last_times[idx] = self.last_time_s
+        heads[idx] = self.head
+
     # ------------------------------------------------------------------ write
     def append(
         self,
@@ -75,8 +100,14 @@ class FrameRing:
         volts: np.ndarray,
         amps: np.ndarray,
         watts: np.ndarray,
+        wtot: np.ndarray | None = None,
     ) -> None:
-        """Append a block of n frames (two slice writes, O(n) C-side)."""
+        """Append a block of n frames (two slice writes, O(n) C-side).
+
+        ``wtot`` optionally carries precomputed per-frame summed-pair watts
+        (the pooled decoder reduces the whole fleet batch in one pass);
+        when omitted it is computed here, with identical float semantics.
+        """
         n = len(times_s)
         if n == 0:
             return
@@ -87,30 +118,40 @@ class FrameRing:
             times_s, volts, amps, watts = (
                 times_s[drop:], volts[drop:], amps[drop:], watts[drop:],
             )
+            wtot = None if wtot is None else wtot[drop:]
             n = cap
-        wtot = watts.sum(axis=1)
+        if wtot is None:
+            wtot = watts.sum(axis=1)
         start = self.head % cap
         end = start + n
-        if end <= cap:
-            sl = slice(start, end)
-            self.times_s[sl] = times_s
-            self.volts[sl] = volts
-            self.amps[sl] = amps
-            self.watts[sl] = watts
-            self.wtot[sl] = wtot
-        else:
-            k = cap - start
-            self.times_s[start:] = times_s[:k]
-            self.volts[start:] = volts[:k]
-            self.amps[start:] = amps[:k]
-            self.watts[start:] = watts[:k]
-            self.wtot[start:] = wtot[:k]
-            self.times_s[: end - cap] = times_s[k:]
-            self.volts[: end - cap] = volts[k:]
-            self.amps[: end - cap] = amps[k:]
-            self.watts[: end - cap] = watts[k:]
-            self.wtot[: end - cap] = wtot[k:]
-        self.head += n
+        self.version += 1  # odd: publish in progress
+        try:
+            if end <= cap:
+                sl = slice(start, end)
+                self.times_s[sl] = times_s
+                self.volts[sl] = volts
+                self.amps[sl] = amps
+                self.watts[sl] = watts
+                self.wtot[sl] = wtot
+            else:
+                k = cap - start
+                self.times_s[start:] = times_s[:k]
+                self.volts[start:] = volts[:k]
+                self.amps[start:] = amps[:k]
+                self.watts[start:] = watts[:k]
+                self.wtot[start:] = wtot[:k]
+                self.times_s[: end - cap] = times_s[k:]
+                self.volts[: end - cap] = volts[k:]
+                self.amps[: end - cap] = amps[k:]
+                self.watts[: end - cap] = watts[k:]
+                self.wtot[: end - cap] = wtot[k:]
+            self.head += n
+        finally:
+            self.version += 1  # even: new head visible
+        if self._stats is not None:
+            last_times, heads, idx = self._stats
+            last_times[idx] = float(times_s[-1])
+            heads[idx] = self.head
 
     # ------------------------------------------------------------------ read
     def _block(self, lo: int, hi: int) -> FrameBlock:
@@ -170,10 +211,34 @@ class FrameRing:
         """Mean summed-pair power over the trailing ``window_s`` seconds.
 
         The incremental hook the closed-loop governor polls every control
-        tick: two slice reductions over the maintained per-frame totals —
-        no FrameBlock copy, no per-frame Python work.  An empty ring reads
-        0; a window narrower than one frame reads the newest frame.
+        tick: slice reductions over the maintained per-frame totals — no
+        FrameBlock copy, no per-frame Python work.  An empty ring reads 0;
+        a window narrower than one frame reads the newest frame.
+
+        **Lock-free**: readers do not take the receiver lock.  The ring's
+        seqlock ``version`` is snapshotted before and after the reduction;
+        a concurrent append changes it (or leaves it odd), and the read is
+        retried.  A returned value is therefore always computed from a
+        consistent ring state — never a torn frame.
+
+        **Time-weighted under dropout**: a gap-free window (every
+        inter-frame dt within 2x the window median) reduces as the plain
+        frame-count mean — bit-identical to the historical semantics the
+        golden corpus pins.  When a delivery gap sits inside the window,
+        frames are weighted by the time they cover (zero-order hold: the
+        frame before the gap vouches for it, the newest frame covers one
+        nominal interval), so the mean no longer skews toward whichever
+        side of the gap delivered more frames.
         """
+        while True:
+            v0 = self.version
+            if not (v0 & 1):
+                out = self._tail_mean_unlocked(window_s)
+                if self.version == v0:
+                    return out
+            time.sleep(0)  # writer mid-publish: yield and retry
+
+    def _tail_mean_unlocked(self, window_s: float) -> float:
         n = len(self)
         if n == 0:
             return 0.0
@@ -184,10 +249,26 @@ class FrameRing:
             return float(self.wtot[(self.head - 1) % cap])
         i0, i1 = lo % cap, self.head % cap
         if i0 < i1:
-            total = float(self.wtot[i0:i1].sum())
+            w = self.wtot[i0:i1]
+            total = float(w.sum())
+            dts = np.diff(self.times_s[i0:i1])
         else:
             total = float(self.wtot[i0:].sum() + self.wtot[:i1].sum())
-        return total / m
+            w = None  # materialised only on the (rare) gap path
+            t = np.concatenate([self.times_s[i0:], self.times_s[:i1]])
+            dts = np.diff(t)
+        if m == 1 or dts.size == 0:
+            return total / m
+        med = float(np.median(dts))
+        if med <= 0.0 or float(dts.max()) <= 2.0 * med:
+            return total / m  # gap-free: exact historical count mean
+        if w is None:
+            w = np.concatenate([self.wtot[i0:], self.wtot[:i1]])
+        num = float((w[:-1] * dts).sum()) + float(w[-1]) * med
+        den = float(dts.sum()) + med
+        if den <= 0.0:  # only reachable from a torn read; retried anyway
+            return total / m
+        return num / den
 
     def tail_window(self, window_s: float) -> FrameBlock:
         """The trailing ``window_s`` seconds of frames."""

@@ -377,6 +377,104 @@ def test_ring_tail_mean_watts_across_wraparound():
         assert r.tail_mean_watts(win) == pytest.approx(want)
 
 
+def test_ring_tail_mean_time_weighted_under_delivery_gap():
+    """Regression: a dropout inside the window used to skew the mean
+    toward whichever side of the gap delivered more frames (plain count
+    mean).  With zero-order hold the frame before the gap vouches for the
+    gap's duration."""
+    ring = FrameRing(64, 1)
+
+    def blk(ts, w):
+        ts = np.asarray(ts, float)
+        w = np.asarray(w, float).reshape(-1, 1)
+        ones = np.ones_like(w)
+        ring.append(ts, w, ones, w * ones)
+
+    t1 = np.arange(10) * 1e-3  # 10 frames @ 1 kHz, 10 W
+    t2 = t1[-1] + 0.080 + np.arange(10) * 1e-3  # 80 ms hole, then 50 W
+    blk(t1, np.full(10, 10.0))
+    blk(t2, np.full(10, 50.0))
+
+    times = np.concatenate([t1, t2])
+    w = np.concatenate([np.full(10, 10.0), np.full(10, 50.0)])
+    dts = np.diff(times)
+    med = float(np.median(dts))
+    want = (float((w[:-1] * dts).sum()) + w[-1] * med) / (
+        float(dts.sum()) + med
+    )
+    got = ring.tail_mean_watts(1.0)
+    assert got == pytest.approx(want)
+    # the pre-fix count mean (30 W) is nowhere near the covered-time mean
+    assert abs(got - w.mean()) > 5.0
+    # a gap-free trailing window still reduces as the exact count mean
+    assert ring.tail_mean_watts(5e-3) == pytest.approx(50.0)
+
+
+class _RingSensor:
+    """Duck-typed sensor: just a ring and a marker list (no transport)."""
+
+    def __init__(self, ring, markers):
+        self.ring = ring
+        self.markers = markers
+        self.device = None
+        self.dropped_frames = 0
+
+
+def test_marker_window_rejects_leading_gap_with_inflated_first_dt():
+    """Regression: the eviction check estimated the frame interval from
+    the first two frames only — a delivery gap at the window's leading
+    edge inflated that estimate and silently accepted a window missing
+    its leading coverage.  The median inter-frame dt is robust to it."""
+    ring = FrameRing(256, 1)
+    times = np.concatenate([[1.4, 1.6], 1.65 + np.arange(8) * 0.05])
+    n = times.size
+    ones = np.ones((n, 1))
+    ring.append(times, 12.0 * ones, 2.0 * ones, 24.0 * ones)
+
+    mon = FleetMonitor()
+    mon.add("gap", _RingSensor(ring, [("A", 1.0), ("B", 2.05)]))
+    # t0=1.0: first retained frame starts 0.4 s late.  first-dt estimate
+    # = 0.2 → 0.4 > 2*0.2 is False → pre-fix accepted; median dt = 0.05
+    # → 0.4 > 0.1 → rejected
+    assert mon.marker_window("gap", "A", "B") is None
+    # a window whose head actually is retained still passes
+    mon.add("ok", _RingSensor(ring, [("A", 1.35), ("B", 2.05)]))
+    hit = mon.marker_window("ok", "A", "B")
+    assert hit is not None
+    t0, t1, block = hit
+    assert (t0, t1) == (1.35, 2.05)
+    assert len(block) == n
+
+
+def test_late_attached_device_gets_grace_not_lost():
+    """Regression: a device added to a long-running fleet read
+    ``staleness = now`` off its empty ring and was born `lost`."""
+    mon = FleetMonitor(stale_after_s=0.05, lost_after_s=0.2)
+    dev0 = make_device(["pcie8pin-20a"], ConstantLoad(12.0, 2.0))
+    ps0 = PowerSensor(dev0)
+    mon.add("dev0", ps0)
+    dev0.advance(0.5)
+    ps0.poll()  # fleet 'now' is ~0.5 s
+
+    dev1 = make_device(["pcie8pin-20a"], ConstantLoad(12.0, 1.0))
+    ps1 = PowerSensor(dev1)
+    mon.add("dev1", ps1)  # ring still empty: pre-fix staleness = 0.5 → lost
+    h = mon.device_health()
+    assert h["dev1"].state == "healthy"
+    assert h["dev1"].staleness_s < mon.stale_after_s
+
+    # the grace is a window, not immunity: still silent after
+    # lost_after_s from the attach time → genuinely lost
+    dev0.advance(0.5)
+    ps0.poll()
+    assert mon.device_health()["dev1"].state == "lost"
+
+    # and delivering frames ends the grace bookkeeping entirely
+    dev1.advance(1.01)
+    ps1.poll()
+    assert mon.device_health()["dev1"].state == "healthy"
+
+
 def test_fleet_window_power_sums_devices():
     fleet = make_virtual_fleet(
         [ConstantLoad(12.0, 1.0), ConstantLoad(12.0, 2.0)], seed=5
@@ -520,8 +618,18 @@ def test_interval_concurrent_with_polling_is_consistent():
         for r in readers:
             r.join(timeout=10.0)
         assert snaps
-        # closed spans re-read identically while the receiver keeps appending
-        assert all(s == snaps[0] for s in snaps[1:])
+        # closed spans re-read identically while the receiver keeps
+        # appending.  A device may legitimately drop *out* of the result
+        # mid-run (its ring evicting past the opening marker flips
+        # `marker_window` to None under the retention rules) — but every
+        # read that does include a device must report the same pinned span
+        per_dev: dict = {}
+        for s in snaps:
+            for k, v in s.items():
+                per_dev.setdefault(k, set()).add(v)
+        assert per_dev
+        for k, vals in per_dev.items():
+            assert len(vals) == 1, (k, vals)
     finally:
         fleet.close()
 
