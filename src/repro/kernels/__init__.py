@@ -7,10 +7,21 @@ oracle).  Tests sweep shapes/dtypes and assert_allclose vs the oracle.
 The beamformer is the paper's own case-study kernel (§V-A2) re-thought
 for the MXU; the others are the model zoo's hot spots (flash attention,
 flash-decode, Mamba-2 SSD scan, RWKV-6 WKV, fused RMSNorm).
+`paged_attention/` adds the serving-grade pair: a paged KV-cache pool
+and a page-table-indirect ragged decode kernel, both checked against
+the same ragged oracle as the dense flash-decode (`ragged_decode_ref`,
+with `kv_len == 0` rows exact-zero).
 """
 from .beamformer import beamform, beamform_ref, tuner_kernel_model
 from .decode_attention import decode_attention, decode_attention_ref
 from .flash_attention import attention_ref, flash_attention, flash_attention_custom
+from .paged_attention import (
+    PagedKVPool,
+    paged_decode_attention,
+    paged_decode_attention_ref,
+    paged_tuner_model,
+    ragged_decode_ref,
+)
 from .rmsnorm import rmsnorm, rmsnorm_ref
 from .rwkv6 import wkv6, wkv6_ref
 from .ssm_scan import ssd_scan, ssd_scan_ref
@@ -21,6 +32,11 @@ __all__ = [
     "tuner_kernel_model",
     "decode_attention",
     "decode_attention_ref",
+    "PagedKVPool",
+    "paged_decode_attention",
+    "paged_decode_attention_ref",
+    "paged_tuner_model",
+    "ragged_decode_ref",
     "attention_ref",
     "flash_attention",
     "flash_attention_custom",

@@ -50,7 +50,14 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc, m_ref, l_ref, *, scale, bk
 
     @pl.when(ki == n_k - 1)
     def _flush():
-        o_ref[0, :, 0, :] = (acc[...] / l_ref[...][:, None]).astype(o_ref.dtype)
+        # rows with kv_len == 0 never ran `_step`: l is 0 and dividing by it
+        # would emit NaN.  A zero-length cache has a well-defined answer —
+        # nothing to attend to — so those rows flush exact zeros (the
+        # serve loop's free/padded slots rely on this contract).
+        l = l_ref[...]
+        out = acc[...] / jnp.where(l > 0.0, l, 1.0)[:, None]
+        out = jnp.where((l > 0.0)[:, None], out, 0.0)
+        o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
 
 
 @partial(jax.jit, static_argnames=("bk", "interpret"))

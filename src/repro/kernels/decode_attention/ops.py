@@ -1,6 +1,8 @@
 """Public decode-attention op."""
 from __future__ import annotations
 
+import jax.numpy as jnp
+
 from repro.kernels.common import interpret_default
 
 from .decode_attention import decode_attention_pallas
@@ -10,6 +12,17 @@ from .ref import decode_attention_ref
 def decode_attention(q, k_cache, v_cache, kv_len, bk: int = 256, use_pallas: bool = True):
     if not use_pallas:
         return decode_attention_ref(q, k_cache, v_cache, kv_len)
+    # tiny caches: a block must never exceed the cache (bk > S used to trip
+    # the kernel's divisibility assert), and a non-multiple tail (S % bk)
+    # is padded up to a whole block — padded positions sit at >= S >= kv_len
+    # so the in-kernel length mask already excludes them.
+    s = k_cache.shape[1]
+    bk = max(1, min(int(bk), s))
+    pad = -s % bk
+    if pad:
+        widths = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        k_cache = jnp.pad(k_cache, widths)
+        v_cache = jnp.pad(v_cache, widths)
     return decode_attention_pallas(
         q, k_cache, v_cache, kv_len, bk=bk, interpret=interpret_default()
     )

@@ -1,0 +1,31 @@
+"""Paged KV-cache pool + ragged paged decode-attention kernel."""
+from .ops import (
+    SEARCH_SPACE,
+    apply_page_permutation,
+    init_page_arrays,
+    pack_prefill_pages,
+    paged_decode_attention,
+    paged_tuner_model,
+    paged_variant_time_cost,
+)
+from .paged_attention import paged_decode_attention_pallas
+from .pool import NULL_PAGE, PagedKVPool, PoolStats, pages_for
+from .ref import gather_pages, paged_decode_attention_ref, ragged_decode_ref
+
+__all__ = [
+    "NULL_PAGE",
+    "PagedKVPool",
+    "PoolStats",
+    "SEARCH_SPACE",
+    "apply_page_permutation",
+    "gather_pages",
+    "init_page_arrays",
+    "pack_prefill_pages",
+    "paged_decode_attention",
+    "paged_decode_attention_pallas",
+    "paged_decode_attention_ref",
+    "paged_tuner_model",
+    "paged_variant_time_cost",
+    "pages_for",
+    "ragged_decode_ref",
+]

@@ -21,6 +21,25 @@ are prefilled at the compiled batch shape and their cache rows scattered
 into the live decode cache (chunked prefill admission; batch-global
 leaves such as the decode position clock are kept live).
 
+Cache backends (``--kv``):
+
+* ``dense`` (default) — one ``(L, B, S_max, Hkv, Dh)`` slab sized for the
+  whole run; admission scatters freshly prefilled rows into the admitted
+  slots (`_scatter_slots`), and a batch-global position clock marches
+  every slot forward together, so a slot's row holds dead history until
+  it is overwritten.
+* ``paged`` — the slab becomes a `repro.kernels.paged_attention` page
+  pool (``--page-size`` tokens per page).  Admission **allocates pages**
+  (one all-or-nothing `PagedKVPool` reservation covering prompt +
+  generation) and packs the prefilled rows into them; each decode step
+  attends through per-slot page tables at per-slot *ragged* lengths via
+  the paged flash-decode kernel — free/draining slots decode as
+  ``kv_len == 0`` padding whose attention output is exact zeros (never
+  NaN) — and retire **frees the pages** back to the pool for the next
+  admission to reuse.  Needs attention layers (dense/moe families only);
+  prefill runs at ``prompt_len``, not the run-global ``S_max``, so cache
+  memory scales with *live* tokens instead of worst-case sequence length.
+
 Step-interval attribution: with ``--fleet N`` (default 2, ``--fleet 0``
 disables), every batch of ``--steps-per-sync`` decode steps — one *step
 interval* — is bracketed by one occurrence of a single time-synced
@@ -152,6 +171,11 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kv", default="dense", choices=("dense", "paged"),
+                    help="decode cache backend: one dense slab per layer, or "
+                         "a paged pool with per-slot page tables")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged backend only)")
     ap.add_argument("--fleet", type=int, default=2,
                     help="virtual PowerSensor3 devices for measured J/token (0 = off)")
     ap.add_argument("--policy", default="throughput-max", choices=sorted(POLICIES))
@@ -185,15 +209,24 @@ def main(argv=None):
         obs.enable()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.kv == "paged" and (cfg.is_encdec or cfg.family not in ("dense", "moe")):
+        ap.error(f"--kv paged needs dense/moe attention layers; "
+                 f"{args.arch} is family {cfg.family!r}")
     run = RunConfig(attn_impl="full", remat="none", lr_chunk=16)
     model = build_model(cfg, run)
     params = model.init(jax.random.PRNGKey(args.seed))
     rng = np.random.default_rng(args.seed)
 
     b = args.decode_batch
-    # the position clock is batch-global: one cache serves every request
-    # that ever occupies a slot, so its length must cover the whole run
-    max_len = args.prompt_len + min(args.requests * args.gen_len, 4096)
+    paged = args.kv == "paged"
+    # dense: the position clock is batch-global — one cache serves every
+    # request that ever occupies a slot, so its length must cover the whole
+    # run.  paged: prefill only needs the prompt rows (decode growth lives
+    # in pool pages at per-slot ragged lengths).
+    if paged:
+        max_len = args.prompt_len
+    else:
+        max_len = args.prompt_len + min(args.requests * args.gen_len, 4096)
 
     def _prefill_tokens(p, t):
         return model.prefill(p, t, max_len=max_len)
@@ -206,6 +239,28 @@ def main(argv=None):
     prefill = jax.jit(_prefill_tokens)
     prefill_encdec = jax.jit(_prefill_encdec)
     decode = jax.jit(model.decode_step)
+
+    pool = None
+    pcache = None
+    if paged:
+        from repro.kernels.paged_attention import (
+            PagedKVPool, pack_prefill_pages, pages_for,
+        )
+
+        ps = args.page_size
+        # one reservation per slot covers prompt + full generation, plus a
+        # page of slack; +1 for the reserved null page
+        table_width = pages_for(args.prompt_len + args.gen_len, ps) + 1
+        pool = PagedKVPool(n_pages=1 + b * table_width, page_size=ps)
+        pcache = model.init_paged_cache(pool.n_pages, ps)
+        decode_paged = jax.jit(model.decode_step_paged)
+
+    def _sweep_pool():
+        """Free the pages of every request that left the live batch."""
+        if pool is None:
+            return
+        for rid in pool.rids - set(sched.live_rids):
+            pool.free(rid)
 
     def _make_inputs(prompts: np.ndarray):
         tokens = jnp.asarray(prompts)
@@ -390,7 +445,27 @@ def main(argv=None):
             )
             new_logits, new_cache = _prefill(_make_inputs(prompts))
             slots = [slot for slot, _ in admitted]
-            if cache is None:
+            if paged:
+                # paged admission: allocate each request's reservation and
+                # pack its prefilled rows into the granted pages — no dense
+                # scatter, and draining occupants were swept back already
+                _sweep_pool()
+                kp, vp = pcache["layers"]["k"], pcache["layers"]["v"]
+                for slot, req in admitted:
+                    pages = pool.alloc(req.rid, req.prompt_len + req.gen_len)
+                    assert pages is not None, "pool holds one reservation per slot"
+                    pool.note_tokens(req.rid, req.prompt_len)
+                    kp, vp = pack_prefill_pages(
+                        kp, vp,
+                        new_cache["layers"]["k"][:, slot],
+                        new_cache["layers"]["v"][:, slot],
+                        jnp.asarray(pages, jnp.int32),
+                    )
+                pcache = {"layers": {"k": kp, "v": vp}}
+                idx = jnp.asarray(slots, dtype=jnp.int32)
+                logits = (new_logits if logits is None
+                          else logits.at[idx].set(new_logits[idx]))
+            elif cache is None:
                 logits, cache = new_logits, new_cache
             else:
                 if cache_axes is None:
@@ -412,8 +487,24 @@ def main(argv=None):
             if not sched.live_rids:
                 break
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32) % cfg.vocab_size
-            logits, cache = decode(params, cache, tok)
+            if paged:
+                # per-slot ragged state from the pool: draining/free slots
+                # decode as kv_len == 0 padding (exact-zero attention)
+                live_set = set(sched.live_rids)
+                slot_r = [r if r in live_set else None for r in sched.slot_rids]
+                table = jnp.asarray(pool.table(slot_r, table_width))
+                lens = jnp.asarray(pool.kv_lens(slot_r))
+                live_m = jnp.asarray([r is not None for r in slot_r])
+                logits, pcache = decode_paged(
+                    params, pcache, tok, table, lens, live_m
+                )
+                for r in slot_r:
+                    if r is not None:
+                        assert pool.append(r), "reservation covers the generation"
+            else:
+                logits, cache = decode(params, cache, tok)
             rec = sched.step_billing(1)
+            _sweep_pool()
             telemetry.record_step(step_count, 0.0, b)
             step_count += 1
             billed_tokens += rec.billed_tokens
@@ -466,6 +557,14 @@ def main(argv=None):
     if s:
         print(f"modelled: {s['j_per_token']*1e3:.3f} mJ/token, "
               f"{s['modelled_step_s']*1e3:.3f} ms/decode-step on {telemetry.chip.name}")
+    if pool is not None:
+        _sweep_pool()
+        st = pool.stats()
+        print(f"paged KV: page size {st.page_size}, "
+              f"{st.high_water}/{st.n_pages - 1} pages high water, "
+              f"{st.allocs} allocs / {st.frees} frees "
+              f"({st.reused_pages} reused, {st.alloc_failures} refused), "
+              f"{st.in_use} in use at exit")
     if fleet is not None:
         snap = fleet.snapshot()
         print(f"fleet: {snap.aggregate.n_devices} devices, "

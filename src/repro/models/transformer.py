@@ -96,6 +96,34 @@ def attn_block(x, p, cfg: ArchConfig, run: RunConfig, positions, causal=True, ro
     return jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype)), (k, v)
 
 
+def attn_block_decode_paged(
+    x, p, cfg: ArchConfig, run: RunConfig, k_pages, v_pages, page_table, kv_len, live
+):
+    """Single-token attention against a paged KV pool.
+
+    x: (B, d); pages: (P, ps, Hkv, Dh); page_table: (B, max_pages) int32;
+    kv_len: (B,) tokens already cached per row; live: (B,) bool.  Each live
+    row writes its new K/V at position ``kv_len[b]`` inside the page the
+    table maps it to; dead rows (free slots) write to the reserved null
+    page and attend over an empty cache — their output is exact zeros.
+    Returns (out (B, d), new_k_pages, new_v_pages).
+    """
+    from repro.kernels.paged_attention import NULL_PAGE, paged_decode_attention
+
+    b, _ = x.shape
+    ps = k_pages.shape[1]
+    q, k, v = _qkv(x[:, None], p, cfg, kv_len[:, None], rope=True)
+    cdt = k_pages.dtype
+    page = jnp.where(live, page_table[jnp.arange(b), kv_len // ps], NULL_PAGE)
+    off = kv_len % ps
+    k_pages = k_pages.at[page, off].set(k[:, 0].astype(cdt))
+    v_pages = v_pages.at[page, off].set(v[:, 0].astype(cdt))
+    new_len = jnp.where(live, kv_len + 1, 0)
+    o = paged_decode_attention(q[:, 0], k_pages, v_pages, page_table, new_len)
+    o = o.reshape(b, -1).astype(x.dtype)
+    return jnp.einsum("be,ed->bd", o, p["wo"].astype(x.dtype)), k_pages, v_pages
+
+
 def attn_block_decode(x, p, cfg: ArchConfig, run: RunConfig, k_cache, v_cache, pos):
     """Single-token attention against a cache.
 
@@ -198,6 +226,23 @@ def apply_layer(x, p, cfg: ArchConfig, run: RunConfig, positions):
     raise ValueError(cfg.family)
 
 
+def _decode_tail(x, a, p, cfg: ArchConfig, run: RunConfig):
+    """Dense/moe decode-layer tail: attn residual + norm + mlp/moe residual."""
+    x = x + a
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        # decode must never drop: capacity covers every (token, slot)
+        m, _ = moe_layer(
+            h[:, None], p["moe"], cfg.n_experts, cfg.experts_per_token,
+            capacity_factor=float(cfg.n_experts), impl=run.moe_impl,
+            group_size=min(x.shape[0], run.moe_group or x.shape[0]),
+        )
+        m = m[:, 0]
+    else:
+        m = mlp_swiglu(h[:, None], p["mlp"]["wi"], p["mlp"]["wg"], p["mlp"]["wo2"])[:, 0]
+    return x + m
+
+
 def apply_layer_decode(x, p, cache, cfg: ArchConfig, run: RunConfig, pos):
     """Single-token layer body. Returns (x, new_cache)."""
     if cfg.family in ("dense", "moe"):
@@ -205,19 +250,7 @@ def apply_layer_decode(x, p, cache, cfg: ArchConfig, run: RunConfig, pos):
             rmsnorm(x, p["ln1"], cfg.norm_eps), p["attn"], cfg, run,
             cache["k"], cache["v"], pos,
         )
-        x = x + a
-        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
-        if cfg.family == "moe":
-            # decode must never drop: capacity covers every (token, slot)
-            m, _ = moe_layer(
-                h[:, None], p["moe"], cfg.n_experts, cfg.experts_per_token,
-                capacity_factor=float(cfg.n_experts), impl=run.moe_impl,
-                group_size=min(x.shape[0], run.moe_group or x.shape[0]),
-            )
-            m = m[:, 0]
-        else:
-            m = mlp_swiglu(h[:, None], p["mlp"]["wi"], p["mlp"]["wg"], p["mlp"]["wo2"])[:, 0]
-        return x + m, {"k": k, "v": v}
+        return _decode_tail(x, a, p, cfg, run), {"k": k, "v": v}
     if cfg.family == "ssm":
         return rwkv_mod.rwkv_layer_decode(x, p, cache, eps=cfg.norm_eps)
     if cfg.family == "hybrid":
@@ -226,6 +259,17 @@ def apply_layer_decode(x, p, cache, cfg: ArchConfig, run: RunConfig, pos):
         )
         return x + y, new_cache
     raise ValueError(cfg.family)
+
+
+def apply_layer_decode_paged(
+    x, p, cache, cfg: ArchConfig, run: RunConfig, page_table, kv_len, live
+):
+    """Paged single-token layer body (dense/moe only). Returns (x, new_cache)."""
+    a, k_pages, v_pages = attn_block_decode_paged(
+        rmsnorm(x, p["ln1"], cfg.norm_eps), p["attn"], cfg, run,
+        cache["k"], cache["v"], page_table, kv_len, live,
+    )
+    return _decode_tail(x, a, p, cfg, run), {"k": k_pages, "v": v_pages}
 
 
 # ---------------------------------------------------------------------------
@@ -441,6 +485,21 @@ class DecoderLM:
             return out
         raise ValueError(cfg.family)
 
+    def init_paged_cache(self, n_pages: int, page_size: int):
+        """Allocate the paged decode cache: per-layer K/V page pools.
+
+        Returns ``{"layers": {"k": (L, P, ps, Hkv, Dh), "v": ...}}`` — no
+        ``pos`` clock: position is per-row ragged ``kv_len``, owned by the
+        host-side `repro.kernels.paged_attention.PagedKVPool`.  Dense/moe
+        families only (ssm/hybrid keep recurrent state, nothing to page).
+        """
+        cfg, run = self.cfg, self.run
+        if cfg.family not in ("dense", "moe"):
+            raise ValueError(f"paged KV cache needs attention layers, not {cfg.family!r}")
+        cdt = jnp.dtype(run.decode_cache_dtype)
+        pool = jnp.zeros((cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim_), cdt)
+        return {"layers": {"k": pool, "v": pool.copy()}}
+
     def prefill(self, params, tokens, max_len: int | None = None):
         """tokens: (B, S). Returns (last-token logits (B, V), cache)."""
         cfg, run = self.cfg, self.run
@@ -541,3 +600,38 @@ class DecoderLM:
                 new_cache["tail"] = tail_caches
         x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
         return self._logits(params, x).astype(jnp.float32), new_cache
+
+    def decode_step_paged(self, params, cache, token, page_table, kv_len, live):
+        """Paged decode step (dense/moe): token (B,), page_table (B, max_pages),
+        kv_len (B,) tokens already cached per row, live (B,) bool.
+
+        Every layer writes its new K/V at the same per-row position
+        ``kv_len[b]`` — the caller (the serve loop's `PagedKVPool`) advances
+        lengths once per step, after the step.  Dead rows (``live`` False)
+        park their writes on the null page; their logits are garbage and the
+        scheduler never bills them.  Returns (logits (B, V), new cache).
+        """
+        cfg, run = self.cfg, self.run
+        x = self._embed(params, token, _dt(run))
+
+        def body(h, xs):
+            p_l, c_l = xs
+            h, c_new = apply_layer_decode_paged(
+                h, p_l, c_l, cfg, run, page_table, kv_len, live
+            )
+            return h, c_new
+
+        if run.scan_layers:
+            x, caches = jax.lax.scan(
+                body, x, (params["layers"], cache["layers"]), length=cfg.n_layers
+            )
+        else:
+            news = []
+            for i in range(cfg.n_layers):
+                p_l = jax.tree.map(lambda a: a[i], params["layers"])
+                c_l = jax.tree.map(lambda a: a[i], cache["layers"])
+                x, c_new = body(x, (p_l, c_l))
+                news.append(c_new)
+            caches = jax.tree.map(lambda *xs: jnp.stack(xs), *news)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        return self._logits(params, x).astype(jnp.float32), {"layers": caches}

@@ -115,6 +115,45 @@ def test_decode_attention_matches_ref(shape, dtype):
     )
 
 
+def test_decode_attention_kv0_rows_are_exact_zero():
+    """Regression: a ``kv_len == 0`` row (a free/padded serve slot) used to
+    flush ``acc / l`` with ``l == 0`` — NaN all over the batch row.  The
+    contract is exact zeros: nothing to attend to."""
+    from repro.kernels.paged_attention import ragged_decode_ref
+
+    b, s, hq, hkv, d = 3, 256, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = _rand(ks[0], (b, hq, d), jnp.float32)
+    kc = _rand(ks[1], (b, s, hkv, d), jnp.float32)
+    vc = _rand(ks[2], (b, s, hkv, d), jnp.float32)
+    kv_len = jnp.array([0, 17, 0], jnp.int32)
+    out = np.asarray(decode_attention(q, kc, vc, kv_len, bk=128))
+    assert np.isfinite(out).all(), "kv_len == 0 row produced NaN/inf"
+    assert (out[0] == 0.0).all() and (out[2] == 0.0).all()
+    assert np.abs(out[1]).max() > 0.0  # live rows unaffected by the guard
+    np.testing.assert_allclose(
+        out, np.asarray(ragged_decode_ref(q, kc, vc, kv_len)), **TOL32
+    )
+
+
+@pytest.mark.parametrize("s,bk", [
+    (48, 256),   # bk > S: clamps to the cache length
+    (100, 64),   # S % bk != 0: ragged tail padded up to a whole block
+    (1, 256),    # single-position cache
+    (96, 32),    # exact multiple (control)
+])
+def test_decode_attention_block_edges(s, bk):
+    b, hq, hkv, d = 2, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = _rand(ks[0], (b, hq, d), jnp.float32)
+    kc = _rand(ks[1], (b, s, hkv, d), jnp.float32)
+    vc = _rand(ks[2], (b, s, hkv, d), jnp.float32)
+    kv_len = jnp.array([s, max(s // 2, 1)], jnp.int32)
+    out = decode_attention(q, kc, vc, kv_len, bk=bk)
+    ref = decode_attention_ref(q, kc, vc, kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL32)
+
+
 # --------------------------------------------------------------------------- ssd scan
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("shape", [(1, 128, 2, 16, 32), (2, 256, 4, 64, 64)])
